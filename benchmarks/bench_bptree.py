@@ -1,0 +1,91 @@
+"""Paper Fig. 7 + Table 1: B+-tree Scan / bulk Load throughput vs degree,
+and the io_uring vs user-threads backend comparison."""
+
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core import Foreactor, MemDevice
+from repro.store import plugins
+from repro.store.bptree import BPTree
+
+from .common import Row, sim, timeit
+
+
+def _data(n: int):
+    keys = np.arange(n, dtype=np.uint64) * 3
+    vals = keys * 7 + 1
+    return keys, vals
+
+
+def bench_scan_load(degrees=(64, 256, 510), n: int = 60000) -> List[Row]:
+    keys, vals = _data(n)
+    rows: List[Row] = []
+    for degree in degrees:
+        inner = MemDevice()
+        # --- Load ---
+        for use_fa, label in ((False, "sync"), (True, "foreactor")):
+            dev = sim(inner)
+            tree = BPTree(dev, f"/bpt_{degree}_{label}.db", degree=degree)
+            if use_fa:
+                fa = Foreactor(device=dev, backend="io_uring", depth=64)
+                plugins.register_all(fa)
+                load = fa.wrap("bptree_load", plugins.capture_bptree_load)(
+                    plugins.load_with_graph)
+                t = timeit(lambda: load(tree, keys, vals))
+                fa.shutdown()
+            else:
+                t = timeit(lambda: tree.bulk_load(keys, vals))
+            rows.append((f"bpt_load_deg{degree}_{label}", t * 1e6,
+                         f"m_recs_per_s={n / t / 1e6:.2f}"))
+        # --- Scan (10 range scans over the foreactor-loaded tree) ---
+        lo, hi = int(keys[n // 10]), int(keys[9 * n // 10])
+        for use_fa, label in ((False, "sync"), (True, "foreactor")):
+            dev = sim(inner)
+            tree = BPTree(dev, f"/bpt_{degree}_foreactor.db").open()
+            if use_fa:
+                fa = Foreactor(device=dev, backend="io_uring", depth=64)
+                plugins.register_all(fa)
+                scan = fa.wrap("bptree_scan", plugins.capture_bptree_scan)(
+                    plugins.scan_with_graph)
+                t = timeit(lambda: scan(tree, lo, hi))
+                fa.shutdown()
+            else:
+                t = timeit(lambda: tree.scan(lo, hi))
+            nrec = 8 * n // 10
+            rows.append((f"bpt_scan_deg{degree}_{label}", t * 1e6,
+                         f"m_recs_per_s={nrec / t / 1e6:.2f}"))
+    return rows
+
+
+def bench_backends(n: int = 60000, degree: int = 510) -> List[Row]:
+    """Table 1: same graphs, io_uring vs user-threads backend."""
+    keys, vals = _data(n)
+    inner = MemDevice()
+    BPTree(sim(inner), "/warm.db", degree=degree).bulk_load(keys, vals)
+    rows: List[Row] = []
+    lo, hi = int(keys[0]), int(keys[-1])
+    for backend in ("io_uring", "user_threads"):
+        dev = sim(inner)
+        fa = Foreactor(device=dev, backend=backend, depth=64)
+        plugins.register_all(fa)
+        tree = BPTree(dev, "/warm.db").open()
+        scan = fa.wrap("bptree_scan", plugins.capture_bptree_scan)(
+            plugins.scan_with_graph)
+        t = timeit(lambda: scan(tree, lo, hi))
+        rows.append((f"bpt_scan_backend_{backend}", t * 1e6,
+                     f"m_recs_per_s={n / t / 1e6:.2f}"))
+        tree2 = BPTree(dev, f"/load_{backend}.db", degree=degree)
+        load = fa.wrap("bptree_load", plugins.capture_bptree_load)(
+            plugins.load_with_graph)
+        t = timeit(lambda: load(tree2, keys, vals))
+        rows.append((f"bpt_load_backend_{backend}", t * 1e6,
+                     f"m_recs_per_s={n / t / 1e6:.2f}"))
+        fa.shutdown()
+    return rows
+
+
+def run() -> List[Row]:
+    return bench_scan_load() + bench_backends()

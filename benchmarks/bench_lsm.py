@@ -1,0 +1,214 @@
+"""Paper Fig. 8 + Fig. 9: LevelDB-style Get under explicit speculation.
+
+* Fig. 8(a): average Get latency vs page-cache memory ratio.
+* Fig. 8(b): vs record (value) size.
+* Fig. 8(c): p99 tail latency.
+* Fig. 9(a): multiple client threads.
+* Fig. 9(b): read/write operation mix.
+* Fig. 9(c): Zipf skew sweep.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import Foreactor, MemDevice
+from repro.store import plugins
+from repro.store.lsm import LSMTree
+
+from .common import Row, sim, timeit, zipf_keys
+
+
+def build_db(n_keys: int = 4000, record: int = 256, l0_tables: int = 10
+             ) -> Tuple[MemDevice, dict, int]:
+    """Unique keys written once in random order across many overlapping L0
+    tables -> Get search chains of ~l0_tables candidates (paper's 12~19)."""
+    rng = np.random.default_rng(0)
+    inner = MemDevice()
+    per_table = n_keys // l0_tables
+    limit = per_table * (record + 12)
+    lsm = LSMTree(inner, "/db", memtable_limit_bytes=limit, l0_limit=10**6,
+                  fsync_writes=False)
+    ref = {}
+    payload = rng.bytes(record)
+    for k in rng.permutation(n_keys):
+        v = int(k).to_bytes(8, "little") + payload[:-8]
+        lsm.put(int(k), v)
+        ref[int(k)] = v
+    lsm.flush()
+    db_bytes = sum(t.size_bytes for lvl in lsm.levels for t in lvl)
+    lsm.close()
+    return inner, ref, db_bytes
+
+
+def _gets(lsm, keys, ref=None):
+    for k in keys:
+        v = lsm.get(int(k))
+        if ref is not None:
+            assert v == ref[int(k)]
+
+
+def bench_memory_ratio(ratios=(0.05, 0.33, 0.66), n_ops: int = 60) -> List[Row]:
+    inner, ref, db_bytes = build_db()
+    rng = np.random.default_rng(1)
+    keys = zipf_keys(4000, n_ops, 0.99, rng)
+    rows: List[Row] = []
+    for ratio in ratios:
+        cache = int(db_bytes * ratio)
+        for use_fa, label in ((False, "sync"), (True, "foreactor")):
+            dev = sim(inner, cache_bytes=cache)
+            lsm = LSMTree.open_existing(dev, "/db")
+            if use_fa:
+                fa = Foreactor(device=dev, backend="io_uring", depth=16)
+                plugins.register_all(fa)
+                get = fa.wrap("lsm_get", plugins.capture_lsm_get)(
+                    lambda l, k: l.get(k))
+                t = timeit(lambda: [get(lsm, int(k)) for k in keys]) / n_ops
+                fa.shutdown()
+            else:
+                t = timeit(lambda: _gets(lsm, keys, ref)) / n_ops
+            rows.append((f"lsm_get_mem{int(ratio*100)}pct_{label}", t * 1e6, ""))
+            lsm.close()
+        s, f = rows[-2][1], rows[-1][1]
+        rows[-1] = (rows[-1][0], f, f"improvement={100*(1-f/s):.0f}%")
+    return rows
+
+
+def bench_record_size(records=(64, 1024, 4096), n_ops: int = 50) -> List[Row]:
+    rows: List[Row] = []
+    rng = np.random.default_rng(2)
+    for rec in records:
+        inner, ref, db_bytes = build_db(n_keys=2000, record=rec)
+        keys = zipf_keys(2000, n_ops, 0.99, rng)
+        lat = {}
+        for use_fa, label in ((False, "sync"), (True, "foreactor")):
+            dev = sim(inner, cache_bytes=db_bytes // 10)
+            lsm = LSMTree.open_existing(dev, "/db")
+            if use_fa:
+                fa = Foreactor(device=dev, backend="io_uring", depth=16)
+                plugins.register_all(fa)
+                get = fa.wrap("lsm_get", plugins.capture_lsm_get)(
+                    lambda l, k: l.get(k))
+                per = []
+                for k in keys:
+                    t0 = time.perf_counter()
+                    get(lsm, int(k))
+                    per.append(time.perf_counter() - t0)
+                fa.shutdown()
+            else:
+                per = []
+                for k in keys:
+                    t0 = time.perf_counter()
+                    lsm.get(int(k))
+                    per.append(time.perf_counter() - t0)
+            lat[label] = per
+            lsm.close()
+        mean_s = np.mean(lat["sync"]); mean_f = np.mean(lat["foreactor"])
+        p99_s = np.percentile(lat["sync"], 99); p99_f = np.percentile(lat["foreactor"], 99)
+        rows.append((f"lsm_get_rec{rec}B_sync", mean_s * 1e6,
+                     f"p99_us={p99_s*1e6:.0f}"))
+        rows.append((f"lsm_get_rec{rec}B_foreactor", mean_f * 1e6,
+                     f"p99_us={p99_f*1e6:.0f};improvement={100*(1-mean_f/mean_s):.0f}%"))
+    return rows
+
+
+def bench_clients(counts=(1, 2, 4), n_ops: int = 40) -> List[Row]:
+    """Fig. 9(a): each client thread speculates independently."""
+    inner, ref, db_bytes = build_db(n_keys=2000)
+    rows: List[Row] = []
+    for nc in counts:
+        dev = sim(inner, cache_bytes=db_bytes // 10)
+        fa = Foreactor(device=dev, backend="io_uring", depth=16)
+        plugins.register_all(fa)
+        lsm = LSMTree.open_existing(dev, "/db")
+        get = fa.wrap("lsm_get", plugins.capture_lsm_get)(lambda l, k: l.get(k))
+
+        def client(cid):
+            rng = np.random.default_rng(cid)
+            for k in zipf_keys(2000, n_ops, 0.99, rng):
+                get(lsm, int(k))
+
+        t0 = time.perf_counter()
+        ts = [threading.Thread(target=client, args=(i,)) for i in range(nc)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        dt = time.perf_counter() - t0
+        total = nc * n_ops
+        rows.append((f"lsm_get_clients{nc}", dt / total * 1e6,
+                     f"ops_per_s={total/dt:.0f}"))
+        lsm.close()
+        fa.shutdown()
+    return rows
+
+
+def bench_op_mix(get_fracs=(1.0, 0.5), n_ops: int = 60) -> List[Row]:
+    """Fig. 9(b): only Gets are accelerated; improvement scales with the
+    Get fraction."""
+    rows: List[Row] = []
+    for frac in get_fracs:
+        inner, ref, db_bytes = build_db(n_keys=2000)
+        rng = np.random.default_rng(3)
+        keys = zipf_keys(2000, n_ops, 0.99, rng)
+        ops = rng.random(n_ops) < frac  # True = get, False = put
+        for use_fa, label in ((False, "sync"), (True, "foreactor")):
+            dev = sim(inner, cache_bytes=db_bytes // 10)
+            lsm = LSMTree.open_existing(dev, "/db")
+            if use_fa:
+                fa = Foreactor(device=dev, backend="io_uring", depth=16)
+                plugins.register_all(fa)
+                get = fa.wrap("lsm_get", plugins.capture_lsm_get)(
+                    lambda l, k: l.get(k))
+            else:
+                get = lambda l, k: l.get(k)
+            t0 = time.perf_counter()
+            for k, is_get in zip(keys, ops):
+                if is_get:
+                    get(lsm, int(k))
+                else:
+                    lsm.put(int(k), b"x" * 64)
+            dt = time.perf_counter() - t0
+            rows.append((f"lsm_mix_get{int(frac*100)}pct_{label}",
+                         dt / n_ops * 1e6, ""))
+            lsm.close()
+            if use_fa:
+                fa.shutdown()
+        s, f = rows[-2][1], rows[-1][1]
+        rows[-1] = (rows[-1][0], f, f"improvement={100*(1-f/s):.0f}%")
+    return rows
+
+
+def bench_skew(thetas=(0.6, 0.99), n_ops: int = 50) -> List[Row]:
+    """Fig. 9(c): less skew -> more cache misses -> more improvement."""
+    inner, ref, db_bytes = build_db(n_keys=2000)
+    rows: List[Row] = []
+    for theta in thetas:
+        rng = np.random.default_rng(4)
+        keys = zipf_keys(2000, n_ops, theta, rng)
+        for use_fa, label in ((False, "sync"), (True, "foreactor")):
+            dev = sim(inner, cache_bytes=db_bytes // 5)
+            lsm = LSMTree.open_existing(dev, "/db")
+            if use_fa:
+                fa = Foreactor(device=dev, backend="io_uring", depth=16)
+                plugins.register_all(fa)
+                get = fa.wrap("lsm_get", plugins.capture_lsm_get)(
+                    lambda l, k: l.get(k))
+                t = timeit(lambda: [get(lsm, int(k)) for k in keys]) / n_ops
+                fa.shutdown()
+            else:
+                t = timeit(lambda: _gets(lsm, keys)) / n_ops
+            rows.append((f"lsm_zipf{theta}_{label}", t * 1e6, ""))
+            lsm.close()
+        s, f = rows[-2][1], rows[-1][1]
+        rows[-1] = (rows[-1][0], f, f"improvement={100*(1-f/s):.0f}%")
+    return rows
+
+
+def run() -> List[Row]:
+    return (bench_memory_ratio() + bench_record_size() + bench_clients()
+            + bench_op_mix() + bench_skew())

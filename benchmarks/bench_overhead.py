@@ -1,0 +1,94 @@
+"""Paper Fig. 10: latency/overhead factor breakdown of a speculated Get,
+plus the framework-plane benchmarks (checkpoint restore, data pipeline)."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core import Foreactor, MemDevice
+from repro.data import DataConfig, ShardedTokenDataset, TokenBatchLoader, write_synthetic_dataset
+from repro.store import plugins
+
+from .bench_lsm import build_db
+from .common import Row, sim, timeit
+from repro.store.lsm import LSMTree
+
+
+def bench_get_breakdown(n_ops: int = 60) -> List[Row]:
+    """Fig. 10: where time goes inside speculated Gets (engine stats)."""
+    inner, ref, db_bytes = build_db(n_keys=2000, record=1024)
+    dev = sim(inner, cache_bytes=db_bytes // 10)
+    fa = Foreactor(device=dev, backend="io_uring", depth=16)
+    plugins.register_all(fa)
+    lsm = LSMTree.open_existing(dev, "/db")
+    get = fa.wrap("lsm_get", plugins.capture_lsm_get)(lambda l, k: l.get(k))
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 2000, n_ops)
+    t = timeit(lambda: [get(lsm, int(k)) for k in keys])
+    s = fa.total_stats
+    per = 1e6 / n_ops
+    rows = [
+        ("get_total", t / n_ops * 1e6, ""),
+        ("get_peek_algorithm", s.peek_seconds * per, "overhead: pre-issuing alg"),
+        ("get_wait_completion", s.wait_seconds * per, "io_uring wait"),
+        ("get_sync_syscalls", s.sync_seconds * per, "non-speculated syscalls"),
+        ("get_result_copy", s.harvest_seconds * per, "overhead: buffer copy"),
+        ("get_cancelled", s.cancelled + s.wasted_completions,
+         f"overhead: wasted speculative reads over {n_ops} gets"),
+    ]
+    lsm.close()
+    fa.shutdown()
+    return rows
+
+
+def bench_checkpoint(n_mb: int = 24) -> List[Row]:
+    """Framework plane: parallel checkpoint save/restore vs serial."""
+    rng = np.random.default_rng(0)
+    tree = {f"layer{i}": rng.normal(size=(n_mb * 1024 * 1024 // 4 // 8,))
+            .astype(np.float32) for i in range(8)}
+    rows: List[Row] = []
+    for depth, label in ((0, "serial"), (32, "foreactor")):
+        inner = MemDevice()
+        dev = sim(inner)
+        fa = Foreactor(device=dev, backend="io_uring", depth=depth)
+        mgr = CheckpointManager(dev, f"/ck_{label}", fa=fa, num_shards=8,
+                                chunk_bytes=1 << 20)
+        t_save = timeit(lambda: mgr.save(1, tree))
+        t_rest = timeit(lambda: mgr.restore(1))
+        rows.append((f"ckpt_save_{label}", t_save * 1e6,
+                     f"MBps={n_mb / t_save:.0f}"))
+        rows.append((f"ckpt_restore_{label}", t_rest * 1e6,
+                     f"MBps={n_mb / t_rest:.0f}"))
+        fa.shutdown()
+    return rows
+
+
+def bench_pipeline(steps: int = 8) -> List[Row]:
+    """Framework plane: batch-load latency with/without speculation."""
+    rows: List[Row] = []
+    cfg = DataConfig(seq_len=512, batch_size=32, seed=0)
+    inner = MemDevice()
+    write_synthetic_dataset(inner, "/data", cfg, 4, 128, vocab_size=1000)
+    paths = [f"/data/shard_{i:05d}.rio" for i in range(4)]
+    for prefetch, label in ((False, "serial"), (True, "foreactor")):
+        dev = sim(inner)
+        fa = Foreactor(device=dev, backend="io_uring", depth=32)
+        loader = TokenBatchLoader(ShardedTokenDataset(dev, paths), cfg,
+                                  fa=fa, prefetch=prefetch)
+        t0 = time.perf_counter()
+        for s in range(steps):
+            loader.load(0, s)
+        dt = (time.perf_counter() - t0) / steps
+        rows.append((f"data_batch_{label}", dt * 1e6,
+                     f"tokens_per_s={cfg.batch_size * cfg.seq_len / dt:.0f}"))
+        loader.close()
+        fa.shutdown()
+    return rows
+
+
+def run() -> List[Row]:
+    return bench_get_breakdown() + bench_checkpoint() + bench_pipeline()

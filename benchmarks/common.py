@@ -1,0 +1,61 @@
+"""Shared benchmark fixtures: devices, datasets, timing helpers.
+
+All benchmarks run against :class:`SimulatedDevice` with the remote-tier
+profile (DESIGN.md §2.3) so the storage-I/O-parallelism effect is
+deterministic in CI; data correctness is backed by the real in-memory
+files underneath.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import numpy as np
+
+from repro.core import (DeviceProfile, Foreactor, MemDevice, SimulatedDevice)
+
+#: CI-friendly profile: same shape as REMOTE_PROFILE, smaller constants
+BENCH_PROFILE = DeviceProfile(channels=16, base_latency=1.2e-3,
+                              metadata_latency=1.0e-3, per_byte=1.0e-9,
+                              crossing_cost=4e-6)
+
+Row = Tuple[str, float, str]  # (name, us_per_call, derived)
+
+
+def timeit(fn: Callable, n: int = 1, warmup: int = 0) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n
+
+
+def make_files(inner: MemDevice, root: str, n: int, size: int) -> List[str]:
+    rng = np.random.default_rng(0)
+    paths = []
+    for i in range(n):
+        p = f"{root}/f{i:04d}"
+        fd = inner.open(p, "w")
+        inner.pwrite(fd, rng.bytes(size), 0)
+        inner.close(fd)
+        paths.append(p)
+    return paths
+
+
+def sim(inner: MemDevice, cache_bytes: int = 0,
+        profile: DeviceProfile = BENCH_PROFILE) -> SimulatedDevice:
+    return SimulatedDevice(inner, profile, cache_bytes=cache_bytes)
+
+
+def fmt(rows: List[Row]) -> List[str]:
+    return [f"{name},{us:.1f},{derived}" for name, us, derived in rows]
+
+
+def zipf_keys(n_keys: int, n_samples: int, theta: float, rng) -> np.ndarray:
+    """Zipfian sampling over [0, n_keys) with skew theta (YCSB-style)."""
+    ranks = np.arange(1, n_keys + 1, dtype=np.float64)
+    probs = 1.0 / ranks ** theta
+    probs /= probs.sum()
+    return rng.choice(n_keys, size=n_samples, p=probs)

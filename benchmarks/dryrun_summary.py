@@ -1,0 +1,56 @@
+"""§Dry-run summary table generator: one row per (arch, shape, mesh) from
+reports/dryrun/*.json -> reports/dryrun_summary.md.
+
+    python -m benchmarks.dryrun_summary
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def gib(n):
+    return f"{(n or 0) / (1 << 30):.2f}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reports", default="reports/dryrun")
+    ap.add_argument("--out", default="reports/dryrun_summary.md")
+    args = ap.parse_args()
+    rows = []
+    for f in sorted(glob.glob(f"{args.reports}/*.json")):
+        if "_hc" in os.path.basename(f):
+            continue  # hillclimb variants live in §Perf
+
+        r = json.load(open(f))
+        h = r["hlo"]
+        m = r["memory"]
+        coll_sched = ", ".join(f"{k.split('-')[-1]}={gib(v)}G"
+                               for k, v in h["collectives"].items() if v)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r.get('profile','')} "
+            f"| {gib(m.get('resident_bytes_per_device'))} "
+            f"| {gib(m.get('temp_bytes_per_device'))} "
+            f"| {h['dot_flops']:.2e} | {r.get('model_flops_per_dev', 0):.2e} "
+            f"| {gib(h['collective_bytes'])} | {h['collective_count']} "
+            f"| {coll_sched or '—'} | {r['compile_s']:.0f}s |")
+    header = [
+        "# Dry-run summary (per device; resident = exact sharded inputs, "
+        "temp = memory_analysis/devices)",
+        "",
+        "| arch | shape | mesh | prof | resident GiB | temp GiB | HLO flops "
+        "| model flops | coll GiB | #coll | collective schedule | compile |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write("\n".join(header + rows) + "\n")
+    print(f"wrote {args.out} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""§Roofline generator: three-term roofline per (arch x shape) from the
+dry-run reports (single-pod mesh), written to reports/roofline.md + .csv.
+
+    python -m benchmarks.roofline [--reports reports/dryrun] [--mesh 16x16]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.analysis.roofline import HW, roofline
+from repro.configs import ARCH_IDS, SHAPES, SKIP_CELLS
+
+
+def load_reports(report_dir: str, mesh: str):
+    out = {}
+    for f in glob.glob(f"{report_dir}/*__{mesh}.json"):
+        r = json.load(open(f))
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reports", default="reports/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--out", default="reports")
+    args = ap.parse_args()
+    hw = HW()
+    reports = load_reports(args.reports, args.mesh)
+
+    md = ["| arch | shape | prof | compute_s | memory_s | collective_s | "
+          "dominant | bound_s | MODEL/HLO | note |",
+          "|---|---|---|---|---|---|---|---|---|---|"]
+    csv = ["arch,shape,profile,compute_s,memory_s,collective_s,dominant,"
+           "bound_s,useful_ratio"]
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            if (arch, shape) in SKIP_CELLS:
+                md.append(f"| {arch} | {shape} | — | — | — | — | SKIP | — | — | "
+                          f"{SKIP_CELLS[(arch, shape)][:60]} |")
+                csv.append(f"{arch},{shape},,,,,SKIP,,")
+                continue
+            r = reports.get((arch, shape))
+            if r is None:
+                md.append(f"| {arch} | {shape} | ? | | | | MISSING | | | |")
+                csv.append(f"{arch},{shape},,,,,MISSING,,")
+                continue
+            h = r["hlo"]
+            t = roofline(h["dot_flops"], h["dot_bytes"], h["collective_bytes"],
+                         hw, r.get("model_flops_per_dev"))
+            note = ""
+            if t.dominant == "compute" and (t.useful_ratio or 0) < 0.4:
+                note = "low useful-FLOP ratio"
+            md.append(
+                f"| {arch} | {shape} | {r.get('profile','?')} "
+                f"| {t.compute_s:.3e} | {t.memory_s:.3e} | {t.collective_s:.3e} "
+                f"| **{t.dominant}** | {t.bound_s:.3e} "
+                f"| {t.useful_ratio:.2f} | {note} |"
+                if t.useful_ratio else
+                f"| {arch} | {shape} | {r.get('profile','?')} "
+                f"| {t.compute_s:.3e} | {t.memory_s:.3e} | {t.collective_s:.3e} "
+                f"| **{t.dominant}** | {t.bound_s:.3e} | — | {note} |")
+            csv.append(f"{arch},{shape},{r.get('profile','')},{t.compute_s:.6e},"
+                       f"{t.memory_s:.6e},{t.collective_s:.6e},{t.dominant},"
+                       f"{t.bound_s:.6e},{t.useful_ratio or ''}")
+    os.makedirs(args.out, exist_ok=True)
+    with open(f"{args.out}/roofline.md", "w") as f:
+        f.write("\n".join(md) + "\n")
+    with open(f"{args.out}/roofline.csv", "w") as f:
+        f.write("\n".join(csv) + "\n")
+    print("\n".join(md))
+
+
+if __name__ == "__main__":
+    main()

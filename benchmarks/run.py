@@ -1,0 +1,44 @@
+"""Benchmark harness: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Sections:
+
+* Fig. 6  — du / cp command-line utilities     (bench_utilities)
+* Fig. 7 + Table 1 — B+-tree Scan/Load + backend swap (bench_bptree)
+* Fig. 8/9 — LSM Get: memory ratio, record size, tails, clients, op mix,
+  skew                                          (bench_lsm)
+* Fig. 10 — overhead breakdown + framework-plane I/O (bench_overhead)
+
+Roofline tables (§Roofline) are produced separately by
+``python -m benchmarks.roofline`` from the dry-run reports.
+"""
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import bench_bptree, bench_lsm, bench_overhead, bench_utilities
+    from .common import fmt
+
+    sections = [
+        ("fig6_utilities", bench_utilities.run),
+        ("fig7_table1_bptree", bench_bptree.run),
+        ("fig8_fig9_lsm", bench_lsm.run),
+        ("fig10_overhead_framework", bench_overhead.run),
+    ]
+    print("name,us_per_call,derived")
+    for name, fn in sections:
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception as e:  # pragma: no cover
+            print(f"{name},ERROR,{e!r}", flush=True)
+            raise
+        for line in fmt(rows):
+            print(line, flush=True)
+        print(f"# section {name} done in {time.time() - t0:.1f}s",
+              file=sys.stderr, flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Compiled-artifact analysis: scan-aware HLO cost extraction + roofline."""
+
+from .hlo import HloSummary, analyze_hlo
+from .roofline import HW, RooflineTerms, roofline_from_report
+
+__all__ = ["HloSummary", "analyze_hlo", "HW", "RooflineTerms", "roofline_from_report"]

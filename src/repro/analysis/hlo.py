@@ -1,0 +1,236 @@
+"""Scan-aware cost extraction from compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts each while-loop (lax.scan) body ONCE,
+so for a depth-L scanned model it under-reports FLOPs by ~L x.  This
+module re-derives costs from the HLO text itself:
+
+* computations are parsed into (name -> ops) tables;
+* the call graph (while bodies, fusions, calls, conditionals) propagates a
+  *trip multiplier* down from ENTRY — a while body's ops count trip_count
+  times (trip counts recovered from the loop-condition's s32 constant);
+* FLOPs come from ``dot`` ops: 2 * prod(result_shape) * prod(contracted
+  lhs dims), times the computation's multiplier;
+* collective bytes (all-gather / all-reduce / reduce-scatter / all-to-all
+  / collective-permute) are result-shape bytes times the multiplier.
+
+Because the SPMD pipeline emits a *per-partition* module, every number
+extracted here is **per device**.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:\S+))\s+([\w\-]+)\(")
+
+
+def _shapes_in(sig: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(sig):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, tuple(int(d) for d in dims.split(",") if d)))
+    return out
+
+
+def _sig_bytes(sig: str) -> int:
+    total = 0
+    for dt, dims in _shapes_in(sig):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class _Op:
+    name: str
+    sig: str
+    kind: str
+    line: str
+
+
+@dataclass
+class _Computation:
+    name: str
+    ops: List[_Op] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)  # op name -> sig
+
+
+def _parse_computations(txt: str) -> Dict[str, _Computation]:
+    comps: Dict[str, _Computation] = {}
+    cur: Optional[_Computation] = None
+    for raw in txt.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        # header params may contain nested tuple shapes — match loosely
+        header = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$", s)
+        if header and not line.startswith(" "):
+            cur = _Computation(header.group(1))
+            comps[cur.name] = cur
+            continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(s)
+        if m:
+            op = _Op(m.group(1), m.group(2), m.group(3), s)
+            cur.ops.append(op)
+            cur.symbols[m.group(1)] = m.group(2)
+    return comps
+
+
+def _entry_name(txt: str) -> Optional[str]:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", txt, re.M)
+    return m.group(1) if m else None
+
+
+def _trip_count(cond: _Computation) -> int:
+    """Largest s32 constant in the loop condition — loops are `i < N`."""
+    best = 1
+    for op in cond.ops:
+        if op.kind == "constant":
+            m = re.search(r"constant\((\d+)\)", op.line)
+            if m and "s32" in op.sig:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+_CALLEE_RE = re.compile(
+    r"(?:condition|body|calls|to_apply|branch_computations)=\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+
+
+def _multipliers(comps: Dict[str, _Computation], entry: str) -> Dict[str, int]:
+    mult: Dict[str, int] = {entry: 1}
+    stack = [entry]
+    while stack:
+        cname = stack.pop()
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        m = mult[cname]
+        for op in comp.ops:
+            refs = _CALLEE_RE.findall(op.line)
+            if not refs:
+                continue
+            if op.kind == "while":
+                body = re.search(r"body=%?([\w.\-]+)", op.line)
+                cond = re.search(r"condition=%?([\w.\-]+)", op.line)
+                trips = _trip_count(comps[cond.group(1)]) if cond and \
+                    cond.group(1) in comps else 1
+                for name, k in ((body and body.group(1), trips),
+                                (cond and cond.group(1), trips)):
+                    if name:
+                        new = m * k
+                        if new > mult.get(name, 0):
+                            mult[name] = new
+                            stack.append(name)
+            else:
+                for grp in refs:
+                    for name in re.split(r",\s*%?", grp):
+                        new = m
+                        if new > mult.get(name, 0):
+                            mult[name] = new
+                            stack.append(name)
+    return mult
+
+
+def _dot_flops(comp: _Computation, op: _Op) -> int:
+    """2 * prod(result) * prod(lhs contracting dims)."""
+    res = _shapes_in(op.sig)
+    if not res:
+        return 0
+    out_elems = 1
+    for d in res[0][1]:
+        out_elems *= d
+    m = re.search(r"dot\(%?([\w.\-]+),", op.line)
+    lhs_sig = comp.symbols.get(m.group(1), "") if m else ""
+    lhs_shapes = _shapes_in(lhs_sig)
+    cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    contract = 1
+    if lhs_shapes and cd:
+        lshape = lhs_shapes[0][1]
+        for d in cd.group(1).split(","):
+            if d:
+                contract *= lshape[int(d)]
+    return 2 * out_elems * contract
+
+
+@dataclass
+class HloSummary:
+    """Per-device, trip-weighted costs."""
+
+    dot_flops: float = 0.0
+    dot_bytes: float = 0.0           # dot operand+result traffic (lower bound)
+    collective_bytes: float = 0.0
+    collectives: Dict[str, float] = field(default_factory=dict)
+    collective_count: int = 0
+    while_loops: int = 0
+    max_trip: int = 1
+    unweighted_dot_flops: float = 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "dot_flops": self.dot_flops,
+            "dot_bytes": self.dot_bytes,
+            "collective_bytes": self.collective_bytes,
+            "collectives": dict(self.collectives),
+            "collective_count": self.collective_count,
+            "while_loops": self.while_loops,
+            "max_trip": self.max_trip,
+            "unweighted_dot_flops": self.unweighted_dot_flops,
+        }
+
+
+def analyze_hlo(txt: str) -> HloSummary:
+    comps = _parse_computations(txt)
+    entry = _entry_name(txt)
+    if entry is None or entry not in comps:
+        # fall back: treat the largest computation as entry
+        entry = max(comps, key=lambda c: len(comps[c].ops)) if comps else None
+        if entry is None:
+            return HloSummary()
+    mult = _multipliers(comps, entry)
+    out = HloSummary(collectives={k: 0.0 for k in _COLLECTIVES})
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0)
+        if m == 0:
+            continue  # unreachable from entry (dead or cond-only helper)
+        out.max_trip = max(out.max_trip, m)
+        for op in comp.ops:
+            if op.kind == "while":
+                out.while_loops += 1
+            elif op.kind == "dot":
+                f = _dot_flops(comp, op)
+                out.dot_flops += m * f
+                out.unweighted_dot_flops += f
+                # operands + result bytes
+                ops_m = re.search(r"dot\(%?([\w.\-]+),\s*%?([\w.\-]+)\)", op.line)
+                b = _sig_bytes(op.sig)
+                if ops_m:
+                    b += _sig_bytes(comp.symbols.get(ops_m.group(1), ""))
+                    b += _sig_bytes(comp.symbols.get(ops_m.group(2), ""))
+                out.dot_bytes += m * b
+            else:
+                base = op.kind.replace("-start", "")
+                if base in _COLLECTIVES and not op.kind.endswith("-done"):
+                    b = _sig_bytes(op.sig)
+                    out.collectives[base] += m * b
+                    out.collective_bytes += m * b
+                    out.collective_count += 1
+    return out

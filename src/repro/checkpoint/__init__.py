@@ -1,0 +1,16 @@
+"""Fault-tolerant sharded checkpointing with foreactor-parallel I/O.
+
+* Save: leaves are packed into N shard files (one per I/O writer — the
+  per-host analogue), written through a guaranteed-pwrite foreaction graph,
+  then committed atomically (manifest + COMMIT marker last).
+* Restore: manifest -> parallel fstat validation (du-shaped graph) ->
+  parallel chunked preads (Fig. 4a-shaped graph) -> pytree reassembly.
+* Replicate: checkpoint copy between storage tiers via Link'ed pread->pwrite
+  chains (cp-shaped graph, Fig. 4b).
+* Fault tolerance: corrupt/missing shards are detected by size+crc checks
+  and restore falls back to the newest older committed step.
+"""
+
+from .manager import CheckpointManager, CheckpointError
+
+__all__ = ["CheckpointManager", "CheckpointError"]

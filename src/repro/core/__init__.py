@@ -1,0 +1,31 @@
+"""Foreactor core: explicit speculation over foreaction graphs.
+
+The paper's contribution (Hu et al., "Foreactor: Exploiting Storage I/O
+Parallelism with Explicit Speculation") as a reusable library:
+
+* :mod:`repro.core.graph` — the foreaction graph abstraction (§3.2)
+* :mod:`repro.core.engine` — the pre-issuing algorithm (§5.2, Alg. 1)
+* :mod:`repro.core.backends` — io_uring-style queue pair & user thread pool (§5.4)
+* :mod:`repro.core.device` — real / simulated storage devices (§2.1, Fig. 1)
+* :mod:`repro.core.api` — plugin registration + interception surface (§5.1)
+"""
+
+from .api import Foreactor, current_session, io, make_foreactor
+from .backends import BACKENDS, QueuePairBackend, SyncBackend, ThreadPoolBackend, make_backend
+from .device import (
+    Device, DeviceProfile, MemDevice, NVME_PROFILE, OSDevice, REMOTE_PROFILE,
+    SimulatedDevice,
+)
+from .engine import GraphMismatch, SessionStats, SpecSession
+from .graph import BranchNode, ForeactionGraph, GraphBuilder, SyscallNode
+from .syscalls import Sys, is_pure
+
+__all__ = [
+    "Foreactor", "current_session", "io", "make_foreactor",
+    "BACKENDS", "QueuePairBackend", "SyncBackend", "ThreadPoolBackend", "make_backend",
+    "Device", "DeviceProfile", "MemDevice", "NVME_PROFILE", "OSDevice",
+    "REMOTE_PROFILE", "SimulatedDevice",
+    "GraphMismatch", "SessionStats", "SpecSession",
+    "BranchNode", "ForeactionGraph", "GraphBuilder", "SyscallNode",
+    "Sys", "is_pure",
+]

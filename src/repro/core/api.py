@@ -1,0 +1,200 @@
+"""Public Foreactor API (paper §5.1): graph registration, function wrapping,
+and the POSIX-call interception layer.
+
+Python offers no linker ``--wrap``/LD_PRELOAD, so we use the paper's stated
+alternative ("developers could directly inject wrapper code in-place around
+candidate functions", §5.4): application code performs I/O through the
+``repro.core.api.io`` module-level functions, and a registered function is
+activated with ``Foreactor.wrap``.  While an activation is live on a thread,
+every ``io.*`` call on that thread is intercepted by its ``SpecSession``;
+otherwise calls go straight to the device.  Graph instances are per-thread
+(paper: "every foreaction graph instance is per-thread local").
+"""
+
+from __future__ import annotations
+
+import functools
+import threading
+from typing import Any, Callable, Dict, List, Optional
+
+from .backends import Backend, SyncBackend, make_backend
+from .device import Device, OSDevice
+from .engine import SessionStats, SpecSession
+from .graph import ForeactionGraph
+from .syscalls import Sys
+
+_tls = threading.local()
+
+
+def _session_stack() -> List[SpecSession]:
+    st = getattr(_tls, "stack", None)
+    if st is None:
+        st = []
+        _tls.stack = st
+    return st
+
+
+def current_session() -> Optional[SpecSession]:
+    st = _session_stack()
+    return st[-1] if st else None
+
+
+class Foreactor:
+    """The libforeactor singleton-ish object: device + backend + registry."""
+
+    def __init__(
+        self,
+        device: Optional[Device] = None,
+        backend: str = "io_uring",
+        depth: int = 8,
+        workers: int = 16,
+        strict: bool = False,
+    ):
+        self.device = device if device is not None else OSDevice()
+        self.backend_name = backend
+        self.depth = depth
+        self.workers = workers
+        self.strict = strict
+        self._graphs: Dict[str, ForeactionGraph] = {}
+        self._graph_builders: Dict[str, Callable[[], ForeactionGraph]] = {}
+        self.total_stats = SessionStats()
+        self._backends: List[Backend] = []
+        self._backend_pool = threading.local()  # one live queue pair per thread
+        self._lock = threading.Lock()
+
+    # -- registry ----------------------------------------------------------
+    def register(self, name: str, builder: Callable[[], ForeactionGraph]) -> None:
+        """Register a graph builder; built lazily on first activation
+        (paper: 'invoked only once upon the first invocation of f')."""
+        self._graph_builders[name] = builder
+
+    def graph(self, name: str) -> ForeactionGraph:
+        with self._lock:
+            if name not in self._graphs:
+                self._graphs[name] = self._graph_builders[name]()
+            return self._graphs[name]
+
+    def _make_backend(self) -> Backend:
+        """Per-thread backend reuse: like the paper, each application thread
+        keeps its own live io_uring queue pair across activations instead of
+        paying setup cost per wrapped call."""
+        b = getattr(self._backend_pool, "backend", None)
+        if b is None:
+            b = make_backend(self.backend_name, self.device, workers=self.workers)
+            self._backend_pool.backend = b
+            with self._lock:
+                self._backends.append(b)
+        return b
+
+    # -- activation ----------------------------------------------------------
+    def activate(self, graph_name: str, ctx: Dict[str, Any],
+                 depth: Optional[int] = None) -> SpecSession:
+        sess = SpecSession(
+            graph=self.graph(graph_name),
+            ctx=ctx,
+            backend=self._make_backend(),
+            device=self.device,
+            depth=self.depth if depth is None else depth,
+            strict=self.strict,
+        )
+        _session_stack().append(sess)
+        return sess
+
+    def deactivate(self, sess: SpecSession) -> SessionStats:
+        st = _session_stack()
+        assert st and st[-1] is sess, "unbalanced session stack"
+        st.pop()
+        stats = sess.finish()  # cancels leftovers + drains; backend is reused
+        with self._lock:
+            self.total_stats.merge(stats)
+        return stats
+
+    def wrap(self, graph_name: str,
+             capture: Callable[..., Dict[str, Any]]) -> Callable:
+        """Decorator: shadow function ``f`` with a wrapper that captures the
+        Input annotation variables and runs ``f`` under a SpecSession."""
+
+        def deco(fn: Callable) -> Callable:
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                ctx = capture(*args, **kwargs)
+                sess = self.activate(graph_name, ctx)
+                try:
+                    return fn(*args, **kwargs)
+                finally:
+                    self.deactivate(sess)
+
+            wrapper.__foreactor_graph__ = graph_name  # type: ignore[attr-defined]
+            return wrapper
+
+        return deco
+
+    def shutdown(self) -> None:
+        with self._lock:
+            backends, self._backends = self._backends, []
+        for b in backends:
+            b.shutdown()
+
+
+class _PassthroughForeactor(Foreactor):
+    """A disabled Foreactor: wrap() runs the function unmodified (baseline)."""
+
+    def activate(self, graph_name, ctx, depth=None):  # type: ignore[override]
+        sess = SpecSession(self.graph(graph_name), ctx, SyncBackend(self.device),
+                           self.device, depth=0, strict=False)
+        # depth=0 sync-backend session == original serial execution
+        _session_stack().append(sess)
+        return sess
+
+
+def make_foreactor(enabled: bool = True, **kw) -> Foreactor:
+    return Foreactor(**kw) if enabled else _PassthroughForeactor(**kw)
+
+
+# ---------------------------------------------------------------------------
+# The interception layer: application code calls these.  With an active
+# session whose device matches, calls are routed through the pre-issuing
+# engine; otherwise they hit the device directly.
+# ---------------------------------------------------------------------------
+class io:
+    @staticmethod
+    def _route(device: Device, sc: Sys, args: tuple) -> Any:
+        sess = current_session()
+        if sess is not None and sess.device is device:
+            return sess.intercept(sc, args)
+        return _direct(device, sc, args)
+
+    @staticmethod
+    def open(device: Device, path: str, flags: str = "r") -> int:
+        return io._route(device, Sys.OPEN, (path, flags))
+
+    @staticmethod
+    def close(device: Device, fd: int) -> None:
+        return io._route(device, Sys.CLOSE, (fd,))
+
+    @staticmethod
+    def pread(device: Device, fd: int, size: int, offset: int) -> bytes:
+        return io._route(device, Sys.PREAD, (fd, size, offset))
+
+    @staticmethod
+    def pwrite(device: Device, fd: int, data: bytes, offset: int) -> int:
+        return io._route(device, Sys.PWRITE, (fd, data, offset))
+
+    @staticmethod
+    def fstatat(device: Device, path: str):
+        return io._route(device, Sys.FSTATAT, (path,))
+
+    @staticmethod
+    def getdents(device: Device, path: str) -> list:
+        return io._route(device, Sys.GETDENTS, (path,))
+
+    @staticmethod
+    def fsync(device: Device, fd: int) -> None:
+        return io._route(device, Sys.FSYNC, (fd,))
+
+
+def _direct(device: Device, sc: Sys, args: tuple) -> Any:
+    from .syscalls import execute
+
+    device.charge_crossing()
+    return execute(device, sc, args)

@@ -1,0 +1,270 @@
+"""Asynchronous syscall backends (paper §2.3, §5.4).
+
+``QueuePairBackend`` reproduces io_uring's semantics: a submission queue
+filled without kernel involvement, a single boundary crossing per submitted
+batch (``io_uring_enter``), an in-process ``io_workqueue`` worker pool that
+may execute entries in parallel, request *linking* to force ordered
+execution of chains, and completion harvesting that costs no crossing.
+
+``ThreadPoolBackend`` is the paper's user-level thread-pool alternative:
+identical engine-facing semantics, but each request costs its own boundary
+crossing (it is an ordinary blocking syscall on some thread).
+
+``SyncBackend`` degenerates to synchronous in-place execution and is the
+no-speculation baseline.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import List, Optional
+
+from .device import Device
+from .syscalls import IORequest, ReqState, Sys, execute
+
+
+class Backend:
+    """Engine-facing interface — identical across backends (paper Table 1)."""
+
+    name = "abstract"
+
+    def __init__(self, device: Device):
+        self.device = device
+
+    def prepare(self, req: IORequest) -> None:
+        raise NotImplementedError
+
+    def submit_all(self) -> int:
+        """Make prepared requests eligible to run; returns #submitted."""
+        raise NotImplementedError
+
+    def wait(self, req: IORequest):
+        raise NotImplementedError
+
+    def cancel_remaining(self) -> int:
+        """Cancel every request not yet executing (early exit, paper §6.4)."""
+        raise NotImplementedError
+
+    def drain(self) -> None:
+        """Block until nothing is in flight (session teardown)."""
+        raise NotImplementedError
+
+    def shutdown(self) -> None:
+        pass
+
+
+class SyncBackend(Backend):
+    """No speculation: requests execute at wait()."""
+
+    name = "sync"
+
+    def __init__(self, device: Device):
+        super().__init__(device)
+        self._prepared: List[IORequest] = []
+
+    def prepare(self, req: IORequest) -> None:
+        self._prepared.append(req)
+
+    def submit_all(self) -> int:
+        n = len(self._prepared)
+        self._prepared.clear()  # sync backend never runs anything early
+        return 0 if n else 0
+
+    def wait(self, req: IORequest):
+        self.device.charge_crossing()
+        req.finish(execute(self.device, req.sc, req.args))
+        return req.wait_result()
+
+    def cancel_remaining(self) -> int:
+        n = len(self._prepared)
+        self._prepared.clear()
+        return n
+
+    def drain(self) -> None:
+        pass
+
+
+class _WorkerPool:
+    """Shared worker-pool machinery (the 'io_workqueue')."""
+
+    def __init__(self, device: Device, workers: int):
+        self.device = device
+        self._q: "queue.Queue[Optional[List[IORequest]]]" = queue.Queue()
+        self._inflight = 0
+        self._lock = threading.Lock()
+        self._idle = threading.Condition(self._lock)
+        self._threads = [
+            threading.Thread(target=self._run, name=f"io_workqueue-{i}", daemon=True)
+            for i in range(workers)
+        ]
+        for t in self._threads:
+            t.start()
+        self._shutdown = False
+
+    def push_chain(self, chain: List[IORequest]) -> None:
+        with self._lock:
+            self._inflight += 1
+        self._q.put(chain)
+
+    def _run(self) -> None:
+        while True:
+            chain = self._q.get()
+            if chain is None:
+                return
+            try:
+                for req in chain:
+                    if req.state is ReqState.CANCELLED:
+                        continue
+                    req.state = ReqState.SUBMITTED
+                    try:
+                        req.finish(execute(self.device, req.sc, req.args))
+                    except BaseException as e:  # propagate to the waiter
+                        req.finish(error=e)
+                        # a failed link head breaks the chain (io_uring semantics)
+                        for rest in chain[chain.index(req) + 1 :]:
+                            rest.cancel()
+                        break
+            finally:
+                with self._lock:
+                    self._inflight -= 1
+                    if self._inflight == 0:
+                        self._idle.notify_all()
+
+    def drain(self) -> None:
+        with self._lock:
+            while self._inflight > 0:
+                self._idle.wait()
+
+    def shutdown(self) -> None:
+        if self._shutdown:
+            return
+        self._shutdown = True
+        for _ in self._threads:
+            self._q.put(None)
+        for t in self._threads:
+            t.join(timeout=5)
+
+
+class QueuePairBackend(Backend):
+    """io_uring analogue: SQ/CQ queue pair + in-process io_workqueue.
+
+    prepare() fills SQ entries with no crossings; submit_all() costs exactly
+    one boundary crossing for the whole batch; completions are harvested by
+    waiting on the request's event (CQ poll — no crossing).
+    """
+
+    name = "io_uring"
+
+    def __init__(self, device: Device, workers: int = 16):
+        super().__init__(device)
+        self._sq: List[IORequest] = []
+        self._pool = _WorkerPool(device, workers)
+        self._submitted: List[IORequest] = []
+
+    def prepare(self, req: IORequest) -> None:
+        self._sq.append(req)
+
+    def submit_all(self) -> int:
+        if not self._sq:
+            return 0
+        self.device.charge_crossing()  # the single io_uring_enter()
+        batch, self._sq = self._sq, []
+        # group linked runs: a req with link=True executes before its successor
+        chain: List[IORequest] = []
+        for req in batch:
+            chain.append(req)
+            if not req.link:
+                self._pool.push_chain(chain)
+                chain = []
+        if chain:  # trailing link=True at batch end — still a chain
+            self._pool.push_chain(chain)
+        self._submitted.extend(batch)
+        return len(batch)
+
+    def wait(self, req: IORequest):
+        return req.wait_result()
+
+    def cancel_remaining(self) -> int:
+        n = 0
+        for req in self._sq:
+            if req.cancel():
+                n += 1
+        self._sq.clear()
+        for req in self._submitted:
+            if req.cancel():
+                n += 1
+        return n
+
+    def drain(self) -> None:
+        self._pool.drain()
+        self._submitted = [r for r in self._submitted if not r.done.is_set()]
+
+    def shutdown(self) -> None:
+        self._pool.shutdown()
+
+
+class ThreadPoolBackend(Backend):
+    """User-level thread pool: same semantics, one crossing per request."""
+
+    name = "user_threads"
+
+    def __init__(self, device: Device, workers: int = 16):
+        super().__init__(device)
+        self._sq: List[IORequest] = []
+        self._pool = _WorkerPool(device, workers)
+        self._submitted: List[IORequest] = []
+
+    def prepare(self, req: IORequest) -> None:
+        self._sq.append(req)
+
+    def submit_all(self) -> int:
+        if not self._sq:
+            return 0
+        batch, self._sq = self._sq, []
+        chain: List[IORequest] = []
+        for req in batch:
+            self.device.charge_crossing()  # every request is its own syscall
+            chain.append(req)
+            if not req.link:
+                self._pool.push_chain(chain)
+                chain = []
+        if chain:
+            self._pool.push_chain(chain)
+        self._submitted.extend(batch)
+        return len(batch)
+
+    def wait(self, req: IORequest):
+        return req.wait_result()
+
+    def cancel_remaining(self) -> int:
+        n = 0
+        for req in self._sq:
+            if req.cancel():
+                n += 1
+        self._sq.clear()
+        for req in self._submitted:
+            if req.cancel():
+                n += 1
+        return n
+
+    def drain(self) -> None:
+        self._pool.drain()
+        self._submitted = [r for r in self._submitted if not r.done.is_set()]
+
+    def shutdown(self) -> None:
+        self._pool.shutdown()
+
+
+BACKENDS = {
+    "sync": SyncBackend,
+    "io_uring": QueuePairBackend,
+    "user_threads": ThreadPoolBackend,
+}
+
+
+def make_backend(name: str, device: Device, workers: int = 16) -> Backend:
+    cls = BACKENDS[name]
+    if cls is SyncBackend:
+        return cls(device)
+    return cls(device, workers=workers)

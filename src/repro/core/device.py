@@ -1,0 +1,434 @@
+"""Storage device layer.
+
+Foreactor's syscall nodes ultimately hit a storage device. On the paper's
+testbed that is a Toshiba NVMe SSD behind ext4; in this framework the same
+role is played by a ``Device`` object so that
+
+* ``OSDevice`` issues the real host syscalls (os.pread/os.pwrite/...), and
+* ``SimulatedDevice`` wraps any device with the paper's Fig.-1 cost model:
+  every operation occupies one of ``channels`` internal units for
+  ``base_latency + bytes * per_byte`` seconds.  This makes the storage-I/O-
+  parallelism effect (throughput scaling with queue depth until channels
+  saturate) deterministic and measurable inside a CI container whose page
+  cache would otherwise hide it.
+
+A *boundary crossing* models the user/kernel transition cost: io_uring-style
+backends pay one crossing per submitted batch, thread-pool/sync backends pay
+one per request (paper §2.3, Table 1).
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class DeviceStats:
+    """Operation counters, used by benchmarks and tests."""
+
+    ops: int = 0
+    read_bytes: int = 0
+    write_bytes: int = 0
+    crossings: int = 0
+    inflight: int = 0
+    max_inflight: int = 0
+    _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+
+    def op_begin(self) -> None:
+        with self._lock:
+            self.ops += 1
+            self.inflight += 1
+            self.max_inflight = max(self.max_inflight, self.inflight)
+
+    def op_end(self, read_bytes: int = 0, write_bytes: int = 0) -> None:
+        with self._lock:
+            self.inflight -= 1
+            self.read_bytes += read_bytes
+            self.write_bytes += write_bytes
+
+    def crossing(self) -> None:
+        with self._lock:
+            self.crossings += 1
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {
+                "ops": self.ops,
+                "read_bytes": self.read_bytes,
+                "write_bytes": self.write_bytes,
+                "crossings": self.crossings,
+                "max_inflight": self.max_inflight,
+            }
+
+
+class Device:
+    """Abstract storage device: the sink for all syscall nodes."""
+
+    stats: DeviceStats
+
+    def open(self, path: str, flags: str = "r") -> int:
+        raise NotImplementedError
+
+    def close(self, fd: int) -> None:
+        raise NotImplementedError
+
+    def pread(self, fd: int, size: int, offset: int) -> bytes:
+        raise NotImplementedError
+
+    def pwrite(self, fd: int, data: bytes, offset: int) -> int:
+        raise NotImplementedError
+
+    def fstatat(self, path: str) -> os.stat_result:
+        raise NotImplementedError
+
+    def getdents(self, path: str) -> List[str]:
+        raise NotImplementedError
+
+    def fsync(self, fd: int) -> None:
+        raise NotImplementedError
+
+    # cost hook for the user/kernel boundary; real devices pay it implicitly.
+    def charge_crossing(self) -> None:
+        self.stats.crossing()
+
+
+_FLAGS = {
+    "r": os.O_RDONLY,
+    "w": os.O_WRONLY | os.O_CREAT | os.O_TRUNC,
+    "rw": os.O_RDWR | os.O_CREAT,
+    "a": os.O_WRONLY | os.O_CREAT | os.O_APPEND,
+}
+
+
+class OSDevice(Device):
+    """Direct host filesystem device (real syscalls)."""
+
+    def __init__(self) -> None:
+        self.stats = DeviceStats()
+
+    def open(self, path: str, flags: str = "r") -> int:
+        self.stats.op_begin()
+        try:
+            if flags != "r":
+                parent = os.path.dirname(path)
+                if parent and not os.path.isdir(parent):
+                    os.makedirs(parent, exist_ok=True)
+            return os.open(path, _FLAGS[flags], 0o644)
+        finally:
+            self.stats.op_end()
+
+    def close(self, fd: int) -> None:
+        self.stats.op_begin()
+        try:
+            os.close(fd)
+        finally:
+            self.stats.op_end()
+
+    def pread(self, fd: int, size: int, offset: int) -> bytes:
+        self.stats.op_begin()
+        try:
+            data = os.pread(fd, size, offset)
+            return data
+        finally:
+            self.stats.op_end(read_bytes=size)
+
+    def pwrite(self, fd: int, data: bytes, offset: int) -> int:
+        self.stats.op_begin()
+        try:
+            return os.pwrite(fd, data, offset)
+        finally:
+            self.stats.op_end(write_bytes=len(data))
+
+    def fstatat(self, path: str) -> os.stat_result:
+        self.stats.op_begin()
+        try:
+            return os.stat(path)
+        finally:
+            self.stats.op_end()
+
+    def getdents(self, path: str) -> List[str]:
+        self.stats.op_begin()
+        try:
+            return sorted(os.listdir(path))
+        finally:
+            self.stats.op_end()
+
+    def fsync(self, fd: int) -> None:
+        self.stats.op_begin()
+        try:
+            os.fsync(fd)
+        finally:
+            self.stats.op_end()
+
+
+@dataclass(frozen=True)
+class DeviceProfile:
+    """Latency/parallelism profile (paper Fig. 1 / §6 experimental setup).
+
+    The default profile models the storage tier a TPU-pod *host* actually
+    talks to — a remote/parallel blob store (ms-scale per-op latency, high
+    aggregate parallelism).  Python's ``time.sleep`` granularity (~100 us)
+    makes microsecond-scale NVMe emulation unmeasurable in-process, so the
+    paper's 60 us-class NVMe profile is provided as :data:`NVME_PROFILE`
+    for reference but benchmarks default to :data:`REMOTE_PROFILE`.  The
+    *shape* of the effect (throughput scales with queue depth until the
+    device's internal parallelism saturates) is identical — only the time
+    constant changes.
+    """
+
+    channels: int = 16  # independent internal units (channels/dies/servers)
+    base_latency: float = 2e-3  # per-op command+seek time (seconds)
+    per_byte: float = 1.25e-9  # streaming cost per byte per channel (~800 MB/s)
+    crossing_cost: float = 5e-6  # one user/kernel boundary crossing
+    metadata_latency: float = 1.5e-3  # fstat/getdents/open service time
+
+
+#: default: remote blob / parallel-FS tier of a training cluster
+REMOTE_PROFILE = DeviceProfile()
+
+#: the paper's Toshiba NVMe (~60 MB/s @ QD1/4 KB => ~66 us/op; ~1.2 GB/s peak).
+#: Useful for unit tests of the cost model, too fine-grained to benchmark
+#: under Python sleep granularity.
+NVME_PROFILE = DeviceProfile(
+    channels=16,
+    base_latency=60e-6,
+    per_byte=1.2e-9,
+    crossing_cost=2.5e-6,
+    metadata_latency=40e-6,
+)
+
+
+class _PageCacheModel:
+    """A tiny LRU model of the kernel page cache (paper §6.3 varies its
+    capacity via cgroups).  Cache hits serve data without charging device
+    latency — the syscall still happens, it is just fast."""
+
+    def __init__(self, capacity_bytes: int, page: int = 4096):
+        from collections import OrderedDict
+
+        self.page = page
+        self.capacity_pages = max(1, capacity_bytes // page)
+        self._lru: "OrderedDict[tuple, bool]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def _pages(self, path: str, offset: int, size: int):
+        first = offset // self.page
+        last = (offset + max(size, 1) - 1) // self.page
+        return [(path, i) for i in range(first, last + 1)]
+
+    def access(self, path: str, offset: int, size: int, insert: bool = True) -> bool:
+        """True iff fully cached; inserts pages (LRU evict) either way."""
+        keys = self._pages(path, offset, size)
+        with self._lock:
+            hit = all(k in self._lru for k in keys)
+            if insert:
+                for k in keys:
+                    if k in self._lru:
+                        self._lru.move_to_end(k)
+                    else:
+                        self._lru[k] = True
+                        if len(self._lru) > self.capacity_pages:
+                            self._lru.popitem(last=False)
+            if hit:
+                self.hits += 1
+            else:
+                self.misses += 1
+            return hit
+
+
+class SimulatedDevice(Device):
+    """Wraps an inner device with a K-channel latency model.
+
+    Each operation holds one channel slot while it 'executes', so wall time
+    improves with concurrency up to ``channels`` — the storage-I/O-parallelism
+    effect the paper exploits.  The data itself is served by the inner device
+    (correctness is real; only timing is synthetic).  ``cache_bytes`` > 0
+    enables the page-cache model: cached preads skip the latency charge.
+    """
+
+    def __init__(
+        self,
+        inner: Optional[Device] = None,
+        profile: DeviceProfile = DeviceProfile(),
+        cache_bytes: int = 0,
+    ):
+        self.inner = inner if inner is not None else OSDevice()
+        self.profile = profile
+        self.stats = DeviceStats()
+        self._channels = threading.Semaphore(profile.channels)
+        self.cache = _PageCacheModel(cache_bytes) if cache_bytes > 0 else None
+        self._fd_paths: Dict[int, str] = {}
+        self._fd_lock = threading.Lock()
+
+    def _service(self, nbytes: int, metadata: bool = False) -> None:
+        p = self.profile
+        dur = p.metadata_latency if metadata else p.base_latency + nbytes * p.per_byte
+        with self._channels:
+            time.sleep(dur)
+
+    def charge_crossing(self) -> None:
+        self.stats.crossing()
+        time.sleep(self.profile.crossing_cost)
+
+    def _path_of(self, fd: int) -> str:
+        with self._fd_lock:
+            return self._fd_paths.get(fd, f"<fd:{fd}>")
+
+    def open(self, path: str, flags: str = "r") -> int:
+        self.stats.op_begin()
+        try:
+            self._service(0, metadata=True)
+            fd = self.inner.open(path, flags)
+            with self._fd_lock:
+                self._fd_paths[fd] = path
+            return fd
+        finally:
+            self.stats.op_end()
+
+    def close(self, fd: int) -> None:
+        self.stats.op_begin()
+        try:
+            with self._fd_lock:
+                self._fd_paths.pop(fd, None)
+            return self.inner.close(fd)
+        finally:
+            self.stats.op_end()
+
+    def pread(self, fd: int, size: int, offset: int) -> bytes:
+        self.stats.op_begin()
+        try:
+            cached = self.cache is not None and self.cache.access(
+                self._path_of(fd), offset, size
+            )
+            if not cached:
+                self._service(size)
+            return self.inner.pread(fd, size, offset)
+        finally:
+            self.stats.op_end(read_bytes=size)
+
+    def pwrite(self, fd: int, data: bytes, offset: int) -> int:
+        self.stats.op_begin()
+        try:
+            if self.cache is not None:
+                self.cache.access(self._path_of(fd), offset, len(data))
+            self._service(len(data))
+            return self.inner.pwrite(fd, data, offset)
+        finally:
+            self.stats.op_end(write_bytes=len(data))
+
+    def fstatat(self, path: str) -> os.stat_result:
+        self.stats.op_begin()
+        try:
+            self._service(0, metadata=True)
+            return self.inner.fstatat(path)
+        finally:
+            self.stats.op_end()
+
+    def getdents(self, path: str) -> List[str]:
+        self.stats.op_begin()
+        try:
+            self._service(0, metadata=True)
+            return self.inner.getdents(path)
+        finally:
+            self.stats.op_end()
+
+    def fsync(self, fd: int) -> None:
+        self.stats.op_begin()
+        try:
+            self._service(0, metadata=True)
+            return self.inner.fsync(fd)
+        finally:
+            self.stats.op_end()
+
+
+class MemDevice(Device):
+    """In-memory device for fast unit tests (no host FS, no latency)."""
+
+    def __init__(self) -> None:
+        self.stats = DeviceStats()
+        self._files: Dict[str, bytearray] = {}
+        self._fds: Dict[int, str] = {}
+        self._next_fd = 100
+        self._lock = threading.Lock()
+
+    def open(self, path: str, flags: str = "r") -> int:
+        self.stats.op_begin()
+        try:
+            with self._lock:
+                if flags in ("w",):
+                    self._files[path] = bytearray()
+                elif path not in self._files:
+                    if flags == "r":
+                        raise FileNotFoundError(path)
+                    self._files[path] = bytearray()
+                fd = self._next_fd
+                self._next_fd += 1
+                self._fds[fd] = path
+                return fd
+        finally:
+            self.stats.op_end()
+
+    def close(self, fd: int) -> None:
+        self.stats.op_begin()
+        try:
+            with self._lock:
+                self._fds.pop(fd, None)
+        finally:
+            self.stats.op_end()
+
+    def pread(self, fd: int, size: int, offset: int) -> bytes:
+        self.stats.op_begin()
+        try:
+            with self._lock:
+                buf = self._files[self._fds[fd]]
+                return bytes(buf[offset : offset + size])
+        finally:
+            self.stats.op_end(read_bytes=size)
+
+    def pwrite(self, fd: int, data: bytes, offset: int) -> int:
+        self.stats.op_begin()
+        try:
+            with self._lock:
+                buf = self._files[self._fds[fd]]
+                if len(buf) < offset + len(data):
+                    buf.extend(b"\x00" * (offset + len(data) - len(buf)))
+                buf[offset : offset + len(data)] = data
+                return len(data)
+        finally:
+            self.stats.op_end(write_bytes=len(data))
+
+    def fstatat(self, path: str):
+        self.stats.op_begin()
+        try:
+            with self._lock:
+                if path not in self._files:
+                    raise FileNotFoundError(path)
+                size = len(self._files[path])
+
+            class _Stat:
+                st_size = size
+                st_mode = 0o100644
+
+            return _Stat()
+        finally:
+            self.stats.op_end()
+
+    def getdents(self, path: str) -> List[str]:
+        self.stats.op_begin()
+        try:
+            prefix = path.rstrip("/") + "/"
+            with self._lock:
+                names = {p[len(prefix) :].split("/")[0] for p in self._files if p.startswith(prefix)}
+            return sorted(names)
+        finally:
+            self.stats.op_end()
+
+    def fsync(self, fd: int) -> None:
+        self.stats.op_begin()
+        self.stats.op_end()

@@ -1,0 +1,256 @@
+"""The pre-issuing engine (paper §5.2, Algorithm 1) and per-invocation
+speculation sessions.
+
+A ``SpecSession`` is the per-thread, per-invocation instance of a foreaction
+graph.  Every intercepted I/O call:
+
+1. peeks up to ``depth`` successor nodes in execution order, computing
+   argument values explicitly and *preparing* every node that is safe —
+   pure nodes always, non-pure nodes only when no weak edge lies on the
+   path from the frontier (paper §3.3: no unrecoverable side effects);
+2. submits all prepared entries as one batch to the backend;
+3. serves the frontier itself — harvesting the async completion if it was
+   pre-issued, else invoking it synchronously — and runs its SaveResult
+   stub exactly once;
+4. advances the frontier.
+
+On function exit, remaining speculative requests are cancelled and the
+backend drained (the cancellation overhead of paper Fig. 10).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+from .backends import Backend
+from .device import Device
+from .graph import BranchNode, Edge, ForeactionGraph, FromNode, SyscallNode
+from .syscalls import FromRequest, IORequest, ReqState, Sys, execute, is_pure
+
+
+@dataclass
+class Cursor:
+    """A dynamic position in the graph: node (or None == End) + epoch vector."""
+
+    node: Optional[object]  # SyscallNode | BranchNode | None
+    epochs: Tuple[int, ...]
+    weak_crossed: bool = False  # a weak edge was crossed getting here (peek only)
+
+
+@dataclass
+class NodeState:
+    issued: bool = False
+    req: Optional[IORequest] = None
+    harvested: bool = False
+
+
+@dataclass
+class SessionStats:
+    intercepted: int = 0
+    untracked: int = 0
+    pre_issued: int = 0
+    served_async: int = 0
+    served_sync: int = 0
+    cancelled: int = 0
+    wasted_completions: int = 0
+    peek_seconds: float = 0.0
+    wait_seconds: float = 0.0
+    sync_seconds: float = 0.0
+    harvest_seconds: float = 0.0
+
+    def merge(self, other: "SessionStats") -> None:
+        for f in (
+            "intercepted", "untracked", "pre_issued", "served_async", "served_sync",
+            "cancelled", "wasted_completions",
+        ):
+            setattr(self, f, getattr(self, f) + getattr(other, f))
+        for f in ("peek_seconds", "wait_seconds", "sync_seconds", "harvest_seconds"):
+            setattr(self, f, getattr(self, f) + getattr(other, f))
+
+
+class GraphMismatch(RuntimeError):
+    """The intercepted syscall does not match the foreaction graph."""
+
+
+class SpecSession:
+    """One activation of a registered function on one thread."""
+
+    def __init__(
+        self,
+        graph: ForeactionGraph,
+        ctx: Dict[str, Any],
+        backend: Backend,
+        device: Device,
+        depth: int = 8,
+        strict: bool = True,
+    ):
+        self.graph = graph
+        self.ctx = ctx
+        self.backend = backend
+        self.device = device
+        self.depth = depth
+        self.strict = strict
+        self.stats = SessionStats()
+        self._state: Dict[Tuple[str, Tuple[int, ...]], NodeState] = {}
+        self._cursor = Cursor(node=graph.start.dst, epochs=graph.initial_epochs(),
+                              weak_crossed=graph.start.weak)
+        self._finished = False
+
+    # -- cursor movement ---------------------------------------------------
+    @staticmethod
+    def _follow(edge: Edge, epochs: Tuple[int, ...], weak: bool) -> Cursor:
+        if edge.loop_id is not None:
+            lst = list(epochs)
+            lst[edge.loop_id] += 1
+            epochs = tuple(lst)
+        return Cursor(node=edge.dst, epochs=epochs, weak_crossed=weak or edge.weak)
+
+    def _resolve_branches(self, cur: Cursor) -> Optional[Cursor]:
+        """Follow branch nodes whose Choice is ready; None if a choice is
+        not ready (peek must stop there)."""
+        while isinstance(cur.node, BranchNode):
+            idx = cur.node.choose(self.ctx, cur.epochs)
+            if idx is None:
+                return None
+            edge = cur.node.children[idx]
+            cur = self._follow(edge, cur.epochs, cur.weak_crossed)
+        return cur
+
+    def _node_state(self, node: SyscallNode, epochs: Tuple[int, ...]) -> NodeState:
+        key = (node.name, epochs)
+        st = self._state.get(key)
+        if st is None:
+            st = NodeState()
+            self._state[key] = st
+        return st
+
+    # -- Algorithm 1 --------------------------------------------------------
+    def _peek_and_preissue(self) -> None:
+        """Peek up to ``depth`` nodes beyond the frontier; prepare the safe
+        ones; submit the batch (one crossing on the queue-pair backend)."""
+        t0 = time.perf_counter()
+        frontier = self._cursor
+        assert isinstance(frontier.node, SyscallNode)
+        # n = frontier.next  (weak flag of the frontier's own out edge counts)
+        cur = self._follow(frontier.node.out, frontier.epochs, False)
+        depth = self.depth
+        prepared_any = False
+        while depth > 0 and cur.node is not None:
+            cur2 = self._resolve_branches(cur)
+            if cur2 is None:  # branch decision not ready: stop peeking
+                break
+            cur = cur2
+            if cur.node is None:  # reached End
+                break
+            node: SyscallNode = cur.node
+            st = self._node_state(node, cur.epochs)
+            if not st.issued:
+                out = node.compute_args(self.ctx, cur.epochs)
+                if out is not None:
+                    args, link = out
+                    args = self._bind_deferred(args, cur.epochs)
+                    if args is not None:
+                        pure = is_pure(node.sc, args)
+                        if pure or not cur.weak_crossed:
+                            req = IORequest(sc=node.sc, args=args, link=link,
+                                            tag=(node.name, cur.epochs))
+                            self.backend.prepare(req)
+                            st.issued = True
+                            st.req = req
+                            self.stats.pre_issued += 1
+                            prepared_any = True
+            cur = self._follow(node.out, cur.epochs, cur.weak_crossed)
+            depth -= 1
+        if prepared_any:
+            self.backend.submit_all()
+        self.stats.peek_seconds += time.perf_counter() - t0
+
+    def _bind_deferred(self, args, epochs):
+        """Rewrite FromNode placeholders to the producer's request at the
+        same epoch; None if a producer has not been pre-issued (not ready)."""
+        if not any(isinstance(a, FromNode) for a in args):
+            return args
+        bound = []
+        for a in args:
+            if isinstance(a, FromNode):
+                st = self._state.get((a.name, epochs))
+                if st is None or st.req is None:
+                    return None
+                bound.append(FromRequest(st.req))
+            else:
+                bound.append(a)
+        return tuple(bound)
+
+    def intercept(self, sc: Sys, args: Tuple[Any, ...]) -> Any:
+        """Entry point for every I/O call made while this session is active."""
+        if self._finished:
+            return self._exec_untracked(sc, args)
+        self.stats.intercepted += 1
+        # resolve the frontier: real execution has passed any branch points,
+        # so their Choice stubs must now be decidable.
+        cur = self._resolve_branches(self._cursor)
+        if cur is None or cur.node is None or not isinstance(cur.node, SyscallNode) \
+                or cur.node.sc is not sc:
+            # Syscall not described by the graph (e.g. the omitted rare
+            # `open` branch in the paper's LSM graph): pass through.
+            if self.strict and cur is not None and cur.node is not None \
+                    and isinstance(cur.node, SyscallNode) and cur.node.sc is not sc:
+                raise GraphMismatch(
+                    f"graph {self.graph.name!r}: expected {cur.node.sc} at node "
+                    f"{cur.node.name!r}, application issued {sc}"
+                )
+            return self._exec_untracked(sc, args)
+        self._cursor = Cursor(node=cur.node, epochs=cur.epochs, weak_crossed=False)
+        frontier: SyscallNode = cur.node
+
+        # 1-2. peek + batch submit (overlaps with serving the frontier below)
+        self._peek_and_preissue()
+
+        # 3. serve the frontier
+        st = self._node_state(frontier, cur.epochs)
+        if st.issued and st.req is not None and st.req.state is not ReqState.CANCELLED:
+            t0 = time.perf_counter()
+            result = self.backend.wait(st.req)
+            self.stats.wait_seconds += time.perf_counter() - t0
+            self.stats.served_async += 1
+            # copy the internal buffer back to the caller (paper Fig. 10
+            # 'result copy' overhead) — bytes results are memcpy'd.
+            t0 = time.perf_counter()
+            if isinstance(result, bytes):
+                result = bytes(result)
+            self.stats.harvest_seconds += time.perf_counter() - t0
+        else:
+            t0 = time.perf_counter()
+            self.device.charge_crossing()
+            result = execute(self.device, sc, args)
+            self.stats.sync_seconds += time.perf_counter() - t0
+            self.stats.served_sync += 1
+            st.issued = True
+        if frontier.save_result is not None and not st.harvested:
+            frontier.save_result(self.ctx, cur.epochs, result)
+        st.harvested = True
+
+        # 4. advance the frontier
+        self._cursor = self._follow(frontier.out, cur.epochs, False)
+        return result
+
+    def _exec_untracked(self, sc: Sys, args: Tuple[Any, ...]) -> Any:
+        self.stats.untracked += 1
+        self.device.charge_crossing()
+        return execute(self.device, sc, args)
+
+    # -- teardown ------------------------------------------------------------
+    def finish(self) -> SessionStats:
+        """Cancel in-flight speculation and account for wasted work."""
+        if self._finished:
+            return self.stats
+        self._finished = True
+        self.stats.cancelled += self.backend.cancel_remaining()
+        self.backend.drain()
+        for st in self._state.values():
+            if st.issued and not st.harvested and st.req is not None \
+                    and st.req.state is ReqState.COMPLETED:
+                self.stats.wasted_completions += 1
+        return self.stats

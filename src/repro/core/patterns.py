@@ -1,0 +1,165 @@
+"""Reusable foreaction-graph patterns.
+
+The paper's case-study graphs (Fig. 4) reduce to a handful of loop shapes.
+The framework's own substrates (data pipeline, checkpointing) instantiate
+these generic builders instead of hand-drawing a graph per call site:
+
+* ``build_stat_list_graph``     — fstatat over a path list (du shape, Fig. 4a)
+* ``build_pread_extents_graph`` — pread over (fd, size, offset) extents
+* ``build_pwrite_extents_graph``— pwrite over (fd, data|thunk, offset) extents
+  (guaranteed writes: strong edges throughout)
+* ``build_copy_extents_graph``  — Link'ed pread->pwrite pairs (cp shape, Fig. 4b)
+
+ctx conventions are documented per builder.  Results are harvested into
+ctx lists so wrapped functions can also consume them if desired.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from .graph import ForeactionGraph, FromNode, GraphBuilder
+from .syscalls import Sys
+
+
+def build_stat_list_graph(name: str = "stat_list") -> ForeactionGraph:
+    """ctx: {"paths": [str]}; harvests into ctx["stats"] (dict e -> stat)."""
+    b = GraphBuilder(name)
+
+    def args(ctx, ep):
+        paths = ctx["paths"]
+        return ((paths[ep[0]],), False) if ep[0] < len(paths) else None
+
+    def save(ctx, ep, rc):
+        ctx.setdefault("stats", {})[ep[0]] = rc
+
+    def head(ctx, ep):
+        return 0 if len(ctx["paths"]) > 0 else 1
+
+    def more(ctx, ep):
+        return 0 if ep[0] + 1 < len(ctx["paths"]) else 1
+
+    b.AddBranchingNode("any", head)
+    b.AddSyscallNode("fstat", Sys.FSTATAT, args, save)
+    b.AddBranchingNode("more", more)
+    b.SetStart("any")
+    b.BranchAppendChild("any", "fstat")
+    b.BranchAppendChild("any", None)
+    b.SyscallSetNext("fstat", "more")
+    b.BranchAppendChild("more", "fstat", loopback=True)
+    b.BranchAppendChild("more", None)
+    return b.Build()
+
+
+def build_pread_extents_graph(name: str = "pread_extents") -> ForeactionGraph:
+    """ctx: {"extents": [(fd, size, offset)]}; pure read loop."""
+    b = GraphBuilder(name)
+
+    def args(ctx, ep):
+        ext = ctx["extents"]
+        return ((ext[ep[0]]), False) if ep[0] < len(ext) else None
+
+    def head(ctx, ep):
+        return 0 if len(ctx["extents"]) > 0 else 1
+
+    def more(ctx, ep):
+        return 0 if ep[0] + 1 < len(ctx["extents"]) else 1
+
+    b.AddBranchingNode("any", head)
+    b.AddSyscallNode("pread", Sys.PREAD, args)
+    b.AddBranchingNode("more", more)
+    b.SetStart("any")
+    b.BranchAppendChild("any", "pread")
+    b.BranchAppendChild("any", None)
+    b.SyscallSetNext("pread", "more")
+    b.BranchAppendChild("more", "pread", loopback=True)
+    b.BranchAppendChild("more", None)
+    return b.Build()
+
+
+def build_pwrite_extents_graph(name: str = "pwrite_extents") -> ForeactionGraph:
+    """ctx: {"writes": [(fd, data|()->data, offset)]}; guaranteed writes.
+
+    ``data`` may be a zero-arg thunk — the Compute annotation materializes
+    the bytes at pre-issue time (computation pulled ahead of the frontier,
+    §3.2 'any necessary computation required to produce argument values')."""
+    b = GraphBuilder(name)
+
+    def args(ctx, ep):
+        ws = ctx["writes"]
+        if ep[0] >= len(ws):
+            return None
+        fd, data, off = ws[ep[0]]
+        if callable(data):
+            data = data()
+        return ((fd, data, off), False)
+
+    def head(ctx, ep):
+        return 0 if len(ctx["writes"]) > 0 else 1
+
+    def more(ctx, ep):
+        return 0 if ep[0] + 1 < len(ctx["writes"]) else 1
+
+    b.AddBranchingNode("any", head)
+    b.AddSyscallNode("pwrite", Sys.PWRITE, args)
+    b.AddBranchingNode("more", more)
+    b.SetStart("any")
+    b.BranchAppendChild("any", "pwrite")
+    b.BranchAppendChild("any", None)
+    b.SyscallSetNext("pwrite", "more")
+    b.BranchAppendChild("more", "pwrite", loopback=True)
+    b.BranchAppendChild("more", None)
+    return b.Build()
+
+
+def build_copy_extents_graph(name: str = "copy_extents") -> ForeactionGraph:
+    """ctx: {"pairs": [(src_fd, dst_fd, size, offset)]}; each iteration is a
+    Link'ed pread->pwrite — the write consumes the read's internal buffer
+    with no intermediate copy (Fig. 4b)."""
+    b = GraphBuilder(name)
+
+    def rargs(ctx, ep):
+        ps = ctx["pairs"]
+        if ep[0] >= len(ps):
+            return None
+        sfd, _dfd, size, off = ps[ep[0]]
+        return ((sfd, size, off), True)  # Link with the following pwrite
+
+    def wargs(ctx, ep):
+        ps = ctx["pairs"]
+        if ep[0] >= len(ps):
+            return None
+        _sfd, dfd, _size, off = ps[ep[0]]
+        return ((dfd, FromNode("pread"), off), False)
+
+    def head(ctx, ep):
+        return 0 if len(ctx["pairs"]) > 0 else 1
+
+    def more(ctx, ep):
+        return 0 if ep[0] + 1 < len(ctx["pairs"]) else 1
+
+    b.AddBranchingNode("any", head)
+    b.AddSyscallNode("pread", Sys.PREAD, rargs)
+    b.AddSyscallNode("pwrite", Sys.PWRITE, wargs)
+    b.AddBranchingNode("more", more)
+    b.SetStart("any")
+    b.BranchAppendChild("any", "pread")
+    b.BranchAppendChild("any", None)
+    b.SyscallSetNext("pread", "pwrite")
+    b.SyscallSetNext("pwrite", "more")
+    b.BranchAppendChild("more", "pread", loopback=True)
+    b.BranchAppendChild("more", None)
+    return b.Build()
+
+
+PATTERNS: Dict[str, Callable[[], ForeactionGraph]] = {
+    "stat_list": build_stat_list_graph,
+    "pread_extents": build_pread_extents_graph,
+    "pwrite_extents": build_pwrite_extents_graph,
+    "copy_extents": build_copy_extents_graph,
+}
+
+
+def register_patterns(fa) -> None:
+    for name, builder in PATTERNS.items():
+        fa.register(name, builder)

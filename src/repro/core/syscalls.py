@@ -1,0 +1,133 @@
+"""Typed syscall descriptors and I/O request records (paper §3.2).
+
+A syscall node is *pure* if it is read-only — its only side effect is
+possibly bringing data into the OS page cache (pread, fstat, getdents,
+read-only open).  Non-pure syscalls (pwrite, creating opens, close, fsync)
+leave permanent side effects and may only be pre-issued when guaranteed to
+happen (no weak edge on the path from the frontier — paper §3.3).
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Any, Optional, Tuple
+
+
+class Sys(Enum):
+    OPEN = "open"
+    CLOSE = "close"
+    PREAD = "pread"
+    PWRITE = "pwrite"
+    FSTATAT = "fstatat"
+    GETDENTS = "getdents"
+    FSYNC = "fsync"
+
+
+#: read-only syscalls with no externally visible side effect
+PURE: frozenset = frozenset({Sys.PREAD, Sys.FSTATAT, Sys.GETDENTS})
+
+
+def is_pure(sc: Sys, args: Tuple[Any, ...]) -> bool:
+    """open(path, 'r') allocates an fd but leaves no persistent state and is
+    cancellable via close; creating/truncating opens are non-pure."""
+    if sc in PURE:
+        return True
+    if sc is Sys.OPEN:
+        return len(args) < 2 or args[1] == "r"
+    return False
+
+
+class FromRequest:
+    """Deferred argument: the result of another (linked) request.
+
+    Used by Link'ed read->write pairs (paper §4.1, Fig. 4b): the pwrite's
+    data argument *is* the internal buffer the linked pread populates, with
+    no intermediate copy.  Linked chains run in order on one worker, so the
+    producer has completed by the time the consumer executes.
+    """
+
+    def __init__(self, req: "IORequest"):
+        self.req = req
+
+    def resolve(self):
+        # The producer may have been submitted in an earlier batch and still
+        # be in flight; block until it completes.  (Inside a Link chain the
+        # producer has necessarily finished already.)
+        self.req.done.wait()
+        if self.req.error is not None:
+            raise self.req.error
+        if self.req.result is None and self.req.state.name == "CANCELLED":
+            raise RuntimeError("deferred argument's producer was cancelled")
+        return self.req.result
+
+
+def resolve_args(args: Tuple[Any, ...]) -> Tuple[Any, ...]:
+    return tuple(a.resolve() if isinstance(a, FromRequest) else a for a in args)
+
+
+def execute(device, sc: Sys, args: Tuple[Any, ...]):
+    """Dispatch a syscall descriptor against a Device."""
+    args = resolve_args(args)
+    if sc is Sys.OPEN:
+        return device.open(*args)
+    if sc is Sys.CLOSE:
+        return device.close(*args)
+    if sc is Sys.PREAD:
+        return device.pread(*args)
+    if sc is Sys.PWRITE:
+        return device.pwrite(*args)
+    if sc is Sys.FSTATAT:
+        return device.fstatat(*args)
+    if sc is Sys.GETDENTS:
+        return device.getdents(*args)
+    if sc is Sys.FSYNC:
+        return device.fsync(*args)
+    raise ValueError(f"unknown syscall {sc}")
+
+
+class ReqState(Enum):
+    PREPARED = 0  # in the submission queue, not yet visible to the 'kernel'
+    SUBMITTED = 1  # picked up by the io_workqueue
+    COMPLETED = 2  # result in the completion queue
+    CANCELLED = 3  # cancelled before execution (early function exit)
+
+
+@dataclass
+class IORequest:
+    """One entry in the submission queue.
+
+    ``link`` forces this request to be executed before the next one in the
+    same submitted batch on the same worker (io_uring IOSQE_IO_LINK).
+    """
+
+    sc: Sys
+    args: Tuple[Any, ...]
+    link: bool = False
+    tag: Any = None  # (node id, epoch) — used by the engine to find it again
+    state: ReqState = ReqState.PREPARED
+    result: Any = None
+    error: Optional[BaseException] = None
+    done: threading.Event = field(default_factory=threading.Event, repr=False)
+
+    def finish(self, result: Any = None, error: Optional[BaseException] = None) -> None:
+        self.result = result
+        self.error = error
+        self.state = ReqState.COMPLETED
+        self.done.set()
+
+    def cancel(self) -> bool:
+        if self.state is ReqState.PREPARED:
+            self.state = ReqState.CANCELLED
+            self.done.set()
+            return True
+        return False
+
+    def wait_result(self):
+        self.done.wait()
+        if self.error is not None:
+            raise self.error
+        if self.state is ReqState.CANCELLED:
+            raise RuntimeError("waited on a cancelled I/O request")
+        return self.result

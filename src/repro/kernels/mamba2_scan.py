@@ -1,0 +1,155 @@
+"""Chunked Mamba2 (SSD) scan kernel for TPU.
+
+The SSD recurrence  h_t = exp(dt_t A) h_{t-1} + dt_t x_t B_t^T,
+y_t = h_t C_t  is sequential per token — useless for the MXU.  The chunked
+decomposition turns it into dense per-chunk matmuls plus a tiny sequential
+state carry:
+
+  grid (B, head_blocks, num_chunks), chunks innermost (TPU grids iterate
+  the last axis sequentially), state (hb, P, N) carried in VMEM scratch:
+
+  * intra-chunk:  y[t] += sum_{s<=t} exp(cs_t - cs_s) dt_s (C_t . B_s) x_s
+    — an (L x L) per-head-weighted matmul against x (MXU work; the decay
+    exponents are differences of an inclusive cumsum, always <= 0, so the
+    exponentials are numerically safe);
+  * state in:     y[t] += exp(cs_t) C_t . h
+  * state out:    h' = exp(cs_L) h + sum_s exp(cs_L - cs_s) dt_s B_s x_s^T
+
+B/C are shared across the ``rep = H // G`` heads of a group; the BlockSpec
+index map points every head block at its group's B/C block (no repeat in
+HBM).  Requires ``head_block`` to divide ``rep`` when G < H.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mamba2_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, h0_ref,
+                   y_ref, hfin_ref, state_scr, *,
+                   chunk: int, num_chunks: int, gb: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = h0_ref[0].astype(jnp.float32)
+
+    x = x_ref[0].astype(jnp.float32)     # (L, hb, P)
+    dt = dt_ref[0].astype(jnp.float32)   # (L, hb)
+    A = a_ref[...].astype(jnp.float32)   # (hb,)
+    bb = b_ref[0].astype(jnp.float32)    # (L, gb, N)
+    cb = c_ref[0].astype(jnp.float32)    # (L, gb, N)
+    L, hb, P = x.shape
+
+    a = dt * A[None, :]                  # (L, hb) log-decays, <= 0
+    cs = jnp.cumsum(a, axis=0)           # inclusive
+    total = cs[-1]                       # (hb,)
+
+    # (L, L, gb) group-shared C.B inner products — MXU matmuls per group
+    CB = jax.lax.dot_general(
+        cb.transpose(1, 0, 2), bb.transpose(1, 0, 2),
+        (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)          # (gb, Lt, Ls)
+    CB = CB.transpose(1, 2, 0)                        # (Lt, Ls, gb)
+    if gb == 1:
+        CB = jnp.broadcast_to(CB, (L, L, hb))
+
+    tril = (jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+            >= jax.lax.broadcasted_iota(jnp.int32, (L, L), 1))
+    decay = jnp.where(tril[:, :, None],
+                      jnp.exp(cs[:, None, :] - cs[None, :, :]), 0.0)  # (Lt,Ls,hb)
+    w = decay * CB * dt[None, :, :]                   # (Lt, Ls, hb)
+    # y_intra[t,h,p] = sum_s w[t,s,h] x[s,h,p]
+    y = jax.lax.dot_general(
+        w.transpose(2, 0, 1), x.transpose(1, 0, 2),
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)           # (hb, Lt, P)
+    y = y.transpose(1, 0, 2)                          # (L, hb, P)
+
+    # carried-in state: y[t,h,p] += exp(cs[t,h]) sum_n C[t,g,n] h[h,p,n]
+    h = state_scr[...]                                # (hb, P, N)
+    cb_h = cb if gb > 1 else jnp.broadcast_to(cb, (L, hb, cb.shape[-1]))
+    y_state = jax.lax.dot_general(
+        cb_h.transpose(1, 0, 2), h,
+        (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)           # (hb, L, P)
+    y += y_state.transpose(1, 0, 2) * jnp.exp(cs)[:, :, None]
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # state update
+    wst = jnp.exp(total[None, :] - cs) * dt           # (L, hb)
+    bb_h = bb if gb > 1 else jnp.broadcast_to(bb, (L, hb, bb.shape[-1]))
+    xw = x * wst[:, :, None]                          # (L, hb, P)
+    upd = jax.lax.dot_general(
+        xw.transpose(1, 2, 0), bb_h.transpose(1, 0, 2),
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)           # (hb, P, N)
+    state_scr[...] = h * jnp.exp(total)[:, None, None] + upd
+
+    @pl.when(ci == num_chunks - 1)
+    def _finalize():
+        hfin_ref[0] = state_scr[...]
+
+
+def mamba2_scan(
+    x: jax.Array,   # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)
+    A: jax.Array,   # (H,)
+    Bm: jax.Array,  # (B, S, G, N)
+    Cm: jax.Array,  # (B, S, G, N)
+    h0: Optional[jax.Array] = None,  # (B, H, P, N)
+    chunk: int = 128,
+    head_block: int = 8,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    if H % G:
+        raise ValueError("H must be a multiple of G")
+    rep = H // G
+    chunk = min(chunk, S)
+    if S % chunk:
+        raise ValueError("S must divide chunk")
+    nc = S // chunk
+    hb = min(head_block, H)
+    if H % hb:
+        raise ValueError("H must divide head_block")
+    if rep > 1 and rep % hb:
+        raise ValueError("head_block must divide H//G")
+    gb = hb if rep == 1 else 1
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+
+    def g_index(b, hi, ci):
+        return (b, ci, (hi * hb) // rep if rep > 1 else hi, 0)
+
+    kernel = functools.partial(_mamba2_kernel, chunk=chunk, num_chunks=nc, gb=gb)
+    y, hfin = pl.pallas_call(
+        kernel,
+        grid=(B, H // hb, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, hb, P), lambda b, hi, ci: (b, ci, hi, 0)),
+            pl.BlockSpec((1, chunk, hb), lambda b, hi, ci: (b, ci, hi)),
+            pl.BlockSpec((hb,), lambda b, hi, ci: (hi,)),
+            pl.BlockSpec((1, chunk, gb, N), g_index),
+            pl.BlockSpec((1, chunk, gb, N), g_index),
+            pl.BlockSpec((1, hb, P, N), lambda b, hi, ci: (b, hi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, hb, P), lambda b, hi, ci: (b, ci, hi, 0)),
+            pl.BlockSpec((1, hb, P, N), lambda b, hi, ci: (b, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hb, P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm, h0)
+    return y, hfin

@@ -1,0 +1,141 @@
+"""Chunked RWKV6 (Finch) WKV kernel for TPU.
+
+Per head, the recurrence over a (K x V) state S with per-channel
+data-dependent log-decay w_t (<= 0) and a current-token bonus u:
+
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(exp(w_t)) S_{t-1} + k_t v_t^T
+
+Chunked form, grid ``(B, H, num_chunks)`` (chunks innermost/sequential,
+state carried in VMEM scratch):
+
+* state-in term:  (r_t * exp(cw_excl_t)) @ S            — (L,K)x(K,V) MXU
+* intra-chunk:    pair blocks (Ls x Ls): the decay between positions t>s is
+  exp(cw_excl_t - cw_s), a *negative* exponent (difference of inclusive
+  cumsums inside the chunk), computed directly per (t, s, k) sub-block —
+  numerically safe for any w, unlike the r*exp(cw), k*exp(-cw)
+  factorization which overflows for strongly-decaying channels.
+* diagonal bonus: sum_k r*u*k per token.
+* state-out:      S' = diag(exp(cw_L)) S + (k * exp(cw_L - cw))^T @ v — MXU.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rwkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
+                  y_ref, sfin_ref, state_scr, *,
+                  chunk: int, sub: int, num_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, :, 0].astype(jnp.float32)  # (L, K)
+    k = k_ref[0, :, 0].astype(jnp.float32)  # (L, K)
+    v = v_ref[0, :, 0].astype(jnp.float32)  # (L, V)
+    w = w_ref[0, :, 0].astype(jnp.float32)  # (L, K) log-decay <= 0
+    u = u_ref[0].astype(jnp.float32)        # (K,)
+    L = r.shape[0]
+
+    cw = jnp.cumsum(w, axis=0)   # inclusive
+    cwx = cw - w                 # exclusive
+    total = cw[-1]               # (K,)
+    s = state_scr[...]           # (K, V)
+
+    # carried-in state contribution
+    y = jax.lax.dot_general(r * jnp.exp(cwx), s, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (L, V)
+
+    # intra-chunk pairs, sub-block by sub-block (t > s strictly)
+    nsub = L // sub
+    for ti in range(nsub):
+        rt = jax.lax.dynamic_slice_in_dim(r, ti * sub, sub, 0)
+        ct = jax.lax.dynamic_slice_in_dim(cwx, ti * sub, sub, 0)
+        acc = jnp.zeros((sub, v.shape[1]), jnp.float32)
+        for si in range(ti + 1):
+            ks = jax.lax.dynamic_slice_in_dim(k, si * sub, sub, 0)
+            vs = jax.lax.dynamic_slice_in_dim(v, si * sub, sub, 0)
+            cs = jax.lax.dynamic_slice_in_dim(cw, si * sub, sub, 0)
+            # D[t,s,k] = exp(cwx_t - cw_s) (<= 0 exponent for t > s)
+            D = jnp.exp(ct[:, None, :] - cs[None, :, :])  # (sub, sub, K)
+            qk = jnp.sum(rt[:, None, :] * D * ks[None, :, :], axis=-1)  # (sub, sub)
+            if si == ti:
+                tril = (jax.lax.broadcasted_iota(jnp.int32, (sub, sub), 0)
+                        > jax.lax.broadcasted_iota(jnp.int32, (sub, sub), 1))
+                qk = jnp.where(tril, qk, 0.0)
+            acc += jax.lax.dot_general(qk, vs, (((1,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+        y = jax.lax.dynamic_update_slice_in_dim(
+            y, jax.lax.dynamic_slice_in_dim(y, ti * sub, sub, 0) + acc, ti * sub, 0)
+
+    # current-token bonus
+    diag = jnp.sum(r * u[None, :] * k, axis=-1)  # (L,)
+    y = y + diag[:, None] * v
+    y_ref[0, :, 0] = y.astype(y_ref.dtype)
+
+    # state update (safe exponents: total - cw <= 0)
+    kd = k * jnp.exp(total[None, :] - cw)
+    state_scr[...] = s * jnp.exp(total)[:, None] + jax.lax.dot_general(
+        kd, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ci == num_chunks - 1)
+    def _finalize():
+        sfin_ref[0, 0] = state_scr[...]
+
+
+def rwkv6_scan(
+    r: jax.Array,  # (B, S, H, K)
+    k: jax.Array,  # (B, S, H, K)
+    v: jax.Array,  # (B, S, H, V)
+    w: jax.Array,  # (B, S, H, K) log-decay (<= 0)
+    u: jax.Array,  # (H, K)
+    s0: Optional[jax.Array] = None,  # (B, H, K, V)
+    chunk: int = 64,
+    sub: int = 32,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    chunk = min(chunk, S)
+    if S % chunk:
+        raise ValueError("S must divide chunk")
+    sub = min(sub, chunk)
+    if chunk % sub:
+        raise ValueError("chunk must divide sub")
+    nc = S // chunk
+    if s0 is None:
+        s0 = jnp.zeros((B, H, K, V), jnp.float32)
+
+    kernel = functools.partial(_rwkv6_kernel, chunk=chunk, sub=sub, num_chunks=nc)
+    y, sfin = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, K), lambda b, h, ci: (b, ci, h, 0)),
+            pl.BlockSpec((1, chunk, 1, K), lambda b, h, ci: (b, ci, h, 0)),
+            pl.BlockSpec((1, chunk, 1, V), lambda b, h, ci: (b, ci, h, 0)),
+            pl.BlockSpec((1, chunk, 1, K), lambda b, h, ci: (b, ci, h, 0)),
+            pl.BlockSpec((1, K), lambda b, h, ci: (h, 0)),
+            pl.BlockSpec((1, 1, K, V), lambda b, h, ci: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, V), lambda b, h, ci: (b, ci, h, 0)),
+            pl.BlockSpec((1, 1, K, V), lambda b, h, ci: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, V), v.dtype),
+            jax.ShapeDtypeStruct((B, H, K, V), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, s0)
+    return y, sfin

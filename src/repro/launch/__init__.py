@@ -1,0 +1,2 @@
+"""Distributed launch plane: production mesh, sharding rules, train/serve
+steps, input specs and the multi-pod dry-run driver."""

@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+Single pod: 16x16 = 256 chips over ("data", "model").
+Multi-pod:  2x16x16 = 512 chips over ("pod", "data", "model") — the pod
+axis is an outer data axis (per-pod FSDP, cross-pod gradient all-reduce
+over DCN), which is why batch specs shard over ("pod", "data") jointly.
+
+Defined as functions so importing this module never touches jax device
+state (device count is locked at first backend init).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """Whatever this host actually has — smoke tests and examples."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def batch_axes(mesh) -> Tuple[str, ...]:
+    """The axes a global batch is sharded over."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def axis_size(mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1

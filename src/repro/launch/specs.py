@@ -1,0 +1,61 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run's fuel.
+
+``input_specs(cfg, shape)`` returns the batch pytree for a train/prefill
+lowering; ``decode_specs`` the (token, pos) pair; cache/state shapes come
+from ``jax.eval_shape`` over the model's own constructors, so specs can
+never drift from the real functions.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeSpec
+from repro.models.config import ModelConfig
+
+#: number of stubbed visual patches for the VLM backbone
+N_VISUAL = 256
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Batch spec for train (tokens+labels) or prefill (tokens)."""
+    B, S = shape.global_batch, shape.seq_len
+    batch: Dict[str, Any] = {"tokens": _sds((B, S), jnp.int32)}
+    if shape.kind == "train":
+        batch["labels"] = _sds((B, S), jnp.int32)
+    if cfg.visual_stub:
+        batch["visual_embeds"] = _sds((B, N_VISUAL, cfg.d_model), jnp.bfloat16)
+        batch["positions"] = _sds((3, B, S), jnp.int32)
+    if cfg.enc_dec is not None:
+        batch["frames"] = _sds((B, cfg.enc_dec.n_audio_ctx, cfg.d_model),
+                               jnp.bfloat16)
+    return batch
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[Any, Any]:
+    B = shape.global_batch
+    return _sds((B,), jnp.int32), _sds((B,), jnp.int32)
+
+
+def concrete_batch(cfg: ModelConfig, shape: ShapeSpec, rng=None) -> Dict[str, Any]:
+    """A real (host numpy) batch matching input_specs — smoke/examples."""
+    import numpy as np
+
+    rng = np.random.default_rng(0) if rng is None else rng
+    spec = input_specs(cfg, shape)
+
+    def mk(s):
+        if s.dtype == jnp.int32:
+            if s.shape and len(s.shape) == 3:  # positions
+                return np.zeros(s.shape, np.int32)
+            return rng.integers(0, cfg.vocab_size, s.shape).astype(np.int32)
+        return rng.normal(size=s.shape).astype(np.float32)
+
+    return jax.tree.map(mk, spec)

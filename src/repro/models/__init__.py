@@ -1,0 +1,16 @@
+"""Model plane: composable JAX definitions for all assigned architectures.
+
+Everything is pure functions over nested-dict params (no framework deps):
+``init(cfg, rng)``, ``loss(cfg, params, batch)``, ``prefill`` / ``decode_step``
+with explicit KV/SSM caches.  Sharding lives in
+:mod:`repro.launch.sharding`, which mirrors the param tree with
+PartitionSpecs; kernels are behind :mod:`repro.kernels.ops` impl flags.
+"""
+
+from .config import MLAConfig, MambaConfig, ModelConfig, MoEConfig, RWKVConfig
+from .api import build_model
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "MLAConfig", "MambaConfig", "RWKVConfig",
+    "build_model",
+]

@@ -1,0 +1,281 @@
+"""Shared layers: norms, RoPE / M-RoPE, embeddings, chunked LM loss."""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, in_dim: int, out_shape, dtype) -> jax.Array:
+    """Truncated-normal fan-in init for a (in_dim, *out) weight."""
+    scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (in_dim, *out_shape))
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def norm_init(cfg: ModelConfig, d: Optional[int] = None) -> Dict:
+    d = d if d is not None else cfg.d_model
+    p = {"scale": jnp.zeros(d, cfg.param_jdtype()) if cfg.norm_unit_offset
+         else jnp.ones(d, cfg.param_jdtype())}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros(d, cfg.param_jdtype())
+    return p
+
+
+def apply_norm(cfg: ModelConfig, p: Dict, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        y = xf * jax.lax.rsqrt((xf ** 2).mean(-1, keepdims=True) + cfg.norm_eps)
+        scale = p["scale"].astype(jnp.float32)
+        if cfg.norm_unit_offset:
+            scale = scale + 1.0
+        y = y * scale
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard + multimodal M-RoPE)
+# ---------------------------------------------------------------------------
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D) with D even; positions: (B, S) int."""
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)  # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: Tuple[int, int, int]) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.
+
+    ``positions``: (3, B, S) — temporal / height / width position ids (all
+    equal for text tokens).  The rotary dim is split into three sections
+    (in half-dim units), each rotated by its own position stream.
+    """
+    D = x.shape[-1]
+    half = D // 2
+    assert sum(sections) == half, "mrope sections must sum to head_dim/2"
+    freqs = rope_freqs(D, theta)  # (half,)
+    # pick the position stream per frequency-section
+    sec_id = jnp.repeat(jnp.arange(3), jnp.asarray(sections), total_repeat_length=half)
+    pos3 = positions.astype(jnp.float32)  # (3,B,S)
+    # gather: for each frequency index f, use positions[sec_id[f]]
+    ang = pos3[sec_id.astype(jnp.int32), :, :]  # (half, B, S) -- advanced index on axis 0
+    ang = jnp.moveaxis(ang, 0, -1) * freqs  # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def positions_for(cfg: ModelConfig, batch: Dict) -> jax.Array:
+    """Standard (B,S) or M-RoPE (3,B,S) position ids from the batch."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    if cfg.rope_type == "mrope":
+        if "positions" in batch:
+            return batch["positions"]
+        p = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        return jnp.broadcast_to(p[None], (3, B, S))
+    if "positions" in batch:
+        return batch["positions"]
+    return jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+
+# ---------------------------------------------------------------------------
+# embeddings + chunked LM loss
+# ---------------------------------------------------------------------------
+def embedding_init(cfg: ModelConfig, key) -> Dict:
+    p = {"tok": embed_init(key, cfg.padded_vocab, cfg.d_model, cfg.param_jdtype())}
+    return p
+
+
+def embed_tokens(cfg: ModelConfig, emb: Dict, tokens: jax.Array) -> jax.Array:
+    x = emb["tok"].astype(cfg.compute_jdtype())[tokens]
+    if cfg.scale_embed:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def merge_visual(cfg: ModelConfig, x: jax.Array, batch: Dict) -> jax.Array:
+    """Qwen2-VL stub: splice precomputed patch embeddings over the first
+    ``n_img`` token slots (the modality frontend is out of scope)."""
+    if not cfg.visual_stub or "visual_embeds" not in batch:
+        return x
+    ve = batch["visual_embeds"].astype(x.dtype)  # (B, n_img, D)
+    n = ve.shape[1]
+    return jnp.concatenate([ve, x[:, n:]], axis=1)
+
+
+def lm_head_logits(cfg: ModelConfig, emb: Dict, out_w: Optional[jax.Array],
+                   h: jax.Array) -> jax.Array:
+    w = emb["tok"] if cfg.tie_embeddings or out_w is None else out_w
+    logits = jnp.einsum("...d,vd->...v", h.astype(jnp.float32),
+                        w.astype(jnp.float32))
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    # mask padded vocab rows
+    if cfg.padded_vocab != cfg.vocab_size:
+        neg = jnp.full((cfg.padded_vocab - cfg.vocab_size,), -1e30, jnp.float32)
+        logits = logits.at[..., cfg.vocab_size:].set(neg)
+    return logits
+
+
+def chunked_softmax_xent(cfg: ModelConfig, emb: Dict, out_w: Optional[jax.Array],
+                         h: jax.Array, labels: jax.Array,
+                         mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token loss without materializing (B,S,V) logits.
+
+    Scans over sequence chunks; each chunk computes (B,C,V) logits, its
+    log-sum-exp and the label logit, then discards them.  With V up to
+    256 k this is the difference between fitting and not fitting.
+    """
+    B, S, D = h.shape
+    C = min(cfg.loss_chunk, S)
+    if S % C:
+        raise ValueError("seq len must divide loss_chunk")
+    nchunks = S // C
+    w = emb["tok"] if cfg.tie_embeddings or out_w is None else out_w
+    wf = w.astype(jnp.float32)
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    hc = h.reshape(B, nchunks, C, D)
+    lc = labels.reshape(B, nchunks, C)
+    mc = mask.reshape(B, nchunks, C)
+
+    def chunk_loss(carry, i):
+        hh = hc[:, i].astype(jnp.float32)           # (B,C,D)
+        logits = jnp.einsum("bcd,vd->bcv", hh, wf)  # (B,C,V)
+        logits = constrain_dims(logits, {0: "dp", 2: "model"})
+        if cfg.logit_softcap > 0:
+            logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+        if cfg.padded_vocab != cfg.vocab_size:
+            pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+            logits = jnp.where(pad_mask[None, None, :], logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)     # (B,C)
+        lab = jnp.take_along_axis(logits, lc[:, i][..., None], axis=-1)[..., 0]
+        nll = (lse - lab) * mc[:, i]
+        return carry + nll.sum(), None
+
+    total, _ = jax.lax.scan(chunk_loss, jnp.zeros((), jnp.float32),
+                            jnp.arange(nchunks))
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return total / denom
+
+
+_SHARDING_PROFILE = "tp"  # "tp" | "fsdp" — set by the launcher
+
+
+def set_sharding_profile(profile: str) -> None:
+    """"tp": model axis shards hidden activation dims (Megatron-style).
+    "fsdp": model axis is an extra data/param-shard axis; activation
+    constraints on "model" become no-ops and batch dims may shard over it.
+    Chosen per (arch x shape); see EXPERIMENTS.md §Perf."""
+    global _SHARDING_PROFILE
+    assert profile in ("tp", "fsdp")
+    _SHARDING_PROFILE = profile
+
+
+def get_sharding_profile() -> str:
+    return _SHARDING_PROFILE
+
+
+def _dp_axes(mesh) -> tuple:
+    names = ["pod", "data"]
+    if _SHARDING_PROFILE == "fsdp":
+        names.append("model")
+    return tuple(a for a in names if a in mesh.axis_names)
+
+
+def constrain_dims(x: jax.Array, assignments: Dict[int, str]) -> jax.Array:
+    """Pin activation dims to mesh axes (no-op outside a mesh context).
+
+    ``assignments`` maps dim -> role, role in {"dp", "model"}.  "dp" is all
+    data axes (("pod","data") on the multi-pod mesh).  A dim whose size
+    does not divide the axis is silently skipped, so the same model code
+    works for MQA (kv=1), 28-head attention, 40-expert MoE, etc.
+
+    Without these anchors GSPMD tends to resolve ambiguous einsum
+    shardings by replicating the tensor-parallel dim — measured as a 16x
+    per-device FLOP inflation in the dry-run (EXPERIMENTS.md §Perf it. 2).
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or getattr(mesh, "empty", True):
+        return x
+    from jax.sharding import PartitionSpec
+
+    spec = [None] * x.ndim
+    used = set()
+    for dim, role in assignments.items():
+        d = dim % x.ndim
+        if role == "dp":
+            ax = _dp_axes(mesh)
+            # fallback chain: all data axes, then progressively fewer
+            candidates = [ax[:k] for k in range(len(ax), 0, -1)]
+        else:
+            if _SHARDING_PROFILE == "fsdp":
+                continue  # model axis belongs to the data pool under fsdp
+            if role not in mesh.axis_names:
+                continue
+            candidates = [(role,)]
+        for names in candidates:
+            if not names or any(a in used for a in names):
+                continue
+            size = 1
+            for a in names:
+                size *= mesh.shape[a]
+            if size > 1 and x.shape[d] % size == 0:
+                spec[d] = names if len(names) > 1 else names[0]
+                used.update(names)
+                break
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, PartitionSpec(*spec))
+
+
+def constrain_batch(x: jax.Array) -> jax.Array:
+    """Pin the leading batch dim to the data axes (block-boundary anchor)."""
+    return constrain_dims(x, {0: "dp"})
+
+
+def constrain_hidden(x: jax.Array, model_dim: int = -1) -> jax.Array:
+    """Batch on data axes + a hidden (ffn/heads/vocab) dim on "model"."""
+    return constrain_dims(x, {0: "dp", model_dim: "model"})
+
+
+def act_fn(name: str):
+    if name in ("silu", "swiglu"):
+        return jax.nn.silu
+    if name in ("gelu", "geglu", "gelu_mlp"):
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    raise ValueError(name)

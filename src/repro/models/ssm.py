@@ -1,0 +1,285 @@
+"""State-space blocks: Mamba2 (Zamba2's mixer) and RWKV6 (Finch).
+
+Both blocks expose ``apply`` (full sequence, chunked scan through
+:mod:`repro.kernels.ops`) and ``decode`` (O(1)-state single-token step),
+plus ``init_state`` for serving.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from .common import constrain_dims, dense_init
+from .config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Mamba2
+# ---------------------------------------------------------------------------
+def mamba2_init(cfg: ModelConfig, key) -> Dict:
+    mc = cfg.mamba
+    D = cfg.d_model
+    Din = mc.d_inner(D)
+    H = mc.n_heads(D)
+    G, N = mc.ngroups, mc.d_state
+    dt_dim = H
+    # in_proj -> [z (Din), x (Din), B (G*N), C (G*N), dt (H)]
+    proj_out = 2 * Din + 2 * G * N + dt_dim
+    ks = jax.random.split(key, 4)
+    dt = cfg.param_jdtype()
+    # S4D-real A init: -(1..H)
+    A = -jnp.exp(jax.random.uniform(ks[2], (H,), jnp.float32,
+                                    math.log(1.0), math.log(16.0)))
+    return {
+        "in_proj": dense_init(ks[0], D, (proj_out,), dt),
+        "conv_w": (jax.random.normal(ks[3], (mc.d_conv, Din + 2 * G * N))
+                   * 0.1).astype(dt),
+        "A_log": jnp.log(-A),  # store log(-A) like the reference impls
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_w": jnp.ones((Din,), dt),  # gated RMSNorm before out_proj
+        "out_proj": dense_init(ks[1], Din, (D,), dt),
+    }
+
+
+def _mamba2_split(cfg: ModelConfig, proj: jax.Array):
+    mc = cfg.mamba
+    Din = mc.d_inner(cfg.d_model)
+    H = mc.n_heads(cfg.d_model)
+    G, N = mc.ngroups, mc.d_state
+    z, xbc_dt = jnp.split(proj, [Din], axis=-1)
+    xbc, dt_raw = jnp.split(xbc_dt, [Din + 2 * G * N], axis=-1)
+    return z, xbc, dt_raw, (Din, H, G, N)
+
+
+def _gated_rmsnorm(y: jax.Array, z: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt((yf ** 2).mean(-1, keepdims=True) + eps))
+    return (y * w.astype(jnp.float32)).astype(z.dtype)
+
+
+def mamba2_apply(cfg: ModelConfig, p: Dict, x: jax.Array) -> jax.Array:
+    """x: (B,S,D) -> (B,S,D); full-sequence chunked SSD scan."""
+    mc = cfg.mamba
+    B, S, D = x.shape
+    proj = jnp.einsum("bsd,do->bso", x, p["in_proj"].astype(x.dtype))
+    z, xbc, dt_raw, (Din, H, G, N) = _mamba2_split(cfg, proj)
+    # causal depthwise conv over (x, B, C)
+    w = p["conv_w"].astype(x.dtype)  # (d_conv, Din+2GN)
+    pad = jnp.pad(xbc, ((0, 0), (mc.d_conv - 1, 0), (0, 0)))
+    conv = sum(w[i][None, None, :] * pad[:, i : i + S] for i in range(mc.d_conv))
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    xs, Bm, Cm = jnp.split(conv, [Din, Din + G * N], axis=-1)
+    xs = xs.reshape(B, S, H, mc.headdim)
+    xs = constrain_dims(xs, {0: "dp", 2: "model"})
+    Bm = Bm.reshape(B, S, G, N)
+    Cm = Cm.reshape(B, S, G, N)
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    y, _ = ops.mamba2(xs, dtv, A, Bm, Cm, impl=cfg.scan_impl)
+    y = y + xs * p["D_skip"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(B, S, Din)
+    y = _gated_rmsnorm(y, z, p["norm_w"], cfg.norm_eps)
+    return jnp.einsum("bsf,fd->bsd", y, p["out_proj"].astype(x.dtype))
+
+
+def mamba2_prefill_state(cfg: ModelConfig, p: Dict, h: jax.Array,
+                         state: Dict) -> Dict:
+    """Final SSM + conv state after a full-sequence pass (for decode)."""
+    mc = cfg.mamba
+    B, S, D = h.shape
+    proj = jnp.einsum("bsd,do->bso", h, p["in_proj"].astype(h.dtype))
+    z, xbc, dt_raw, (Din, H, G, N) = _mamba2_split(cfg, proj)
+    w = p["conv_w"].astype(h.dtype)
+    pad = jnp.pad(xbc, ((0, 0), (mc.d_conv - 1, 0), (0, 0)))
+    conv = sum(w[i][None, None, :] * pad[:, i : i + S] for i in range(mc.d_conv))
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(h.dtype)
+    xs, Bm, Cm = jnp.split(conv, [Din, Din + G * N], axis=-1)
+    xs = xs.reshape(B, S, H, mc.headdim)
+    Bm = Bm.reshape(B, S, G, N)
+    Cm = Cm.reshape(B, S, G, N)
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    _, hfin = ops.mamba2(xs, dtv, A, Bm, Cm, impl=cfg.scan_impl)
+    return {"ssm": hfin, "conv": xbc[:, S - (mc.d_conv - 1):]}
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    mc = cfg.mamba
+    D = cfg.d_model
+    Din = mc.d_inner(D)
+    H, G, N = mc.n_heads(D), mc.ngroups, mc.d_state
+    return {
+        "ssm": jnp.zeros((batch, H, mc.headdim, N), jnp.float32),
+        "conv": jnp.zeros((batch, mc.d_conv - 1, Din + 2 * G * N), dtype),
+    }
+
+
+def mamba2_decode(cfg: ModelConfig, p: Dict, x: jax.Array,
+                  state: Dict) -> Tuple[jax.Array, Dict]:
+    """x: (B,1,D) single token."""
+    mc = cfg.mamba
+    B = x.shape[0]
+    proj = jnp.einsum("bsd,do->bso", x, p["in_proj"].astype(x.dtype))
+    z, xbc, dt_raw, (Din, H, G, N) = _mamba2_split(cfg, proj)
+    hist = jnp.concatenate([state["conv"], xbc], axis=1)  # (B, d_conv, C)
+    w = p["conv_w"].astype(x.dtype)
+    conv = jnp.einsum("btc,tc->bc", hist, w)[:, None]
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    xs, Bm, Cm = jnp.split(conv, [Din, Din + G * N], axis=-1)
+    xs = xs.reshape(B, H, mc.headdim)
+    Bm = Bm.reshape(B, G, N)
+    Cm = Cm.reshape(B, G, N)
+    dtv = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"][None, :])
+    A = -jnp.exp(p["A_log"])
+    y, ssm = ops.mamba2_decode(xs, dtv, A, Bm, Cm, state["ssm"])
+    y = y + xs * p["D_skip"][None, :, None].astype(x.dtype)
+    y = y.reshape(B, 1, Din)
+    y = _gated_rmsnorm(y, z, p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bsf,fd->bsd", y, p["out_proj"].astype(x.dtype))
+    return out, {"ssm": ssm, "conv": hist[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# RWKV6
+# ---------------------------------------------------------------------------
+def rwkv6_init(cfg: ModelConfig, key) -> Dict:
+    rc = cfg.rwkv
+    D = cfg.d_model
+    H = D // rc.head_dim
+    dt = cfg.param_jdtype()
+    ks = jax.random.split(key, 12)
+    return {
+        # token mix
+        "mix_x": (jnp.ones((5, D)) * 0.5).astype(jnp.float32),
+        "mix_w1": dense_init(ks[0], D, (5 * rc.mix_lora,), dt),
+        "mix_w2": (jax.random.normal(ks[1], (5, rc.mix_lora, D)) * 0.02).astype(dt),
+        "w0": jnp.full((D,), -3.0, jnp.float32),   # decay bias
+        "w1": dense_init(ks[2], D, (rc.decay_lora,), dt),
+        "w2": (jax.random.normal(ks[3], (rc.decay_lora, D)) * 0.02).astype(dt),
+        "wr": dense_init(ks[4], D, (D,), dt),
+        "wk": dense_init(ks[5], D, (D,), dt),
+        "wv": dense_init(ks[6], D, (D,), dt),
+        "wg": dense_init(ks[7], D, (D,), dt),
+        "u": (jax.random.normal(ks[8], (H, rc.head_dim)) * 0.1).astype(jnp.float32),
+        "ln_w": jnp.ones((D,), dt),  # per-head group norm
+        "wo": dense_init(ks[9], D, (D,), dt),
+        # channel mix
+        "cm_mix": (jnp.ones((2, D)) * 0.5).astype(jnp.float32),
+        "cm_k": dense_init(ks[10], D, (cfg.d_ff,), dt),
+        "cm_v": dense_init(ks[11], cfg.d_ff, (D,), dt),
+        "cm_r": dense_init(jax.random.fold_in(key, 99), D, (D,), dt),
+    }
+
+
+def _rwkv6_mix(p: Dict, x: jax.Array, x_prev: jax.Array):
+    """Data-dependent token-shift mixing -> (xr, xk, xv, xw, xg)."""
+    sx = x_prev - x
+    base = x + sx * p["mix_x"][0][None, None, :].astype(x.dtype)
+    lora = jnp.einsum("bsd,dk->bsk", base, p["mix_w1"].astype(x.dtype))
+    lora = jnp.tanh(lora.astype(jnp.float32)).astype(x.dtype)
+    lora = lora.reshape(*lora.shape[:-1], 5, -1)
+    adj = jnp.einsum("bsnk,nkd->bsnd", lora, p["mix_w2"].astype(x.dtype))
+    mixed = []
+    for i in range(5):
+        mi = p["mix_x"][i][None, None, :].astype(x.dtype) + adj[:, :, i]
+        mixed.append(x + sx * mi)
+    return mixed  # order: r, k, v, w, g
+
+
+def _rwkv6_rkvwg(cfg: ModelConfig, p: Dict, x: jax.Array, x_prev: jax.Array):
+    rc = cfg.rwkv
+    D = cfg.d_model
+    H = D // rc.head_dim
+    xr, xk, xv, xw, xg = _rwkv6_mix(p, x, x_prev)
+    r = constrain_dims(jnp.einsum("bsd,dk->bsk", xr, p["wr"].astype(x.dtype)), {0: "dp", 2: "model"})
+    k = constrain_dims(jnp.einsum("bsd,dk->bsk", xk, p["wk"].astype(x.dtype)), {0: "dp", 2: "model"})
+    v = constrain_dims(jnp.einsum("bsd,dk->bsk", xv, p["wv"].astype(x.dtype)), {0: "dp", 2: "model"})
+    g = jnp.einsum("bsd,dk->bsk", xg, p["wg"].astype(x.dtype))
+    dw = jnp.einsum("bsd,dk->bsk", xw, p["w1"].astype(x.dtype))
+    dw = jnp.einsum("bsk,kd->bsd", jnp.tanh(dw.astype(jnp.float32)).astype(x.dtype),
+                    p["w2"].astype(x.dtype))
+    # per-channel log decay, always negative: w = -exp(w0 + dw)
+    w = -jnp.exp(p["w0"][None, None, :] + dw.astype(jnp.float32))
+    shp = x.shape[:2] + (H, rc.head_dim)
+    return (r.reshape(shp), k.reshape(shp), v.reshape(shp),
+            w.reshape(shp), g)
+
+
+def _rwkv6_out(cfg: ModelConfig, p: Dict, y: jax.Array, g: jax.Array,
+               dtype) -> jax.Array:
+    B = y.shape[0]
+    S = y.shape[1]
+    D = cfg.d_model
+    # per-head group norm
+    yf = y.astype(jnp.float32)
+    mu = yf.mean(-1, keepdims=True)
+    var = ((yf - mu) ** 2).mean(-1, keepdims=True)
+    yf = (yf - mu) * jax.lax.rsqrt(var + 64e-5)
+    yn = yf.reshape(B, S, D) * p["ln_w"].astype(jnp.float32)[None, None, :]
+    yn = yn.astype(dtype) * jax.nn.silu(g.astype(jnp.float32)).astype(dtype)
+    return jnp.einsum("bsd,dk->bsk", yn, p["wo"].astype(dtype))
+
+
+def rwkv6_time_mix(cfg: ModelConfig, p: Dict, x: jax.Array,
+                   x_prev_last: Optional[jax.Array] = None,
+                   s0: Optional[jax.Array] = None):
+    """Full-sequence token mix.  Returns (out, (last_x, s_final))."""
+    shift = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if x_prev_last is not None:
+        shift = shift.at[:, 0].set(x_prev_last)
+    r, k, v, w, g = _rwkv6_rkvwg(cfg, p, x, shift)
+    y, sfin = ops.rwkv6(r, k, v, w, p["u"], s0=s0, impl=cfg.scan_impl)
+    out = _rwkv6_out(cfg, p, y, g, x.dtype)
+    return out, (x[:, -1], sfin)
+
+
+def rwkv6_channel_mix(cfg: ModelConfig, p: Dict, x: jax.Array,
+                      x_prev_last: Optional[jax.Array] = None):
+    shift = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if x_prev_last is not None:
+        shift = shift.at[:, 0].set(x_prev_last)
+    sx = shift - x
+    xk = x + sx * p["cm_mix"][0][None, None, :].astype(x.dtype)
+    xr = x + sx * p["cm_mix"][1][None, None, :].astype(x.dtype)
+    kk = jnp.einsum("bsd,df->bsf", xk, p["cm_k"].astype(x.dtype))
+    kk = constrain_dims(kk, {0: "dp", 2: "model"})
+    kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(x.dtype)
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["cm_v"].astype(x.dtype))
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,dk->bsk", xr,
+                                   p["cm_r"].astype(x.dtype)).astype(jnp.float32))
+    return rr.astype(x.dtype) * vv, x[:, -1]
+
+
+def rwkv6_init_state(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    rc = cfg.rwkv
+    D = cfg.d_model
+    H = D // rc.head_dim
+    return {
+        "tm_x": jnp.zeros((batch, D), dtype),
+        "wkv": jnp.zeros((batch, H, rc.head_dim, rc.head_dim), jnp.float32),
+        "cm_x": jnp.zeros((batch, D), dtype),
+    }
+
+
+def rwkv6_decode(cfg: ModelConfig, p: Dict, x: jax.Array,
+                 state: Dict) -> Tuple[jax.Array, Dict]:
+    """One-token step for both mixes.  x: (B,1,D)."""
+    prev = state["tm_x"][:, None]
+    r, k, v, w, g = _rwkv6_rkvwg(cfg, p, x, prev)
+    y, s = ops.rwkv6_decode(r[:, 0], k[:, 0], v[:, 0], w[:, 0], p["u"],
+                            state["wkv"])
+    out = _rwkv6_out(cfg, p, y[:, None], g, x.dtype)
+    return out, {**state, "tm_x": x[:, 0], "wkv": s}
+
+
+def rwkv6_channel_decode(cfg: ModelConfig, p: Dict, x: jax.Array,
+                         state: Dict) -> Tuple[jax.Array, Dict]:
+    out, last = rwkv6_channel_mix(cfg, p, x, state["cm_x"])
+    return out, {**state, "cm_x": last}

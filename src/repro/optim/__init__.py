@@ -1,0 +1,9 @@
+"""Optimizers for the training plane."""
+
+from .adamw import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from .compress import int8_codec_roundtrip, quantize_int8, dequantize_int8
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
+    "int8_codec_roundtrip", "quantize_int8", "dequantize_int8",
+]

@@ -1,0 +1,98 @@
+"""AdamW with mixed-precision master weights and global-norm clipping.
+
+State layout (all sharded like the params by the launcher):
+  master: fp32 copy of the params (optional — ``keep_master=False`` runs
+          the memory-lean variant that updates the bf16 params directly)
+  m, v:   fp32 moments
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    keep_master: bool = True
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+def cosine_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def adamw_init(cfg: AdamWConfig, params: Any) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    st = {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if cfg.keep_master:
+        # copy=True: fp32 params would otherwise alias the master buffer,
+        # which breaks donation (same buffer donated twice).
+        st["master"] = jax.tree.map(
+            lambda p: jnp.array(p, jnp.float32, copy=True), params)
+    return st
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, params: Any, grads: Any,
+                 state: Dict[str, Any]) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    """Returns (new_params [param dtype], new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = cosine_schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    src = state.get("master", params)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * pf)
+        return pf, m, v
+
+    flat_p, treedef = jax.tree.flatten(src)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_master = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+
+    param_dtypes = jax.tree.map(lambda p: p.dtype, params)
+    new_params = jax.tree.map(lambda f, dt: f.astype(dt), new_master, param_dtypes)
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    if cfg.keep_master:
+        new_state["master"] = new_master
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, metrics

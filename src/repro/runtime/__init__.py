@@ -1,0 +1,5 @@
+"""Training runtime: fault-tolerant loop, straggler watch, elastic resume."""
+
+from .trainer import Trainer, TrainerConfig
+
+__all__ = ["Trainer", "TrainerConfig"]

@@ -1,0 +1,151 @@
+"""Fault-tolerant training loop.
+
+* deterministic resumability: the data order is a pure function of
+  (seed, epoch, step), so restoring {params, opt, epoch, step} from the
+  newest committed checkpoint reproduces the exact remaining schedule;
+* async checkpointing through the foreactor-backed CheckpointManager
+  (guaranteed-write graphs), overlapped with device compute;
+* straggler watch: a per-step wall-time EMA; steps slower than
+  ``straggler_factor x`` EMA are recorded (and, on a real cluster, would
+  feed the coordinator's slow-host eviction);
+* crash safety: any exception triggers a synchronous emergency save of
+  the last good state before re-raising;
+* elastic resume: ``Trainer.fit`` can be re-entered with a different mesh
+  (fewer/more hosts) — checkpoints are mesh-agnostic (full arrays +
+  named leaves), so the step function is simply re-lowered.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.data.pipeline import TokenBatchLoader
+from repro.launch import sharding as shd
+from repro.launch.steps import make_train_step, make_train_state
+from repro.models.api import Model
+from repro.optim.adamw import AdamWConfig
+
+
+@dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    log_every: int = 10
+    seed: int = 0
+    straggler_factor: float = 3.0
+    restore: bool = True
+
+
+@dataclass
+class StepEvent:
+    step: int
+    seconds: float
+    loss: float
+    straggler: bool
+
+
+class Trainer:
+    def __init__(self, model: Model, opt_cfg: AdamWConfig,
+                 loader: TokenBatchLoader, ckpt: Optional[CheckpointManager],
+                 mesh, tcfg: TrainerConfig = TrainerConfig(),
+                 batch_extras: Optional[Callable[[Dict], Dict]] = None):
+        self.model = model
+        self.opt_cfg = opt_cfg
+        self.loader = loader
+        self.ckpt = ckpt
+        self.mesh = mesh
+        self.tcfg = tcfg
+        self.batch_extras = batch_extras
+        self.events: List[StepEvent] = []
+        self.stragglers: List[int] = []
+
+    # -- step construction -------------------------------------------------
+    def _jit_step(self):
+        step = make_train_step(self.model, self.opt_cfg)
+        return jax.jit(step, donate_argnums=(0,))
+
+    def _init_or_restore(self):
+        state = None
+        start_epoch, start_step = 0, 0
+        if self.ckpt is not None and self.tcfg.restore:
+            like = jax.eval_shape(
+                lambda r: make_train_state(self.model, self.opt_cfg, r),
+                jax.random.PRNGKey(self.tcfg.seed))
+            out = self.ckpt.restore_latest(like=like)
+            if out is not None:
+                ckpt_step, tree, extra = out
+                state = jax.tree.map(jax.numpy.asarray, tree)
+                start_epoch = int(extra.get("epoch", 0))
+                start_step = int(extra.get("step", ckpt_step))
+                print(f"[trainer] restored step {ckpt_step} "
+                      f"-> resuming at (epoch {start_epoch}, step {start_step})")
+        if state is None:
+            state = make_train_state(self.model, self.opt_cfg,
+                                     jax.random.PRNGKey(self.tcfg.seed))
+        return state, start_epoch, start_step
+
+    # -- the loop ------------------------------------------------------------
+    def fit(self) -> Dict[str, Any]:
+        with jax.set_mesh(self.mesh):
+            step_fn = self._jit_step()
+            state, epoch, step0 = self._init_or_restore()
+            spe = self.loader.steps_per_epoch
+            ema = None
+            losses = []
+            global_step = step0
+            try:
+                while global_step < self.tcfg.steps:
+                    e, s = divmod(global_step, spe)
+                    batch = self.loader.load(e, s)
+                    if self.batch_extras is not None:
+                        batch = self.batch_extras(batch)
+                    t0 = time.perf_counter()
+                    state, metrics = step_fn(state, batch)
+                    loss = float(metrics["loss"])
+                    dt = time.perf_counter() - t0
+                    straggler = ema is not None and dt > self.tcfg.straggler_factor * ema
+                    ema = dt if ema is None else 0.9 * ema + 0.1 * dt
+                    self.events.append(StepEvent(global_step, dt, loss, straggler))
+                    if straggler:
+                        self.stragglers.append(global_step)
+                        print(f"[trainer] STRAGGLER step {global_step}: "
+                              f"{dt:.3f}s vs ema {ema:.3f}s")
+                    losses.append(loss)
+                    if self.tcfg.log_every and global_step % self.tcfg.log_every == 0:
+                        print(f"[trainer] step {global_step:5d} loss {loss:.4f} "
+                              f"gnorm {float(metrics['grad_norm']):.3f} {dt*1e3:.0f}ms")
+                    global_step += 1
+                    if self.ckpt is not None and self.tcfg.ckpt_every \
+                            and global_step % self.tcfg.ckpt_every == 0:
+                        e2, s2 = divmod(global_step, spe)
+                        self.ckpt.save_async(global_step, state,
+                                             extra={"epoch": e2, "step": global_step})
+            except BaseException:
+                if self.ckpt is not None:
+                    try:  # emergency checkpoint of the last good state
+                        self.ckpt.wait_pending()
+                        self.ckpt.save(global_step, state,
+                                       extra={"epoch": epoch, "step": global_step,
+                                              "emergency": True})
+                        print(f"[trainer] emergency checkpoint at step {global_step}")
+                    except BaseException as e2:
+                        print(f"[trainer] emergency save failed: {e2!r}")
+                raise
+            if self.ckpt is not None:
+                self.ckpt.wait_pending()
+                self.ckpt.save(global_step, state,
+                               extra={"epoch": epoch, "step": global_step})
+            return {
+                "state": state,
+                "losses": losses,
+                "final_step": global_step,
+                "stragglers": self.stragglers,
+                "mean_step_s": float(np.mean([ev.seconds for ev in self.events[1:]]))
+                if len(self.events) > 1 else None,
+            }

@@ -1,0 +1,85 @@
+"""Tests for the scan-aware HLO cost analyzer and roofline model."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.hlo import analyze_hlo
+from repro.analysis.roofline import HW, model_flops, roofline
+from repro.configs import SHAPES, get_config
+
+
+def _compiled_text(fn, *sds):
+    return jax.jit(fn).lower(*sds).compile().as_text()
+
+
+def test_trip_weighted_flops_match_unrolled():
+    """A 10-trip scanned matmul must count ~10x the single-body flops."""
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+
+    def scanned(x, w):
+        def body(x, _):
+            return jnp.tanh(x @ w), None
+        y, _ = jax.lax.scan(body, x, jnp.arange(10))
+        return y.sum()
+
+    def unrolled(x, w):
+        for _ in range(10):
+            x = jnp.tanh(x @ w)
+        return x.sum()
+
+    s_scan = analyze_hlo(_compiled_text(scanned, x, w))
+    s_unrl = analyze_hlo(_compiled_text(unrolled, x, w))
+    one = 2 * 256 ** 3
+    assert s_unrl.dot_flops == pytest.approx(10 * one, rel=0.01)
+    assert s_scan.dot_flops == pytest.approx(s_unrl.dot_flops, rel=0.05)
+    assert s_scan.max_trip >= 10
+    assert s_scan.while_loops >= 1
+
+
+def test_grad_of_scan_counts_both_passes():
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+
+    def loss(x, w):
+        def body(x, _):
+            return jnp.tanh(x @ w), None
+        y, _ = jax.lax.scan(body, x, jnp.arange(6))
+        return (y ** 2).sum()
+
+    s = analyze_hlo(_compiled_text(jax.grad(loss, argnums=(0, 1)), x, w))
+    one = 2 * 128 ** 3
+    # fwd (6) + bwd dx (6) + bwd dw (6) = 18 matmuls minimum
+    assert s.dot_flops >= 17 * one
+
+
+def test_no_collectives_on_single_device():
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    s = analyze_hlo(_compiled_text(lambda x: (x @ x).sum(), x))
+    assert s.collective_bytes == 0
+    assert s.collective_count == 0
+
+
+def test_roofline_dominance():
+    hw = HW()
+    t = roofline(197e12, 0.0, 0.0, hw)  # exactly 1s of compute
+    assert t.dominant == "compute" and t.bound_s == pytest.approx(1.0)
+    t = roofline(1.0, 819e9 * 2, 50e9, hw)
+    assert t.dominant == "memory" and t.bound_s == pytest.approx(2.0)
+    t = roofline(1.0, 1.0, 50e9 * 3, hw)
+    assert t.dominant == "collective" and t.bound_s == pytest.approx(3.0)
+
+
+def test_model_flops_scales_with_tokens():
+    cfg = get_config("tinyllama_1_1b")
+    f_train = model_flops(cfg, SHAPES["train_4k"], "train")
+    f_prefill = model_flops(cfg, SHAPES["prefill_32k"], "prefill")
+    f_decode = model_flops(cfg, SHAPES["decode_32k"], "decode")
+    # train ~ 3x prefill per token (bwd), decode per token ~ prefill/token
+    assert f_train > f_prefill > f_decode > 0
+    # 6ND sanity: ~1.1B params, 1.05M tokens -> ~7e15 + attention
+    assert 6e15 < f_train < 2e16

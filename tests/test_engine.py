@@ -1,0 +1,250 @@
+"""Pre-issuing engine tests (paper §5.2 Alg. 1, §5.3 correctness rules)."""
+
+import threading
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Foreactor, GraphBuilder, MemDevice, SpecSession, Sys, io)
+from repro.core.graph import FromNode
+
+
+def make_dev(nfiles=30, size=64):
+    dev = MemDevice()
+    for i in range(nfiles):
+        fd = dev.open(f"/d/f{i}", "w")
+        dev.pwrite(fd, bytes([i % 251]) * size, 0)
+        dev.close(fd)
+    return dev
+
+
+def stat_loop_graph():
+    b = GraphBuilder("stat_loop")
+    b.AddSyscallNode(
+        "fstat", Sys.FSTATAT,
+        lambda ctx, ep: ((ctx["paths"][ep[0]],), False)
+        if ep[0] < len(ctx["paths"]) else None)
+    b.AddBranchingNode("more", lambda ctx, ep: 0 if ep[0] + 1 < len(ctx["paths"]) else 1)
+    b.SyscallSetNext("fstat", "more")
+    b.BranchAppendChild("more", "fstat", loopback=True)
+    b.BranchAppendChild("more", None)
+    return b.Build()
+
+
+def read_chain_weak_graph():
+    """LSM-shaped: pure reads with weak edges (early exit possible)."""
+    b = GraphBuilder("read_chain")
+    b.AddSyscallNode(
+        "pread", Sys.PREAD,
+        lambda ctx, ep: (tuple(ctx["extents"][ep[0]]), False)
+        if ep[0] < len(ctx["extents"]) else None)
+    b.AddBranchingNode("more", lambda ctx, ep: 0 if ep[0] + 1 < len(ctx["extents"]) else 1)
+    b.SyscallSetNext("pread", "more", weak=True)
+    b.BranchAppendChild("more", "pread", loopback=True)
+    b.BranchAppendChild("more", None)
+    return b.Build()
+
+
+def write_loop_graph():
+    b = GraphBuilder("write_loop")
+    b.AddSyscallNode(
+        "pwrite", Sys.PWRITE,
+        lambda ctx, ep: ((ctx["fd"], ctx["chunks"][ep[0]], ep[0] * len(ctx["chunks"][0])), False)
+        if ep[0] < len(ctx["chunks"]) else None)
+    b.AddBranchingNode("more", lambda ctx, ep: 0 if ep[0] + 1 < len(ctx["chunks"]) else 1)
+    b.SyscallSetNext("pwrite", "more")
+    b.BranchAppendChild("more", "pwrite", loopback=True)
+    b.BranchAppendChild("more", None)
+    return b.Build()
+
+
+def weak_write_graph():
+    """A weak edge ahead of a pwrite — the pwrite must NOT be pre-issued."""
+    b = GraphBuilder("weak_write")
+    b.AddSyscallNode("pread", Sys.PREAD, lambda ctx, ep: ((ctx["rfd"], 8, 0), False))
+    b.AddSyscallNode("pwrite", Sys.PWRITE, lambda ctx, ep: ((ctx["wfd"], b"Z" * 8, 0), False))
+    b.SyscallSetNext("pread", "pwrite", weak=True)
+    b.SyscallSetNext("pwrite", None)
+    return b.Build()
+
+
+@pytest.mark.parametrize("backend", ["io_uring", "user_threads"])
+def test_external_synchrony_stat_loop(backend):
+    """Speculated execution must be indistinguishable from serial (§5.3)."""
+    dev = make_dev()
+    paths = [f"/d/f{i}" for i in range(30)]
+    fa = Foreactor(device=dev, backend=backend, depth=8)
+    fa.register("stat_loop", stat_loop_graph)
+
+    @fa.wrap("stat_loop", lambda paths: {"paths": paths})
+    def du(paths):
+        return sum(io.fstatat(dev, p).st_size for p in paths)
+
+    serial = sum(io.fstatat(dev, p).st_size for p in paths)
+    assert du(paths) == serial
+    assert fa.total_stats.served_async > 0
+    fa.shutdown()
+
+
+def test_weak_edge_blocks_nonpure():
+    dev = make_dev(2)
+    rfd = dev.open("/d/f0", "r")
+    wfd = dev.open("/w.out", "w")
+    fa = Foreactor(device=dev, backend="io_uring", depth=8)
+    fa.register("weak_write", weak_write_graph)
+
+    @fa.wrap("weak_write", lambda: {"rfd": rfd, "wfd": wfd})
+    def f_early_exit():
+        io.pread(dev, rfd, 8, 0)
+        return "early"  # never issues the pwrite
+
+    f_early_exit()
+    # the pwrite was NOT pre-issued: /w.out must still be empty
+    assert dev.fstatat("/w.out").st_size == 0
+    assert fa.total_stats.pre_issued == 0  # nothing beyond the weak edge
+    fa.shutdown()
+
+
+def test_guaranteed_writes_are_preissued():
+    dev = MemDevice()
+    fd = dev.open("/out.bin", "w")
+    chunks = [bytes([i]) * 16 for i in range(12)]
+    fa = Foreactor(device=dev, backend="io_uring", depth=8)
+    fa.register("write_loop", write_loop_graph)
+
+    @fa.wrap("write_loop", lambda: {"fd": fd, "chunks": chunks})
+    def writer():
+        for i, c in enumerate(chunks):
+            io.pwrite(dev, fd, c, i * 16)
+
+    writer()
+    assert fa.total_stats.pre_issued > 0  # strong edges: writes speculated
+    got = dev.pread(fd, 16 * 12, 0)
+    assert got == b"".join(chunks)  # and the file is exactly right
+    fa.shutdown()
+
+
+def test_early_exit_cancels_speculation():
+    dev = make_dev(20)
+    fa = Foreactor(device=dev, backend="io_uring", depth=16)
+    fa.register("read_chain", read_chain_weak_graph)
+    extents = []
+    fds = []
+    for i in range(20):
+        fd = dev.open(f"/d/f{i}", "r")
+        fds.append(fd)
+        extents.append((fd, 16, 0))
+
+    @fa.wrap("read_chain", lambda: {"extents": extents})
+    def search():
+        for i, (fd, n, off) in enumerate(extents):
+            data = io.pread(dev, fd, n, off)
+            if i == 2:  # found early
+                return data
+        return None
+
+    out = search()
+    assert out == bytes([2]) * 16
+    s = fa.total_stats
+    # speculation beyond the early exit happened and was then discarded
+    assert s.pre_issued > 3
+    assert s.cancelled + s.wasted_completions > 0
+    fa.shutdown()
+
+
+def test_linked_pair_deferred_data():
+    """Link + FromNode: pwrite consumes the linked pread's buffer."""
+    dev = MemDevice()
+    fd_in = dev.open("/in.bin", "w")
+    dev.pwrite(fd_in, bytes(range(64)), 0)
+    fd_out = dev.open("/out.bin", "w")
+
+    def g():
+        b = GraphBuilder("link")
+        b.AddSyscallNode("pread", Sys.PREAD,
+                         lambda ctx, ep: ((fd_in, 32, 32 * ep[0]), True))
+        b.AddSyscallNode("pwrite", Sys.PWRITE,
+                         lambda ctx, ep: ((fd_out, FromNode("pread"), 32 * ep[0]), False))
+        b.AddBranchingNode("more", lambda ctx, ep: 0 if ep[0] < 1 else 1)
+        b.SyscallSetNext("pread", "pwrite")
+        b.SyscallSetNext("pwrite", "more")
+        b.BranchAppendChild("more", "pread", loopback=True)
+        b.BranchAppendChild("more", None)
+        return b.Build()
+
+    fa = Foreactor(device=dev, backend="io_uring", depth=6)
+    fa.register("link", g)
+
+    @fa.wrap("link", lambda: {})
+    def copy2():
+        for i in range(2):
+            d = io.pread(dev, fd_in, 32, 32 * i)
+            io.pwrite(dev, fd_out, d, 32 * i)
+
+    copy2()
+    assert dev.pread(fd_out, 64, 0) == bytes(range(64))
+    fa.shutdown()
+
+
+def test_untracked_syscalls_pass_through():
+    dev = make_dev(3)
+    fa = Foreactor(device=dev, backend="io_uring", depth=4)
+    fa.register("stat_loop", stat_loop_graph)
+    paths = [f"/d/f{i}" for i in range(3)]
+
+    @fa.wrap("stat_loop", lambda paths: {"paths": paths})
+    def du_with_extra(paths):
+        total = 0
+        for p in paths:
+            total += io.fstatat(dev, p).st_size
+        # not in the graph: must pass through untouched
+        return total, io.getdents(dev, "/d")
+
+    total, names = du_with_extra(paths)
+    assert len(names) == 3
+    assert fa.total_stats.untracked >= 1
+    fa.shutdown()
+
+
+def test_per_thread_sessions_are_independent():
+    dev = make_dev(40)
+    fa = Foreactor(device=dev, backend="io_uring", depth=8)
+    fa.register("stat_loop", stat_loop_graph)
+    errs = []
+
+    def worker(lo):
+        paths = [f"/d/f{i}" for i in range(lo, lo + 20)]
+
+        @fa.wrap("stat_loop", lambda paths: {"paths": paths})
+        def du(paths):
+            return sum(io.fstatat(dev, p).st_size for p in paths)
+
+        expect = sum(dev.fstatat(p).st_size for p in paths)
+        if du(paths) != expect:
+            errs.append(lo)
+
+    ts = [threading.Thread(target=worker, args=(lo,)) for lo in (0, 20)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert not errs
+    fa.shutdown()
+
+
+@settings(max_examples=20, deadline=None)
+@given(depth=st.integers(0, 32), n=st.integers(1, 25),
+       backend=st.sampled_from(["io_uring", "user_threads"]))
+def test_property_stat_loop_any_depth(depth, n, backend):
+    """External synchrony holds for any peek depth / loop length / backend."""
+    dev = make_dev(n)
+    paths = [f"/d/f{i}" for i in range(n)]
+    fa = Foreactor(device=dev, backend=backend, depth=depth)
+    fa.register("stat_loop", stat_loop_graph)
+
+    @fa.wrap("stat_loop", lambda paths: {"paths": paths})
+    def du(paths):
+        return sum(io.fstatat(dev, p).st_size for p in paths)
+
+    assert du(paths) == sum(dev.fstatat(p).st_size for p in paths)
+    fa.shutdown()

@@ -1,0 +1,91 @@
+"""Foreaction-graph structure tests (paper §3.2) + hypothesis properties."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import GraphBuilder, ForeactionGraph
+from repro.core.syscalls import Sys, is_pure
+
+
+def _linear_loop(n_pre=1):
+    b = GraphBuilder("g")
+    b.AddSyscallNode("read", Sys.PREAD, lambda ctx, ep: ((1, 4, 0), False))
+    b.AddBranchingNode("more", lambda ctx, ep: 0 if ep[0] < 3 else 1)
+    b.SyscallSetNext("read", "more")
+    b.BranchAppendChild("more", "read", loopback=True)
+    b.BranchAppendChild("more", None)
+    return b.Build()
+
+
+def test_builder_basic():
+    g = _linear_loop()
+    assert g.num_loops == 1
+    assert g.start.dst.name == "read"
+    g.validate()
+
+
+def test_forward_reference_wiring():
+    b = GraphBuilder("fwd")
+    b.AddSyscallNode("a", Sys.PREAD, lambda c, e: None)
+    b.SyscallSetNext("a", "br")  # br not defined yet
+    b.AddBranchingNode("br", lambda c, e: 1)
+    b.BranchAppendChild("br", "a", loopback=True)
+    b.BranchAppendChild("br", None)
+    g = b.Build()
+    assert g.syscall_nodes["a"].out.dst.name == "br"
+
+
+def test_duplicate_name_rejected():
+    b = GraphBuilder("dup")
+    b.AddSyscallNode("x", Sys.PREAD, lambda c, e: None)
+    with pytest.raises(ValueError):
+        b.AddSyscallNode("x", Sys.PWRITE, lambda c, e: None)
+
+
+def test_missing_edge_rejected():
+    b = GraphBuilder("dangling")
+    b.AddSyscallNode("x", Sys.PREAD, lambda c, e: None)
+    with pytest.raises(ValueError):
+        b.Build()  # no outgoing edge on x
+
+
+def test_unreachable_rejected():
+    b = GraphBuilder("unreachable")
+    b.AddSyscallNode("x", Sys.PREAD, lambda c, e: None)
+    b.SyscallSetNext("x", None)
+    b.AddSyscallNode("orphan", Sys.PREAD, lambda c, e: None)
+    b.SyscallSetNext("orphan", None)
+    with pytest.raises(ValueError, match="unreachable"):
+        b.Build()
+
+
+def test_purity_classification():
+    assert is_pure(Sys.PREAD, (1, 2, 3))
+    assert is_pure(Sys.FSTATAT, ("/x",))
+    assert is_pure(Sys.GETDENTS, ("/d",))
+    assert is_pure(Sys.OPEN, ("/f", "r"))
+    assert not is_pure(Sys.OPEN, ("/f", "w"))
+    assert not is_pure(Sys.PWRITE, (1, b"x", 0))
+    assert not is_pure(Sys.FSYNC, (1,))
+
+
+def test_to_dot_renders():
+    dot = _linear_loop().to_dot()
+    assert "digraph" in dot and "read" in dot and "style=dashed" not in dot
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(1, 8), weak_at=st.integers(0, 7))
+def test_chain_graphs_validate(n, weak_at):
+    """Any linear chain of syscall nodes with one optional weak edge is a
+    valid foreaction graph."""
+    b = GraphBuilder("chain")
+    for i in range(n):
+        b.AddSyscallNode(f"s{i}", Sys.PREAD, lambda c, e: None)
+    for i in range(n - 1):
+        b.SyscallSetNext(f"s{i}", f"s{i+1}", weak=(i == weak_at))
+    b.SyscallSetNext(f"s{n-1}", None)
+    g = b.Build()
+    g.validate()
+    assert len(g.syscall_nodes) == n
+    assert g.num_loops == 0

@@ -1,0 +1,157 @@
+"""Pallas kernel sweeps: every kernel vs its pure-jnp oracle, in
+interpret mode (the kernel body executes in Python on CPU), across
+shapes and dtypes; plus custom-vjp gradient checks on the ops wrappers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.decode_attention import flash_decode
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.mamba2_scan import mamba2_scan
+from repro.kernels.rwkv6_scan import rwkv6_scan
+
+RNG = np.random.default_rng(0)
+
+
+def rnd(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, dtype)
+
+
+# -- flash attention ------------------------------------------------------------
+@pytest.mark.parametrize("B,H,KV,S,T,D,causal", [
+    (1, 4, 4, 128, 128, 64, True),
+    (2, 8, 2, 128, 256, 64, True),     # GQA + cross lengths
+    (1, 2, 1, 256, 256, 128, False),   # MQA, non-causal
+    (1, 4, 2, 128, 128, 256, True),    # gemma-size head_dim
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, H, KV, S, T, D, causal, dtype):
+    q, k, v = rnd((B, H, S, D), dtype), rnd((B, KV, T, D), dtype), rnd((B, KV, T, D), dtype)
+    o_ref = ref.attention_naive(q, k, v, causal)
+    o_ker = flash_attention_fwd(q, k, v, causal, block_q=64, block_k=64,
+                                interpret=True)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(o_ref, np.float32),
+                               np.asarray(o_ker, np.float32), atol=tol, rtol=tol)
+
+
+def test_blockwise_ref_matches_naive_ragged_lengths():
+    q, k, v = rnd((2, 4, 300, 64)), rnd((2, 2, 300, 64)), rnd((2, 2, 300, 64))
+    o1 = ref.attention_naive(q, k, v, True)
+    o2 = ref.attention_blockwise(q, k, v, True, block_q=128, block_k=128)
+    np.testing.assert_allclose(o1, o2, atol=2e-5, rtol=2e-5)
+
+
+# -- decode attention -------------------------------------------------------------
+@pytest.mark.parametrize("B,H,KV,T,D", [
+    (2, 8, 2, 512, 64), (1, 4, 1, 1024, 128), (3, 6, 6, 512, 64)])
+def test_flash_decode_sweep(B, H, KV, T, D):
+    q = rnd((B, H, D))
+    k, v = rnd((B, KV, T, D)), rnd((B, KV, T, D))
+    length = jnp.asarray(RNG.integers(1, T + 1, B), jnp.int32)
+    o_ref = ref.decode_attention_naive(q, k, v, length)
+    o_ker = flash_decode(q, k, v, length, block_k=128, interpret=True)
+    np.testing.assert_allclose(o_ref, o_ker, atol=2e-5, rtol=2e-5)
+
+
+# -- mamba2 -------------------------------------------------------------------------
+@pytest.mark.parametrize("B,S,H,P,G,N,chunk,hb", [
+    (2, 128, 8, 16, 2, 8, 32, 4),
+    (1, 256, 4, 32, 1, 16, 64, 4),   # single group (zamba2 style)
+    (2, 64, 8, 64, 8, 32, 32, 8),    # per-head groups
+])
+def test_mamba2_kernel_sweep(B, S, H, P, G, N, chunk, hb):
+    x = rnd((B, S, H, P))
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (B, S, H)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.5, 2, H), jnp.float32)
+    Bm, Cm = rnd((B, S, G, N)), rnd((B, S, G, N))
+    h0 = rnd((B, H, P, N))
+    y1, h1 = ref.mamba2_scan_naive(x, dt, A, Bm, Cm, h0)
+    y2, h2 = mamba2_scan(x, dt, A, Bm, Cm, h0, chunk=chunk, head_block=hb,
+                         interpret=True)
+    np.testing.assert_allclose(y1, y2, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(h1, h2, atol=1e-4, rtol=1e-4)
+
+
+# -- rwkv6 ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,S,H,K,V,chunk,sub", [
+    (2, 128, 4, 16, 16, 32, 16),
+    (1, 256, 2, 64, 64, 64, 32),
+    (2, 64, 8, 32, 32, 64, 32),
+])
+def test_rwkv6_kernel_sweep(B, S, H, K, V, chunk, sub):
+    r, k, v = rnd((B, S, H, K)), rnd((B, S, H, K)), rnd((B, S, H, V))
+    w = jnp.asarray(-RNG.uniform(0.01, 3.0, (B, S, H, K)), jnp.float32)
+    u = rnd((H, K))
+    s0 = rnd((B, H, K, V))
+    yc, sc = ref.rwkv6_scan_chunked(r, k, v, w, u, s0, chunk=chunk)
+    y2, s2 = rwkv6_scan(r, k, v, w, u, s0, chunk=chunk, sub=sub, interpret=True)
+    np.testing.assert_allclose(yc, y2, atol=5e-5, rtol=5e-5)
+    np.testing.assert_allclose(sc, s2, atol=5e-5, rtol=5e-5)
+    # and the chunked math equals the token recurrence
+    yn, sn = ref.rwkv6_scan_naive(r, k, v, w, u, s0)
+    np.testing.assert_allclose(yn, y2, atol=2e-3, rtol=2e-3)
+
+
+# -- decode steps equal scan prefixes -------------------------------------------------
+def test_mamba2_decode_equals_scan():
+    B, S, H, P, G, N = 2, 16, 4, 8, 2, 8
+    x = rnd((B, S, H, P))
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (B, S, H)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.5, 2, H), jnp.float32)
+    Bm, Cm = rnd((B, S, G, N)), rnd((B, S, G, N))
+    y, _ = ref.mamba2_scan_naive(x, dt, A, Bm, Cm)
+    h = jnp.zeros((B, H, P, N), jnp.float32)
+    for t in range(S):
+        yt, h = ops.mamba2_decode(x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t], h)
+        np.testing.assert_allclose(yt, y[:, t], atol=3e-5, rtol=3e-5)
+
+
+def test_rwkv6_decode_equals_scan():
+    B, S, H, K = 2, 16, 4, 8
+    r, k, v = rnd((B, S, H, K)), rnd((B, S, H, K)), rnd((B, S, H, K))
+    w = jnp.asarray(-RNG.uniform(0.05, 1.0, (B, S, H, K)), jnp.float32)
+    u = rnd((H, K))
+    y, _ = ref.rwkv6_scan_naive(r, k, v, w, u)
+    s = jnp.zeros((B, H, K, K), jnp.float32)
+    for t in range(S):
+        yt, s = ops.rwkv6_decode(r[:, t], k[:, t], v[:, t], w[:, t], u, s)
+        np.testing.assert_allclose(yt, y[:, t], atol=3e-5, rtol=3e-5)
+
+
+# -- custom vjp: pallas fwd + ref bwd == ref fwd+bwd ------------------------------------
+def test_attention_custom_vjp_grads():
+    q, k, v = rnd((1, 2, 64, 32)), rnd((1, 2, 64, 32)), rnd((1, 2, 64, 32))
+
+    def f_ker(q, k, v):
+        return ops.attention(q, k, v, causal=True, impl="interpret").sum()
+
+    def f_ref(q, k, v):
+        return ops.attention(q, k, v, causal=True, impl="ref").sum()
+
+    g1 = jax.grad(f_ker, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, atol=2e-4, rtol=2e-4)
+
+
+def test_mamba2_custom_vjp_grads():
+    B, S, H, P, G, N = 1, 64, 2, 8, 1, 8
+    x = rnd((B, S, H, P))
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (B, S, H)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.5, 2, H), jnp.float32)
+    Bm, Cm = rnd((B, S, G, N)), rnd((B, S, G, N))
+
+    def f(impl):
+        def g(x, Bm, Cm):
+            y, _ = ops.mamba2(x, dt, A, Bm, Cm, impl=impl, chunk=32)
+            return (y ** 2).sum()
+        return g
+
+    g1 = jax.grad(f("interpret"), argnums=(0, 1, 2))(x, Bm, Cm)
+    g2 = jax.grad(f("ref"), argnums=(0, 1, 2))(x, Bm, Cm)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, atol=2e-3, rtol=2e-3)

@@ -1,0 +1,62 @@
+"""Optimizer + gradient-compression codec tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from repro.optim.compress import dequantize_int8, int8_codec_roundtrip, quantize_int8
+
+
+def test_adamw_reduces_quadratic_loss():
+    cfg = AdamWConfig(lr=0.1, warmup_steps=1, total_steps=200, weight_decay=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0, 5.0])}
+    st = adamw_init(cfg, params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}  # d/dw of w^2
+        params, st, _ = adamw_update(cfg, params, grads, st)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+
+
+def test_adamw_master_is_distinct_buffer():
+    cfg = AdamWConfig()
+    params = {"w": jnp.ones(8, jnp.float32)}
+    st = adamw_init(cfg, params)
+    # donation safety: master must not alias the fp32 params
+    assert st["master"]["w"].unsafe_buffer_pointer() != params["w"].unsafe_buffer_pointer()
+
+
+def test_schedule_warmup_and_decay():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+    lrs = [float(cosine_schedule(cfg, jnp.asarray(s))) for s in (0, 5, 10, 100)]
+    assert lrs[0] == 0.0 and abs(lrs[1] - 0.5) < 1e-6
+    assert abs(lrs[2] - 1.0) < 1e-6 and abs(lrs[3] - 0.1) < 1e-6
+
+
+def test_int8_quantize_bounds():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(64, 64)) * 5, jnp.float32)
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s) - x))
+    assert err.max() <= float(s) * 0.5 + 1e-6  # half-ulp of the scale
+
+
+def test_int8_error_feedback_preserves_sum():
+    """x_hat + err == x + err_in: no gradient mass is lost across steps."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(128,)), jnp.float32)
+    err = jnp.asarray(rng.normal(size=(128,)) * 0.01, jnp.float32)
+    xhat, new_err = int8_codec_roundtrip(x, err)
+    np.testing.assert_allclose(np.asarray(xhat + new_err),
+                               np.asarray(x + err), rtol=1e-6, atol=1e-6)
+
+
+def test_int8_error_feedback_converges_on_repeated_grads():
+    """Accumulated quantized steps track the true sum (EF property)."""
+    g = jnp.asarray([0.003, -1.0, 0.5, 2e-4], jnp.float32)
+    err = None
+    acc = jnp.zeros_like(g)
+    for _ in range(100):
+        xhat, err = int8_codec_roundtrip(g, err)
+        acc = acc + xhat
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(100 * g),
+                               rtol=0.02, atol=0.02)

@@ -1,0 +1,171 @@
+"""Store substrate tests: recordio, B+-tree, LSM vs dict oracles."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Foreactor, MemDevice, io
+from repro.store import plugins
+from repro.store.bptree import BPTree
+from repro.store.fileutils import cp_file, du_dir
+from repro.store.lsm import LSMTree
+from repro.store.recordio import RecordShardReader, RecordShardWriter
+
+
+# -- recordio ----------------------------------------------------------------
+def test_recordio_roundtrip():
+    dev = MemDevice()
+    w = RecordShardWriter(dev, "/s.rio", 16)
+    recs = [bytes([i]) * 16 for i in range(10)]
+    for r in recs:
+        w.append(r)
+    w.close()
+    rd = RecordShardReader(dev, "/s.rio")
+    assert len(rd) == 10
+    assert [rd.read_record(i) for i in range(10)] == recs
+    with pytest.raises(IndexError):
+        rd.read_record(10)
+
+
+# -- B+-tree -------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 400),
+    degree=st.integers(4, 64),
+    seed=st.integers(0, 99),
+)
+def test_bptree_matches_dict_oracle(n, degree, seed):
+    rng = np.random.default_rng(seed)
+    keys = np.sort(rng.choice(np.arange(10 * n, dtype=np.uint64), n, replace=False))
+    vals = rng.integers(0, 2**60, n).astype(np.uint64)
+    oracle = dict(zip(keys.tolist(), vals.tolist()))
+    dev = MemDevice()
+    t = BPTree(dev, "/t.db", degree=degree)
+    t.bulk_load(keys, vals)
+    # point lookups
+    for k in list(oracle)[:20]:
+        assert t.search(int(k)) == oracle[k]
+    assert t.search(int(keys[-1]) + 1) is None
+    # range scan
+    lo, hi = int(keys[0]), int(keys[min(n - 1, n // 2)])
+    expect = sorted((k, v) for k, v in oracle.items() if lo <= k <= hi)
+    assert t.scan(lo, hi) == expect
+    # cold pointer-chase equals cached search
+    for k in list(oracle)[:5]:
+        assert t.search_cold(int(k)) == oracle[k]
+
+
+def test_bptree_reopen():
+    dev = MemDevice()
+    keys = np.arange(100, dtype=np.uint64) * 3
+    vals = keys + 7
+    BPTree(dev, "/t.db", degree=16).bulk_load(keys, vals)
+    t2 = BPTree(dev, "/t.db").open()
+    assert t2.degree == 16
+    assert t2.search(30) == 37
+    assert len(t2.scan(0, 500)) == 100
+
+
+def test_bptree_foreactor_scan_load_equivalence():
+    dev = MemDevice()
+    keys = np.arange(3000, dtype=np.uint64) * 2
+    vals = keys * 5 + 1
+    fa = Foreactor(device=dev, backend="io_uring", depth=16)
+    plugins.register_all(fa)
+    # load under speculation
+    t = BPTree(dev, "/fa.db", degree=50)
+    load = fa.wrap("bptree_load", plugins.capture_bptree_load)(plugins.load_with_graph)
+    load(t, keys, vals)
+    # verify against a plain-device reopen
+    t2 = BPTree(dev, "/fa.db").open()
+    scan = fa.wrap("bptree_scan", plugins.capture_bptree_scan)(plugins.scan_with_graph)
+    got = scan(t2, 100, 3000)
+    expect = [(int(k), int(v)) for k, v in zip(keys, vals) if 100 <= k <= 3000]
+    assert got == expect
+    fa.shutdown()
+
+
+# -- LSM -------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 999), limit=st.sampled_from([1 << 12, 1 << 14]))
+def test_lsm_matches_dict_oracle(seed, limit):
+    rng = np.random.default_rng(seed)
+    dev = MemDevice()
+    lsm = LSMTree(dev, "/db", memtable_limit_bytes=limit, l0_limit=3,
+                  fsync_writes=False)
+    oracle = {}
+    for i in range(1200):
+        k = int(rng.integers(0, 300))
+        if rng.random() < 0.1:
+            lsm.delete(k)
+            oracle[k] = None
+        else:
+            v = f"v{k}_{i}".encode()
+            lsm.put(k, v)
+            oracle[k] = v
+    for k in list(oracle)[:100]:
+        assert lsm.get(k) == oracle[k], k
+    assert lsm.get(10**9) is None
+
+
+def test_lsm_compaction_preserves_newest():
+    dev = MemDevice()
+    lsm = LSMTree(dev, "/db", memtable_limit_bytes=1 << 10, l0_limit=2,
+                  fsync_writes=False)
+    for round_ in range(5):
+        for k in range(50):
+            lsm.put(k, f"r{round_}k{k}".encode())
+    lsm.flush()
+    assert lsm.get(17) == b"r4k17"
+    assert lsm.table_count() > 0
+
+
+def test_lsm_reopen_from_manifest():
+    dev = MemDevice()
+    lsm = LSMTree(dev, "/db", memtable_limit_bytes=1 << 10, fsync_writes=False)
+    for k in range(200):
+        lsm.put(k, bytes([k % 251]) * 8)
+    lsm.flush()
+    lsm2 = LSMTree.open_existing(dev, "/db")
+    for k in (0, 57, 199):
+        assert lsm2.get(k) == bytes([k % 251]) * 8
+
+
+def test_lsm_get_foreactor_equivalence():
+    rng = np.random.default_rng(2)
+    dev = MemDevice()
+    lsm = LSMTree(dev, "/db", memtable_limit_bytes=1 << 12, l0_limit=50,
+                  fsync_writes=False)
+    ref = {}
+    for k in rng.permutation(500):
+        v = f"val{k}".encode()
+        lsm.put(int(k), v)
+        ref[int(k)] = v
+    lsm.flush()
+    fa = Foreactor(device=dev, backend="io_uring", depth=16)
+    plugins.register_all(fa)
+    get = fa.wrap("lsm_get", plugins.capture_lsm_get)(lambda l, k: l.get(k))
+    for k in rng.choice(500, 60):
+        assert get(lsm, int(k)) == ref[int(k)]
+    assert get(lsm, 10**7) is None  # full-chain miss
+    fa.shutdown()
+
+
+# -- file utilities -----------------------------------------------------------------
+def test_du_cp_equivalence():
+    dev = MemDevice()
+    for i in range(12):
+        fd = dev.open(f"/dir/f{i}", "w")
+        dev.pwrite(fd, b"x" * (i * 100 + 1), 0)
+        dev.close(fd)
+    fa = Foreactor(device=dev, backend="io_uring", depth=8)
+    plugins.register_all(fa)
+    du = fa.wrap("du", plugins.capture_du)(du_dir)
+    assert du(dev, "/dir") == du_dir(dev, "/dir")
+    src_data = bytes(np.random.default_rng(0).integers(0, 256, 300000, dtype=np.uint8))
+    fd = dev.open("/src", "w"); dev.pwrite(fd, src_data, 0); dev.close(fd)
+    cp = fa.wrap("cp", plugins.capture_cp)(cp_file)
+    cp(dev, "/src", "/dst", 32 * 1024)
+    fd = dev.open("/dst", "r")
+    assert dev.pread(fd, len(src_data), 0) == src_data
+    fa.shutdown()

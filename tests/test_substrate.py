@@ -1,0 +1,118 @@
+"""Checkpoint + data-pipeline tests: roundtrip, corruption fallback,
+async overlap, replication, deterministic resumability."""
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointError, CheckpointManager
+from repro.core import MemDevice
+from repro.data import (DataConfig, ShardedTokenDataset, TokenBatchLoader,
+                        write_synthetic_dataset)
+
+
+def tree():
+    return {
+        "a": {"w": np.arange(4000, dtype=np.float32).reshape(40, 100),
+              "b": np.ones(100, dtype=np.float32)},
+        "emb": np.random.default_rng(0).normal(size=(500, 32)).astype(np.float32),
+        "step": np.asarray(7, np.int32),
+    }
+
+
+def test_checkpoint_roundtrip_and_validation():
+    dev = MemDevice()
+    mgr = CheckpointManager(dev, "/ck", num_shards=4, chunk_bytes=1 << 12, keep=2)
+    t = tree()
+    mgr.save(10, t, extra={"epoch": 1})
+    assert mgr.latest_step() == 10
+    assert mgr.validate(10)
+    restored, extra = mgr.restore_tree(10, t)
+    assert extra == {"epoch": 1}
+    for (k1, a), (k2, b) in zip(
+            sorted({"a.w": t["a"]["w"], "a.b": t["a"]["b"], "emb": t["emb"]}.items()),
+            sorted({"a.w": restored["a"]["w"], "a.b": restored["a"]["b"],
+                    "emb": restored["emb"]}.items())):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_checkpoint_gc_and_fallback_on_corruption():
+    dev = MemDevice()
+    mgr = CheckpointManager(dev, "/ck", num_shards=2, chunk_bytes=1 << 12, keep=2)
+    t = tree()
+    for s in (1, 2, 3):
+        mgr.save(s, t)
+    assert mgr.committed_steps() == [2, 3]  # keep=2 tombstoned step 1
+    # corrupt the newest shard -> restore_latest falls back to step 2
+    fd = dev.open("/ck/step_0000000003/shard_0000.bin", "w")
+    dev.pwrite(fd, b"garbage", 0)
+    dev.close(fd)
+    out = mgr.restore_latest(like=t)
+    assert out is not None and out[0] == 2
+
+
+def test_checkpoint_crc_detects_bitrot():
+    dev = MemDevice()
+    mgr = CheckpointManager(dev, "/ck", num_shards=2, chunk_bytes=1 << 12)
+    t = tree()
+    mgr.save(5, t)
+    # flip one byte without changing the size (validate() passes, crc fails)
+    path = "/ck/step_0000000005/shard_0000.bin"
+    fd = dev.open(path, "rw")
+    b = dev.pread(fd, 1, 100)
+    dev.pwrite(fd, bytes([b[0] ^ 0xFF]), 100)
+    dev.close(fd)
+    assert mgr.validate(5)  # sizes still match
+    with pytest.raises(CheckpointError, match="crc"):
+        mgr.restore_tree(5, t)
+
+
+def test_checkpoint_async_and_replicate():
+    dev = MemDevice()
+    mgr = CheckpointManager(dev, "/ck", num_shards=2, chunk_bytes=1 << 12)
+    t = tree()
+    mgr.save_async(20, t)
+    mgr.wait_pending()
+    assert mgr.latest_step() == 20
+    dst = CheckpointManager(dev, "/ck_dr", num_shards=2, chunk_bytes=1 << 12)
+    mgr.replicate(20, dst)
+    r, _ = dst.restore_tree(20, t)
+    np.testing.assert_array_equal(r["emb"], t["emb"])
+
+
+def make_loader(dev, cfg, prefetch=False):
+    paths = [f"/data/shard_{i:05d}.rio" for i in range(3)]
+    ds = ShardedTokenDataset(dev, paths)
+    return TokenBatchLoader(ds, cfg, prefetch=prefetch)
+
+
+def test_pipeline_deterministic_and_resumable():
+    dev = MemDevice()
+    cfg = DataConfig(seq_len=32, batch_size=8, seed=11)
+    write_synthetic_dataset(dev, "/data", cfg, 3, 40, vocab_size=100)
+    l1 = make_loader(dev, cfg)
+    l2 = make_loader(dev, cfg)
+    b_a = l1.load(0, 0)
+    _ = l1.load(0, 1)
+    b_c = l1.load(0, 2)
+    # a fresh loader resumed at step 2 reproduces the batch exactly
+    b_c2 = l2.load(0, 2)
+    np.testing.assert_array_equal(b_c["tokens"], b_c2["tokens"])
+    # labels are next-token shifts of tokens
+    np.testing.assert_array_equal(b_a["tokens"][:, 1:], b_a["labels"][:, :-1])
+    # different epochs shuffle differently
+    b_e1 = l2.load(1, 0)
+    assert not np.array_equal(b_a["tokens"], b_e1["tokens"])
+    l1.close(); l2.close()
+
+
+def test_pipeline_covers_every_record_once_per_epoch():
+    dev = MemDevice()
+    cfg = DataConfig(seq_len=16, batch_size=5, seed=3)
+    write_synthetic_dataset(dev, "/data", cfg, 3, 10, vocab_size=50)
+    loader = make_loader(dev, cfg)
+    seen = []
+    for s in range(loader.steps_per_epoch):
+        seen.extend(loader.batch_indices(0, s).tolist())
+    assert len(seen) == len(set(seen))  # no duplicates within an epoch
+    assert len(seen) == loader.steps_per_epoch * cfg.batch_size
+    loader.close()
