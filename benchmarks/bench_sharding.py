@@ -1,0 +1,168 @@
+"""Multi-device scaling: restore / data-pipeline throughput vs device count.
+
+The sharded substrate's claim (docs/ARCHITECTURE.md, "Sharded multi-device
+substrate"): with one queue pair per sub-device, a single ``submit_all``
+crossing fans a pre-issued batch across N devices and aggregate bandwidth
+approaches ``sum(BW_i)``.  This section measures it on the two storage-heavy
+consumers:
+
+* **restore** — ``CheckpointManager.restore`` of a striped checkpoint whose
+  shard files live on distinct sub-devices;
+* **pipeline** — ``TokenBatchLoader`` batches over record shards placed on
+  distinct sub-devices.
+
+Baselines per device count: ``sync`` (no speculation), ``io_uring`` (one
+queue pair for the whole sharded device, worker pool sized like one device's
+queue pair) and ``multi_queue`` (one queue pair per device).  Each simulated
+device has ``CHANNELS``-way internal parallelism, so the single queue pair
+saturates at one device's concurrency while per-device queue pairs scale.
+
+Results go to ``benchmarks/results/sharding.json`` (common.write_results
+conventions); the headline figure is ``restore.speedup_multi_queue_4dev`` —
+aggregate restore bandwidth at 4 devices over 1 device, expected >= 2.5x.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import (DeviceProfile, Foreactor, MemDevice, ShardedDevice,
+                        SimulatedDevice, io)
+from repro.checkpoint import CheckpointManager
+from repro.data import (DataConfig, ShardedTokenDataset, TokenBatchLoader,
+                        write_synthetic_dataset)
+
+from .common import Row, timeit_min, write_results
+
+DEVICE_COUNTS = (1, 2, 4, 8)
+BACKENDS = ("sync", "io_uring", "multi_queue")
+
+#: per-device profile: few channels and ms-scale latency so that (a) one
+#: device saturates quickly and (b) Python sleep granularity (~1 ms floor in
+#: CI containers) cannot blur the effect.  A queue pair's io_workqueue is
+#: sized to its device's channels.
+CHANNELS = 4
+SHARD_PROFILE = DeviceProfile(channels=CHANNELS, base_latency=4.0e-3,
+                              per_byte=1.0e-9, crossing_cost=4e-6,
+                              metadata_latency=1.0e-3)
+
+
+def _sharded(n: int) -> ShardedDevice:
+    return ShardedDevice.simulated(n, profile=SHARD_PROFILE)
+
+
+def _restore_bytes(mgr: CheckpointManager, step: int) -> int:
+    m = mgr.read_manifest(step)
+    return sum(leaf["nbytes"] for leaf in m["leaves"])
+
+
+def bench_restore(chunk_bytes: int = 64 * 1024, num_files: int = 96,
+                  repeats: int = 2) -> Dict[str, Dict]:
+    """Checkpoint restore bandwidth vs device count per backend."""
+    tree = {"w": np.arange((chunk_bytes // 4) * num_files,
+                           dtype=np.float32)}  # num_files chunks of chunk_bytes
+    out: Dict[str, Dict] = {"config": {
+        "device_counts": list(DEVICE_COUNTS), "chunk_bytes": chunk_bytes,
+        "num_extents": num_files, "channels_per_device": CHANNELS,
+    }}
+    for n in DEVICE_COUNTS:
+        dev = _sharded(n)
+        # write once per topology with a fast manager (placement only);
+        # shut its worker pools down so they don't linger into the timings
+        mgr0 = CheckpointManager(dev, "/ck", num_shards=num_files,
+                                 chunk_bytes=chunk_bytes, keep=2)
+        mgr0.save(1, tree)
+        nbytes = _restore_bytes(mgr0, 1)
+        mgr0.fa.shutdown()
+        for backend in BACKENDS:
+            fa = Foreactor(device=dev, backend=backend, depth=2 * num_files,
+                           workers=CHANNELS)
+            mgr = CheckpointManager(dev, "/ck", fa=fa, num_shards=num_files,
+                                    chunk_bytes=chunk_bytes, keep=2)
+            # warmup amortizes queue-pair setup; the serial sync baseline has
+            # negligible variance, one unwarmed run is enough
+            t = timeit_min(lambda: mgr.restore(1, check_crc=False),
+                           repeats=1 if backend == "sync" else repeats,
+                           warmup=0 if backend == "sync" else 1)
+            fa.shutdown()
+            out.setdefault(backend, {})[str(n)] = {
+                "seconds": t,
+                "bandwidth_mb_s": nbytes / t / 1e6,
+            }
+    mq = out["multi_queue"]
+    out["speedup_multi_queue_4dev"] = (
+        mq["4"]["bandwidth_mb_s"] / mq["1"]["bandwidth_mb_s"])
+    out["speedup_multi_queue_8dev"] = (
+        mq["8"]["bandwidth_mb_s"] / mq["1"]["bandwidth_mb_s"])
+    return out
+
+
+def bench_pipeline(batches: int = 2) -> Dict[str, Dict]:
+    """TokenBatchLoader steady-state throughput vs device count per backend.
+
+    A warmup pass fills the double-buffer and builds the per-thread queue
+    pairs; the timed pass then measures the pipeline as a trainer sees it
+    mid-epoch (each timed ``load`` continues from the warmup's step counter
+    so the prefetch pipeline stays hot)."""
+    cfg = DataConfig(seq_len=255, batch_size=64)  # 1 KiB records
+    out: Dict[str, Dict] = {"config": {
+        "device_counts": list(DEVICE_COUNTS), "batch_size": cfg.batch_size,
+        "record_bytes": cfg.record_bytes, "batches": batches,
+    }}
+    for n in DEVICE_COUNTS:
+        dev = _sharded(n)
+        paths = write_synthetic_dataset(dev, "/data", cfg, num_shards=16,
+                                        records_per_shard=40, vocab_size=1000)
+        for backend in BACKENDS:
+            ds = ShardedTokenDataset(dev, paths)
+            fa = Foreactor(device=dev, backend=backend,
+                           depth=2 * cfg.batch_size, workers=CHANNELS)
+            loader = TokenBatchLoader(ds, cfg, fa=fa,
+                                      prefetch=(backend != "sync"))
+            state = {"step": 0}
+
+            def run_batches():
+                for _ in range(batches):
+                    loader.load(0, state["step"])
+                    state["step"] += 1
+
+            t = timeit_min(run_batches, repeats=2)
+            loader.close()
+            ds.close()
+            fa.shutdown()
+            nbytes = batches * cfg.batch_size * cfg.record_bytes
+            out.setdefault(backend, {})[str(n)] = {
+                "seconds": t,
+                "bandwidth_mb_s": nbytes / t / 1e6,
+            }
+    mq = out["multi_queue"]
+    out["speedup_multi_queue_4dev"] = (
+        mq["4"]["bandwidth_mb_s"] / mq["1"]["bandwidth_mb_s"])
+    return out
+
+
+def run() -> List[Row]:
+    restore = bench_restore()
+    pipeline = bench_pipeline()
+    path = write_results("sharding", {"restore": restore, "pipeline": pipeline})
+    rows: List[Row] = []
+    for section, data in (("restore", restore), ("pipeline", pipeline)):
+        for backend in BACKENDS:
+            for n in DEVICE_COUNTS:
+                cell = data[backend][str(n)]
+                rows.append((
+                    f"sharding_{section}_{backend}_dev{n}",
+                    cell["seconds"] * 1e6,
+                    f"bw={cell['bandwidth_mb_s']:.1f}MB/s",
+                ))
+    rows.append(("sharding_restore_speedup_4dev",
+                 0.0, f"x{restore['speedup_multi_queue_4dev']:.2f}"))
+    rows.append(("sharding_results_json", 0.0, path))
+    return rows
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

@@ -7,6 +7,8 @@ Prints ``name,us_per_call,derived`` CSV.  Sections:
 * Fig. 8/9 — LSM Get: memory ratio, record size, tails, clients, op mix,
   skew                                          (bench_lsm)
 * Fig. 10 — overhead breakdown + framework-plane I/O (bench_overhead)
+* Sharding — multi-device restore/pipeline scaling      (bench_sharding;
+  structured results also land in benchmarks/results/sharding.json)
 
 Roofline tables (§Roofline) are produced separately by
 ``python -m benchmarks.roofline`` from the dry-run reports.
@@ -17,7 +19,8 @@ import time
 
 
 def main() -> None:
-    from . import bench_bptree, bench_lsm, bench_overhead, bench_utilities
+    from . import (bench_bptree, bench_lsm, bench_overhead, bench_sharding,
+                   bench_utilities)
     from .common import fmt
 
     sections = [
@@ -25,6 +28,7 @@ def main() -> None:
         ("fig7_table1_bptree", bench_bptree.run),
         ("fig8_fig9_lsm", bench_lsm.run),
         ("fig10_overhead_framework", bench_overhead.run),
+        ("sharding_multi_device", bench_sharding.run),
     ]
     print("name,us_per_call,derived")
     for name, fn in sections:

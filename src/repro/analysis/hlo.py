@@ -158,9 +158,15 @@ def _dot_flops(comp: _Computation, op: _Op) -> int:
     out_elems = 1
     for d in res[0][1]:
         out_elems *= d
-    m = re.search(r"dot\(%?([\w.\-]+),", op.line)
-    lhs_sig = comp.symbols.get(m.group(1), "") if m else ""
-    lhs_shapes = _shapes_in(lhs_sig)
+    # operand format varies by HLO version: `dot(%name, ...)` (shape via the
+    # symbol table) vs `dot(f32[256,256]{1,0} %name, ...)` (inline shape)
+    m = re.search(r"dot\(((?:[^,{}\[\]]|\[[^\]]*\]|\{[^}]*\})+),", op.line)
+    lhs_txt = m.group(1) if m else ""
+    lhs_shapes = _shapes_in(lhs_txt)
+    if not lhs_shapes:
+        nm = re.search(r"%?([\w.\-]+)\s*$", lhs_txt.strip())
+        lhs_sig = comp.symbols.get(nm.group(1), "") if nm else ""
+        lhs_shapes = _shapes_in(lhs_sig)
     cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
     contract = 1
     if lhs_shapes and cd:

@@ -1,4 +1,14 @@
-"""Sharded, fault-tolerant checkpoint manager (see package docstring)."""
+"""Sharded, fault-tolerant checkpoint manager (see package docstring).
+
+Shard *files* were always round-robin striped over leaf chunks; on a
+:class:`repro.core.device.ShardedDevice` each shard file is additionally
+placed on a distinct sub-device (``Device.place``), so a restore's pre-issued
+pread batch fans out across queue pairs and aggregate bandwidth scales with
+device count (docs/ARCHITECTURE.md, "Sharded multi-device substrate").
+Manifest and commit marker stay in the bare namespace: the sharded device
+hash-routes them and merges ``getdents`` across sub-devices, so discovery
+(:meth:`CheckpointManager.committed_steps`) is topology-blind.
+"""
 
 from __future__ import annotations
 
@@ -89,7 +99,10 @@ class CheckpointManager:
         return f"{self.root}/step_{step:010d}"
 
     def _shard_path(self, step: int, i: int) -> str:
-        return f"{self.step_dir(step)}/shard_{i:04d}.bin"
+        # place() pins shard file i to sub-device i % N on a ShardedDevice
+        # (identity on flat devices), spreading restore/save I/O across
+        # every available queue pair.
+        return self.device.place(f"{self.step_dir(step)}/shard_{i:04d}.bin", hint=i)
 
     # -- save -------------------------------------------------------------------
     def save(self, step: int, tree: Any, extra: Optional[Dict[str, Any]] = None) -> None:
@@ -225,8 +238,15 @@ class CheckpointManager:
     def restore(self, step: int, check_crc: bool = True) -> Tuple[Any, Dict[str, Any]]:
         """Parallel chunked restore -> (flat {name: np.ndarray}, extra)."""
         m = self.read_manifest(step)
-        fds = [io.open(self.device, self._shard_path(step, i), "r")
-               for i in range(m["num_shards"])]
+        paths = [self._shard_path(step, i) for i in range(m["num_shards"])]
+
+        # read-only opens are pure -> pre-issued as one batch; on a sharded
+        # device they fan out to their owning sub-devices in parallel
+        @self.fa.wrap("open_list", lambda paths: {"paths": paths})
+        def _open_all(paths):
+            return [io.open(self.device, p, "r") for p in paths]
+
+        fds = _open_all(paths)
         extents = [_Extent(*e) for e in m["extents"]]
         ext_args = [(fds[e.shard], e.length, e.shard_off) for e in extents]
 

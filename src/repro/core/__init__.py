@@ -8,13 +8,20 @@ Parallelism with Explicit Speculation") as a reusable library:
 * :mod:`repro.core.backends` — io_uring-style queue pair & user thread pool (§5.4)
 * :mod:`repro.core.device` — real / simulated storage devices (§2.1, Fig. 1)
 * :mod:`repro.core.api` — plugin registration + interception surface (§5.1)
+
+The sharded multi-device substrate (``ShardedDevice`` + ``MultiQueueBackend``)
+extends the paper's single queue pair to one queue pair per device; see
+docs/ARCHITECTURE.md for the full paper-to-module map.
 """
 
 from .api import Foreactor, current_session, io, make_foreactor
-from .backends import BACKENDS, QueuePairBackend, SyncBackend, ThreadPoolBackend, make_backend
+from .backends import (
+    BACKENDS, MultiQueueBackend, QueuePairBackend, SyncBackend,
+    ThreadPoolBackend, make_backend,
+)
 from .device import (
     Device, DeviceProfile, MemDevice, NVME_PROFILE, OSDevice, REMOTE_PROFILE,
-    SimulatedDevice,
+    ShardedDevice, SimulatedDevice,
 )
 from .engine import GraphMismatch, SessionStats, SpecSession
 from .graph import BranchNode, ForeactionGraph, GraphBuilder, SyscallNode
@@ -22,9 +29,10 @@ from .syscalls import Sys, is_pure
 
 __all__ = [
     "Foreactor", "current_session", "io", "make_foreactor",
-    "BACKENDS", "QueuePairBackend", "SyncBackend", "ThreadPoolBackend", "make_backend",
+    "BACKENDS", "MultiQueueBackend", "QueuePairBackend", "SyncBackend",
+    "ThreadPoolBackend", "make_backend",
     "Device", "DeviceProfile", "MemDevice", "NVME_PROFILE", "OSDevice",
-    "REMOTE_PROFILE", "SimulatedDevice",
+    "REMOTE_PROFILE", "ShardedDevice", "SimulatedDevice",
     "GraphMismatch", "SessionStats", "SpecSession",
     "BranchNode", "ForeactionGraph", "GraphBuilder", "SyscallNode",
     "Sys", "is_pure",

@@ -9,6 +9,15 @@ activated with ``Foreactor.wrap``.  While an activation is live on a thread,
 every ``io.*`` call on that thread is intercepted by its ``SpecSession``;
 otherwise calls go straight to the device.  Graph instances are per-thread
 (paper: "every foreaction graph instance is per-thread local").
+
+Backend selection is topology-aware: the default ``backend="auto"`` resolves
+to per-device queue pairs (:class:`repro.core.backends.MultiQueueBackend`)
+when the device is a :class:`repro.core.device.ShardedDevice`, and to the
+single io_uring-style queue pair otherwise — existing call sites gain
+multi-device fan-out transparently.
+
+Cross-references: docs/ARCHITECTURE.md ("Public API") maps this module to
+paper §5.1; docs/GLOSSARY.md defines the terms used here.
 """
 
 from __future__ import annotations
@@ -45,7 +54,7 @@ class Foreactor:
     def __init__(
         self,
         device: Optional[Device] = None,
-        backend: str = "io_uring",
+        backend: str = "auto",
         depth: int = 8,
         workers: int = 16,
         strict: bool = False,

@@ -12,6 +12,19 @@ crossing (it is an ordinary blocking syscall on some thread).
 
 ``SyncBackend`` degenerates to synchronous in-place execution and is the
 no-speculation baseline.
+
+``MultiQueueBackend`` is the sharded extension: one queue pair + worker pool
+per sub-device of a :class:`repro.core.device.ShardedDevice`.  ``prepare``
+stays a single engine-facing submission queue, but ``submit_all`` partitions
+the batch by target device (link chains stay whole, routed by their head) and
+pays one boundary crossing *per sub-device touched* — N parallel
+``io_uring_enter`` calls instead of one global queue, so independent requests
+ride independent execution resources and aggregate bandwidth scales with
+device count.
+
+Cross-references: docs/ARCHITECTURE.md ("Backends", "Sharded multi-device
+substrate") maps this module to paper §2.3/§5.4; see docs/GLOSSARY.md for
+*queue-pair crossing* and *link flag*.
 """
 
 from __future__ import annotations
@@ -20,7 +33,7 @@ import queue
 import threading
 from typing import List, Optional
 
-from .device import Device
+from .device import Device, ShardedDevice
 from .syscalls import IORequest, ReqState, Sys, execute
 
 
@@ -146,7 +159,74 @@ class _WorkerPool:
             t.join(timeout=5)
 
 
-class QueuePairBackend(Backend):
+def _chains(batch: List[IORequest]) -> List[List[IORequest]]:
+    """Group a submitted batch into link chains (io_uring IOSQE_IO_LINK): a
+    req with link=True executes before its successor, on the same worker."""
+    chains: List[List[IORequest]] = []
+    chain: List[IORequest] = []
+    for req in batch:
+        chain.append(req)
+        if not req.link:
+            chains.append(chain)
+            chain = []
+    if chain:  # trailing link=True at batch end — still a chain
+        chains.append(chain)
+    return chains
+
+
+class _AsyncBackend(Backend):
+    """Shared SQ/CQ machinery of the async backends: a submission queue, the
+    submitted-request ledger, and event-based completion harvesting.
+    Subclasses define ``_dispatch`` (crossing accounting + routing chains to
+    their worker pools) and own their pool lifecycle."""
+
+    def __init__(self, device: Device):
+        super().__init__(device)
+        self._sq: List[IORequest] = []
+        self._submitted: List[IORequest] = []
+
+    def prepare(self, req: IORequest) -> None:
+        self._sq.append(req)
+
+    def _dispatch(self, batch: List[IORequest]) -> None:
+        raise NotImplementedError
+
+    def _pools(self) -> List[_WorkerPool]:
+        raise NotImplementedError
+
+    def submit_all(self) -> int:
+        if not self._sq:
+            return 0
+        batch, self._sq = self._sq, []
+        self._dispatch(batch)
+        self._submitted.extend(batch)
+        return len(batch)
+
+    def wait(self, req: IORequest):
+        return req.wait_result()
+
+    def cancel_remaining(self) -> int:
+        n = 0
+        for req in self._sq:
+            if req.cancel():
+                n += 1
+        self._sq.clear()
+        for req in self._submitted:
+            if req.cancel():
+                n += 1
+        return n
+
+    def drain(self) -> None:
+        for pool in self._pools():
+            pool.drain()
+        self._submitted = [r for r in self._submitted if not r.done.is_set()]
+
+    def shutdown(self) -> None:
+        for pool in self._pools():
+            pool.shutdown()
+
+
+class QueuePairBackend(_AsyncBackend):
     """io_uring analogue: SQ/CQ queue pair + in-process io_workqueue.
 
     prepare() fills SQ entries with no crossings; submit_all() costs exactly
@@ -158,112 +238,101 @@ class QueuePairBackend(Backend):
 
     def __init__(self, device: Device, workers: int = 16):
         super().__init__(device)
-        self._sq: List[IORequest] = []
         self._pool = _WorkerPool(device, workers)
-        self._submitted: List[IORequest] = []
 
-    def prepare(self, req: IORequest) -> None:
-        self._sq.append(req)
+    def _pools(self) -> List[_WorkerPool]:
+        return [self._pool]
 
-    def submit_all(self) -> int:
-        if not self._sq:
-            return 0
+    def _dispatch(self, batch: List[IORequest]) -> None:
         self.device.charge_crossing()  # the single io_uring_enter()
-        batch, self._sq = self._sq, []
-        # group linked runs: a req with link=True executes before its successor
-        chain: List[IORequest] = []
-        for req in batch:
-            chain.append(req)
-            if not req.link:
-                self._pool.push_chain(chain)
-                chain = []
-        if chain:  # trailing link=True at batch end — still a chain
+        for chain in _chains(batch):
             self._pool.push_chain(chain)
-        self._submitted.extend(batch)
-        return len(batch)
-
-    def wait(self, req: IORequest):
-        return req.wait_result()
-
-    def cancel_remaining(self) -> int:
-        n = 0
-        for req in self._sq:
-            if req.cancel():
-                n += 1
-        self._sq.clear()
-        for req in self._submitted:
-            if req.cancel():
-                n += 1
-        return n
-
-    def drain(self) -> None:
-        self._pool.drain()
-        self._submitted = [r for r in self._submitted if not r.done.is_set()]
-
-    def shutdown(self) -> None:
-        self._pool.shutdown()
 
 
-class ThreadPoolBackend(Backend):
+class ThreadPoolBackend(_AsyncBackend):
     """User-level thread pool: same semantics, one crossing per request."""
 
     name = "user_threads"
 
     def __init__(self, device: Device, workers: int = 16):
         super().__init__(device)
-        self._sq: List[IORequest] = []
         self._pool = _WorkerPool(device, workers)
-        self._submitted: List[IORequest] = []
 
-    def prepare(self, req: IORequest) -> None:
-        self._sq.append(req)
+    def _pools(self) -> List[_WorkerPool]:
+        return [self._pool]
 
-    def submit_all(self) -> int:
-        if not self._sq:
-            return 0
-        batch, self._sq = self._sq, []
-        chain: List[IORequest] = []
+    def _dispatch(self, batch: List[IORequest]) -> None:
         for req in batch:
             self.device.charge_crossing()  # every request is its own syscall
-            chain.append(req)
-            if not req.link:
-                self._pool.push_chain(chain)
-                chain = []
-        if chain:
+        for chain in _chains(batch):
             self._pool.push_chain(chain)
-        self._submitted.extend(batch)
-        return len(batch)
 
-    def wait(self, req: IORequest):
-        return req.wait_result()
 
-    def cancel_remaining(self) -> int:
-        n = 0
-        for req in self._sq:
-            if req.cancel():
-                n += 1
-        self._sq.clear()
-        for req in self._submitted:
-            if req.cancel():
-                n += 1
-        return n
+class MultiQueueBackend(_AsyncBackend):
+    """Per-device queue pairs over a :class:`ShardedDevice`.
 
-    def drain(self) -> None:
-        self._pool.drain()
-        self._submitted = [r for r in self._submitted if not r.done.is_set()]
+    The engine sees the usual single prepare/submit/wait surface; internally
+    each sub-device owns a queue pair and an io_workqueue sized ``workers``
+    (total concurrency = ``num_devices * workers``).  ``submit_all``
+    partitions the batch by the target shard of each link chain's head —
+    chains never split across queues, preserving io_uring link ordering —
+    and charges one crossing on every sub-device that received entries
+    (one ``io_uring_enter`` per touched queue pair).
+    """
 
-    def shutdown(self) -> None:
-        self._pool.shutdown()
+    name = "multi_queue"
+
+    def __init__(self, device: Device, workers: int = 16):
+        if not isinstance(device, ShardedDevice):
+            raise TypeError(
+                "MultiQueueBackend requires a ShardedDevice "
+                f"(got {type(device).__name__}); use 'io_uring' for flat devices"
+            )
+        super().__init__(device)
+        # workers execute against the sharded device (vfd/namespace routing
+        # happens there); the partition decides *which* pool runs a chain and
+        # which sub-device pays the crossing.
+        self._queue_pools = [_WorkerPool(device, workers) for _ in device.devices]
+
+    def _pools(self) -> List[_WorkerPool]:
+        return self._queue_pools
+
+    def _dispatch(self, batch: List[IORequest]) -> None:
+        dev: ShardedDevice = self.device  # type: ignore[assignment]
+        routed: List[tuple] = []
+        touched: set = set()
+        for chain in _chains(batch):
+            head = chain[0]
+            try:
+                qi = dev.route(head.sc, head.args)
+            except OSError:
+                qi = 0  # unknown fd (e.g. closed early): any queue can fail it
+            routed.append((qi, chain))
+            touched.add(qi)
+        for qi in sorted(touched):
+            dev.devices[qi].charge_crossing()  # one enter() per queue pair
+            dev.stats.crossing()  # keep the aggregate view consistent
+        for qi, chain in routed:
+            self._queue_pools[qi].push_chain(chain)
 
 
 BACKENDS = {
     "sync": SyncBackend,
     "io_uring": QueuePairBackend,
     "user_threads": ThreadPoolBackend,
+    "multi_queue": MultiQueueBackend,
 }
 
 
 def make_backend(name: str, device: Device, workers: int = 16) -> Backend:
+    """Instantiate a backend by name.
+
+    ``name="auto"`` picks the best match for the device topology: per-device
+    queue pairs for a :class:`ShardedDevice`, a single io_uring-style queue
+    pair otherwise.
+    """
+    if name == "auto":
+        name = "multi_queue" if isinstance(device, ShardedDevice) else "io_uring"
     cls = BACKENDS[name]
     if cls is SyncBackend:
         return cls(device)

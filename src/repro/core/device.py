@@ -15,15 +15,27 @@ role is played by a ``Device`` object so that
 A *boundary crossing* models the user/kernel transition cost: io_uring-style
 backends pay one crossing per submitted batch, thread-pool/sync backends pay
 one per request (paper §2.3, Table 1).
+
+``ShardedDevice`` composes N independent sub-devices under one namespace
+(``shard3:/path`` addresses sub-device 3) so that pre-issued batches can fan
+out across devices and aggregate bandwidth approaches ``sum(BW_i)``; it pairs
+with :class:`repro.core.backends.MultiQueueBackend`, which keeps one queue
+pair per sub-device.
+
+Cross-references: docs/ARCHITECTURE.md ("Device layer", "Sharded multi-device
+substrate") maps this module to paper §2.1/Fig. 1; terms like *queue-pair
+crossing* are defined in docs/GLOSSARY.md.
 """
 
 from __future__ import annotations
 
 import os
+import re
 import threading
 import time
+import zlib
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 
 @dataclass
@@ -94,6 +106,14 @@ class Device:
     # cost hook for the user/kernel boundary; real devices pay it implicitly.
     def charge_crossing(self) -> None:
         self.stats.crossing()
+
+    def place(self, path: str, hint: int = 0) -> str:
+        """Return the path at which a file striped with index ``hint`` should
+        live.  Flat devices ignore the hint; :class:`ShardedDevice` maps it to
+        a ``shard{k}:`` namespace so callers (checkpoint manager, data
+        pipeline) spread their shard files across sub-devices without knowing
+        the device topology."""
+        return path
 
 
 _FLAGS = {
@@ -202,6 +222,22 @@ NVME_PROFILE = DeviceProfile(
 )
 
 
+def _precise_sleep(dur: float) -> None:
+    """``time.sleep`` has a ~1 ms floor inside CI containers, which would
+    inflate microsecond-scale costs (boundary crossings, ~5 us) two hundred
+    fold and drown the effect being modelled.  Spin for those; sleep for
+    anything >= 100 us — spinning holds the GIL, so longer busy-waits would
+    serialize the worker pools this device model exists to exercise."""
+    if dur <= 0:
+        return
+    if dur >= 1e-4:
+        time.sleep(dur)
+        return
+    end = time.perf_counter() + dur
+    while time.perf_counter() < end:
+        pass
+
+
 class _PageCacheModel:
     """A tiny LRU model of the kernel page cache (paper §6.3 varies its
     capacity via cgroups).  Cache hits serve data without charging device
@@ -270,11 +306,11 @@ class SimulatedDevice(Device):
         p = self.profile
         dur = p.metadata_latency if metadata else p.base_latency + nbytes * p.per_byte
         with self._channels:
-            time.sleep(dur)
+            _precise_sleep(dur)
 
     def charge_crossing(self) -> None:
         self.stats.crossing()
-        time.sleep(self.profile.crossing_cost)
+        _precise_sleep(self.profile.crossing_cost)
 
     def _path_of(self, fd: int) -> str:
         with self._fd_lock:
@@ -345,6 +381,182 @@ class SimulatedDevice(Device):
             return self.inner.fsync(fd)
         finally:
             self.stats.op_end()
+
+
+_SHARD_PREFIX = re.compile(r"^shard(\d+):(.*)$")
+
+
+class ShardedDevice(Device):
+    """N independent sub-devices behind one Device interface.
+
+    Namespace: ``shard{k}:{path}`` pins a path to sub-device ``k``; a bare
+    path is routed by a stable hash of the path string, so unprefixed files
+    (manifests, commit markers) read back from the same sub-device they were
+    written to.  ``getdents`` on a bare path returns the union across all
+    sub-devices — a striped directory reads like one directory.
+
+    File descriptors returned by :meth:`open` are *virtual*: sub-devices may
+    reuse fd numbers between themselves, so the sharded device allocates its
+    own fd space and keeps the (shard, real fd) mapping.  That mapping is also
+    how :class:`repro.core.backends.MultiQueueBackend` routes an fd-addressed
+    ``IORequest`` to the queue pair owning its target device.
+
+    Stats on this object are the *aggregate* view (e.g. ``max_inflight``
+    across all sub-devices — the number to watch when checking that a batch
+    really fanned out); per-device counters live on ``devices[i].stats``.
+    """
+
+    def __init__(self, devices: Sequence[Device]):
+        if not devices:
+            raise ValueError("ShardedDevice needs at least one sub-device")
+        self.devices: List[Device] = list(devices)
+        self.stats = DeviceStats()
+        self._vfds: Dict[int, Tuple[int, int]] = {}  # vfd -> (shard, real fd)
+        self._next_vfd = 1000
+        self._lock = threading.Lock()
+
+    @classmethod
+    def simulated(
+        cls,
+        n: int,
+        profile: DeviceProfile = REMOTE_PROFILE,
+        cache_bytes: int = 0,
+        inner_factory=None,
+    ) -> "ShardedDevice":
+        """N :class:`SimulatedDevice` shards, each with its own latency model
+        and (by default) its own in-memory backing store."""
+        factory = inner_factory if inner_factory is not None else MemDevice
+        return cls([
+            SimulatedDevice(factory(), profile, cache_bytes=cache_bytes)
+            for _ in range(n)
+        ])
+
+    # -- namespace ---------------------------------------------------------
+    @property
+    def num_devices(self) -> int:
+        return len(self.devices)
+
+    def place(self, path: str, hint: int = 0) -> str:
+        return f"shard{hint % len(self.devices)}:{path}"
+
+    def resolve(self, path: str) -> Tuple[int, str]:
+        """(shard index, sub-device path) for any path in the namespace."""
+        m = _SHARD_PREFIX.match(path)
+        if m:
+            idx = int(m.group(1))
+            if idx >= len(self.devices):
+                raise FileNotFoundError(f"no shard {idx}: {path!r}")
+            return idx, m.group(2)
+        return zlib.crc32(path.encode()) % len(self.devices), path
+
+    def shard_of_fd(self, fd: int) -> int:
+        with self._lock:
+            if fd not in self._vfds:
+                raise OSError(f"bad virtual fd {fd}")
+            return self._vfds[fd][0]
+
+    def route(self, sc, args) -> int:
+        """Shard index an IORequest targets — the MultiQueueBackend's
+        queue-selection function.  Path-addressed syscalls resolve the
+        namespace; fd-addressed ones look up the virtual fd."""
+        from .syscalls import Sys  # local import: avoid a module cycle
+
+        if sc in (Sys.OPEN, Sys.FSTATAT, Sys.GETDENTS):
+            return self.resolve(args[0])[0]
+        return self.shard_of_fd(args[0])
+
+    def _lookup(self, fd: int) -> Tuple[Device, int]:
+        with self._lock:
+            if fd not in self._vfds:
+                raise OSError(f"bad virtual fd {fd}")
+            shard, rfd = self._vfds[fd]
+        return self.devices[shard], rfd
+
+    # -- Device interface --------------------------------------------------
+    def open(self, path: str, flags: str = "r") -> int:
+        shard, sub = self.resolve(path)
+        self.stats.op_begin()
+        try:
+            rfd = self.devices[shard].open(sub, flags)
+        finally:
+            self.stats.op_end()
+        with self._lock:
+            vfd = self._next_vfd
+            self._next_vfd += 1
+            self._vfds[vfd] = (shard, rfd)
+        return vfd
+
+    def close(self, fd: int) -> None:
+        dev, rfd = self._lookup(fd)
+        self.stats.op_begin()
+        try:
+            dev.close(rfd)
+        finally:
+            self.stats.op_end()
+        with self._lock:
+            self._vfds.pop(fd, None)
+
+    def pread(self, fd: int, size: int, offset: int) -> bytes:
+        dev, rfd = self._lookup(fd)
+        self.stats.op_begin()
+        try:
+            return dev.pread(rfd, size, offset)
+        finally:
+            self.stats.op_end(read_bytes=size)
+
+    def pwrite(self, fd: int, data: bytes, offset: int) -> int:
+        dev, rfd = self._lookup(fd)
+        self.stats.op_begin()
+        try:
+            return dev.pwrite(rfd, data, offset)
+        finally:
+            self.stats.op_end(write_bytes=len(data))
+
+    def fstatat(self, path: str) -> os.stat_result:
+        shard, sub = self.resolve(path)
+        self.stats.op_begin()
+        try:
+            return self.devices[shard].fstatat(sub)
+        finally:
+            self.stats.op_end()
+
+    def getdents(self, path: str) -> List[str]:
+        m = _SHARD_PREFIX.match(path)
+        self.stats.op_begin()
+        try:
+            if m:
+                shard, sub = self.resolve(path)
+                return self.devices[shard].getdents(sub)
+            # bare path: union across all sub-devices (striped directory)
+            names: set = set()
+            errors = 0
+            for dev in self.devices:
+                try:
+                    names.update(dev.getdents(path))
+                except FileNotFoundError:
+                    errors += 1
+            if errors == len(self.devices):
+                raise FileNotFoundError(path)
+            return sorted(names)
+        finally:
+            self.stats.op_end()
+
+    def fsync(self, fd: int) -> None:
+        dev, rfd = self._lookup(fd)
+        self.stats.op_begin()
+        try:
+            dev.fsync(rfd)
+        finally:
+            self.stats.op_end()
+
+    def charge_crossing(self) -> None:
+        # A single-queue caller crosses into "the kernel" once; attribute the
+        # cost to sub-device 0 (representative) and count it at the aggregate.
+        self.stats.crossing()
+        self.devices[0].charge_crossing()
+
+    def sub_snapshots(self) -> List[dict]:
+        return [d.stats.snapshot() for d in self.devices]
 
 
 class MemDevice(Device):

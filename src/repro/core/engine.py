@@ -16,6 +16,15 @@ graph.  Every intercepted I/O call:
 
 On function exit, remaining speculative requests are cancelled and the
 backend drained (the cancellation overhead of paper Fig. 10).
+
+The engine is backend-agnostic: a batch submitted through
+:class:`repro.core.backends.MultiQueueBackend` fans out across the queue
+pairs of a sharded device with no change here — routing is a backend/device
+concern, Algorithm 1 only ever sees prepare/submit/wait.
+
+Cross-references: docs/ARCHITECTURE.md ("Pre-issuing engine") maps this
+module to paper §5.2; *frontier*, *epoch vector*, *pre-issue* and friends are
+defined in docs/GLOSSARY.md.
 """
 
 from __future__ import annotations
@@ -51,6 +60,7 @@ class SessionStats:
     intercepted: int = 0
     untracked: int = 0
     pre_issued: int = 0
+    submits: int = 0  # non-empty submit_all() batches (queue-pair crossings)
     served_async: int = 0
     served_sync: int = 0
     cancelled: int = 0
@@ -62,8 +72,8 @@ class SessionStats:
 
     def merge(self, other: "SessionStats") -> None:
         for f in (
-            "intercepted", "untracked", "pre_issued", "served_async", "served_sync",
-            "cancelled", "wasted_completions",
+            "intercepted", "untracked", "pre_issued", "submits", "served_async",
+            "served_sync", "cancelled", "wasted_completions",
         ):
             setattr(self, f, getattr(self, f) + getattr(other, f))
         for f in ("peek_seconds", "wait_seconds", "sync_seconds", "harvest_seconds"):
@@ -96,6 +106,10 @@ class SpecSession:
         self._state: Dict[Tuple[str, Tuple[int, ...]], NodeState] = {}
         self._cursor = Cursor(node=graph.start.dst, epochs=graph.initial_epochs(),
                               weak_crossed=graph.start.weak)
+        # sliding peek window: resume point past the contiguous issued prefix,
+        # and its distance (in syscall nodes) from the current frontier
+        self._peek: Optional[Cursor] = None
+        self._peek_dist = 0
         self._finished = False
 
     # -- cursor movement ---------------------------------------------------
@@ -129,15 +143,28 @@ class SpecSession:
     # -- Algorithm 1 --------------------------------------------------------
     def _peek_and_preissue(self) -> None:
         """Peek up to ``depth`` nodes beyond the frontier; prepare the safe
-        ones; submit the batch (one crossing on the queue-pair backend)."""
+        ones; submit the batch (one crossing on the queue-pair backend).
+
+        The peek window *slides*: once every node between the frontier and
+        the resume cursor is issued, the next peek continues from the cursor
+        instead of re-walking the whole window — amortized O(1) per
+        intercept on strong-edge loops (long extent lists would otherwise
+        pay an O(depth) walk per call).  A node that was not ready keeps the
+        resume cursor behind it so it is retried; a weak-crossed cursor is
+        discarded because the frontier passing the weak edge can unblock
+        non-pure nodes behind it (recompute from the frontier, the paper's
+        original walk)."""
         t0 = time.perf_counter()
         frontier = self._cursor
         assert isinstance(frontier.node, SyscallNode)
-        # n = frontier.next  (weak flag of the frontier's own out edge counts)
-        cur = self._follow(frontier.node.out, frontier.epochs, False)
-        depth = self.depth
+        if self._peek is not None and not self._peek.weak_crossed:
+            cur, dist = self._peek, self._peek_dist
+        else:
+            # n = frontier.next (weak flag of the frontier's own out edge counts)
+            cur, dist = self._follow(frontier.node.out, frontier.epochs, False), 0
+        prefix = True  # still walking the contiguous issued prefix
         prepared_any = False
-        while depth > 0 and cur.node is not None:
+        while dist < self.depth and cur.node is not None:
             cur2 = self._resolve_branches(cur)
             if cur2 is None:  # branch decision not ready: stop peeking
                 break
@@ -146,7 +173,12 @@ class SpecSession:
                 break
             node: SyscallNode = cur.node
             st = self._node_state(node, cur.epochs)
-            if not st.issued:
+            if node is frontier.node and cur.epochs == frontier.epochs:
+                # the resume cursor caught up with the frontier: intercept()
+                # is serving this node right now — pre-issuing it here would
+                # buy no overlap and cost an extra crossing + worker handoff
+                pass
+            elif not st.issued:
                 out = node.compute_args(self.ctx, cur.epochs)
                 if out is not None:
                     args, link = out
@@ -161,10 +193,15 @@ class SpecSession:
                             st.req = req
                             self.stats.pre_issued += 1
                             prepared_any = True
+                if not st.issued:
+                    prefix = False  # retry this node on the next peek
             cur = self._follow(node.out, cur.epochs, cur.weak_crossed)
-            depth -= 1
+            dist += 1
+            if prefix:
+                self._peek, self._peek_dist = cur, dist
         if prepared_any:
-            self.backend.submit_all()
+            if self.backend.submit_all():
+                self.stats.submits += 1
         self.stats.peek_seconds += time.perf_counter() - t0
 
     def _bind_deferred(self, args, epochs):
@@ -232,8 +269,10 @@ class SpecSession:
             frontier.save_result(self.ctx, cur.epochs, result)
         st.harvested = True
 
-        # 4. advance the frontier
+        # 4. advance the frontier (the peek window's origin moves with it)
         self._cursor = self._follow(frontier.out, cur.epochs, False)
+        if self._peek_dist > 0:
+            self._peek_dist -= 1
         return result
 
     def _exec_untracked(self, sc: Sys, args: Tuple[Any, ...]) -> Any:

@@ -16,6 +16,10 @@ needed to produce their argument values:
 Epochs: one counter per looping-back edge; the tuple of all counters
 identifies a dynamic node instance, and is passed to every stub so that
 array-like variables can be indexed per-iteration.
+
+Cross-references: docs/ARCHITECTURE.md ("Foreaction graphs") maps this module
+to paper §3.2; *weak edge*, *epoch vector* and *link flag* are defined in
+docs/GLOSSARY.md.
 """
 
 from __future__ import annotations

@@ -5,6 +5,8 @@ The framework's own substrates (data pipeline, checkpointing) instantiate
 these generic builders instead of hand-drawing a graph per call site:
 
 * ``build_stat_list_graph``     — fstatat over a path list (du shape, Fig. 4a)
+* ``build_open_list_graph``     — read-only open over a path list (pure, so
+  pre-issuable even across weak edges; fans shard-file opens across devices)
 * ``build_pread_extents_graph`` — pread over (fd, size, offset) extents
 * ``build_pwrite_extents_graph``— pwrite over (fd, data|thunk, offset) extents
   (guaranteed writes: strong edges throughout)
@@ -12,6 +14,10 @@ these generic builders instead of hand-drawing a graph per call site:
 
 ctx conventions are documented per builder.  Results are harvested into
 ctx lists so wrapped functions can also consume them if desired.
+
+Cross-references: docs/ARCHITECTURE.md ("Reusable graph patterns"); the loop
+shapes here are the ones the sharded substrate's consumers (checkpoint
+manager, data pipeline) fan out across devices.
 """
 
 from __future__ import annotations
@@ -47,6 +53,38 @@ def build_stat_list_graph(name: str = "stat_list") -> ForeactionGraph:
     b.BranchAppendChild("any", None)
     b.SyscallSetNext("fstat", "more")
     b.BranchAppendChild("more", "fstat", loopback=True)
+    b.BranchAppendChild("more", None)
+    return b.Build()
+
+
+def build_open_list_graph(name: str = "open_list") -> ForeactionGraph:
+    """ctx: {"paths": [str]}; read-only opens, harvested into ctx["fds"]
+    (dict epoch -> fd).  open(path, "r") is pure (cancellable via close), so
+    the whole list pre-issues in one batch — on a sharded device the opens
+    land on their owning sub-devices concurrently."""
+    b = GraphBuilder(name)
+
+    def args(ctx, ep):
+        paths = ctx["paths"]
+        return ((paths[ep[0]], "r"), False) if ep[0] < len(paths) else None
+
+    def save(ctx, ep, rc):
+        ctx.setdefault("fds", {})[ep[0]] = rc
+
+    def head(ctx, ep):
+        return 0 if len(ctx["paths"]) > 0 else 1
+
+    def more(ctx, ep):
+        return 0 if ep[0] + 1 < len(ctx["paths"]) else 1
+
+    b.AddBranchingNode("any", head)
+    b.AddSyscallNode("open", Sys.OPEN, args, save)
+    b.AddBranchingNode("more", more)
+    b.SetStart("any")
+    b.BranchAppendChild("any", "open")
+    b.BranchAppendChild("any", None)
+    b.SyscallSetNext("open", "more")
+    b.BranchAppendChild("more", "open", loopback=True)
     b.BranchAppendChild("more", None)
     return b.Build()
 
@@ -154,6 +192,7 @@ def build_copy_extents_graph(name: str = "copy_extents") -> ForeactionGraph:
 
 PATTERNS: Dict[str, Callable[[], ForeactionGraph]] = {
     "stat_list": build_stat_list_graph,
+    "open_list": build_open_list_graph,
     "pread_extents": build_pread_extents_graph,
     "pwrite_extents": build_pwrite_extents_graph,
     "copy_extents": build_copy_extents_graph,

@@ -5,6 +5,9 @@ possibly bringing data into the OS page cache (pread, fstat, getdents,
 read-only open).  Non-pure syscalls (pwrite, creating opens, close, fsync)
 leave permanent side effects and may only be pre-issued when guaranteed to
 happen (no weak edge on the path from the frontier — paper §3.3).
+
+Cross-references: docs/ARCHITECTURE.md ("Syscall layer"); *pure syscall* and
+*pre-issue* are defined in docs/GLOSSARY.md.
 """
 
 from __future__ import annotations

@@ -1,7 +1,15 @@
-"""Deterministic sharded token pipeline (see package docstring)."""
+"""Deterministic sharded token pipeline (see package docstring).
+
+On a :class:`repro.core.device.ShardedDevice` the record shards are placed on
+distinct sub-devices (``Device.place``), so a batch's speculated preads —
+whose record permutation is known at activation time — fan out across
+per-device queue pairs via the multi-queue backend instead of serializing on
+one device (docs/ARCHITECTURE.md, "Sharded multi-device substrate").
+"""
 
 from __future__ import annotations
 
+import queue
 import threading
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
@@ -39,7 +47,9 @@ def write_synthetic_dataset(
     rng = np.random.default_rng(seed)
     paths = []
     for s in range(num_shards):
-        path = f"{root.rstrip('/')}/shard_{s:05d}.rio"
+        # shard s lives on sub-device s % N of a ShardedDevice (identity on
+        # flat devices) so independent record reads hit independent devices
+        path = device.place(f"{root.rstrip('/')}/shard_{s:05d}.rio", hint=s)
         w = RecordShardWriter(device, path, cfg.record_bytes)
         toks = rng.integers(0, vocab_size, size=(records_per_shard, cfg.record_tokens),
                             dtype=np.int32)
@@ -99,7 +109,13 @@ class TokenBatchLoader:
         self.prefetch = prefetch
         self.steps_per_epoch = self.ds.total // cfg.batch_size
         self._perm_cache: Dict[int, np.ndarray] = {}
+        # persistent double-buffer worker: one long-lived thread keeps one
+        # live backend (queue pairs are per-thread), instead of paying
+        # worker-pool construction on every batch
         self._bg: Optional[threading.Thread] = None
+        self._bg_req: "queue.Queue[Optional[Tuple[int, int]]]" = queue.Queue()
+        self._bg_done = threading.Event()
+        self._bg_pending = False
         self._bg_out: Optional[Tuple[Tuple[int, int], np.ndarray]] = None
 
     def perm(self, epoch: int) -> np.ndarray:
@@ -137,9 +153,9 @@ class TokenBatchLoader:
         returned immediately and the next batch starts loading.
         """
         rec = None
-        if self._bg is not None:
-            self._bg.join()
-            self._bg = None
+        if self._bg_pending:
+            self._bg_done.wait()
+            self._bg_pending = False
             if self._bg_out is not None and self._bg_out[0] == (epoch, step):
                 rec = self._bg_out[1]
             self._bg_out = None
@@ -149,18 +165,38 @@ class TokenBatchLoader:
             ns, ne = step + 1, epoch
             if ns >= self.steps_per_epoch:
                 ns, ne = 0, epoch + 1
-
-            def bg():
-                try:
-                    self._bg_out = ((ne, ns), self._read_batch(ne, ns))
-                except BaseException:
-                    self._bg_out = None
-
-            self._bg = threading.Thread(target=bg, daemon=True)
-            self._bg.start()
+            self._ensure_worker()
+            self._bg_done.clear()
+            self._bg_pending = True
+            self._bg_req.put((ne, ns))
         return {"tokens": rec[:, :-1], "labels": rec[:, 1:]}
 
-    def close(self) -> None:
+    def _ensure_worker(self) -> None:
         if self._bg is not None:
-            self._bg.join()
+            return
+
+        def loop():
+            while True:
+                item = self._bg_req.get()
+                if item is None:
+                    return
+                ep, st = item
+                try:
+                    self._bg_out = ((ep, st), self._read_batch(ep, st))
+                except BaseException:
+                    self._bg_out = None
+                finally:
+                    self._bg_done.set()
+
+        self._bg = threading.Thread(target=loop, name="token-prefetch", daemon=True)
+        self._bg.start()
+
+    def close(self) -> None:
+        if self._bg_pending:
+            self._bg_done.wait()
+            self._bg_pending = False
+            self._bg_out = None
+        if self._bg is not None:
+            self._bg_req.put(None)
+            self._bg.join(timeout=5)
             self._bg = None

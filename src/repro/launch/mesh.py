@@ -16,19 +16,34 @@ from typing import Tuple
 import jax
 
 
+def _axis_type_kwargs(n: int) -> dict:
+    """axis_types=(Auto,)*n on jax >= 0.5; older jax has neither the enum
+    nor the kwarg, and Auto is its only behaviour anyway."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
 
 
 def make_host_mesh():
     """Whatever this host actually has — smoke tests and examples."""
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return jax.make_mesh((n, 1), ("data", "model"), **_axis_type_kwargs(2))
+
+
+def mesh_context(mesh):
+    """``jax.set_mesh(mesh)`` where available; on older jax the Mesh object
+    is itself the context manager (equivalent for Auto-typed axes)."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
 
 
 def batch_axes(mesh) -> Tuple[str, ...]:

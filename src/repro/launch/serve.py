@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, mesh_context
 from repro.launch.steps import make_generate_loop
 from repro.models import build_model
 
@@ -42,7 +42,7 @@ def main() -> None:
 
     gen = make_generate_loop(model, args.gen)
     max_len = args.prompt_len + args.gen + 1
-    with jax.set_mesh(make_host_mesh()):
+    with mesh_context(make_host_mesh()):
         jitted = jax.jit(gen, static_argnums=(2,))
         t0 = time.perf_counter()
         toks = jitted(params, batch, max_len)

@@ -28,6 +28,7 @@ from repro.checkpoint import CheckpointManager
 from repro.data.pipeline import TokenBatchLoader
 from repro.launch import sharding as shd
 from repro.launch.steps import make_train_step, make_train_state
+from repro.launch.mesh import mesh_context
 from repro.models.api import Model
 from repro.optim.adamw import AdamWConfig
 
@@ -92,7 +93,7 @@ class Trainer:
 
     # -- the loop ------------------------------------------------------------
     def fit(self) -> Dict[str, Any]:
-        with jax.set_mesh(self.mesh):
+        with mesh_context(self.mesh):
             step_fn = self._jit_step()
             state, epoch, step0 = self._init_or_restore()
             spe = self.loader.steps_per_epoch

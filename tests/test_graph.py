@@ -1,7 +1,7 @@
 """Foreaction-graph structure tests (paper §3.2) + hypothesis properties."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_support import given, settings, st
 
 from repro.core.graph import GraphBuilder, ForeactionGraph
 from repro.core.syscalls import Sys, is_pure

@@ -1,0 +1,193 @@
+"""Session teardown coverage (paper §6.4 early exit, §5.3 graph mismatch):
+cancellation of in-flight speculation, drain on deactivate, wasted-completion
+accounting, and strict-mode GraphMismatch — on both the single queue pair and
+the sharded multi-queue backend."""
+
+import pytest
+
+from repro.core import (DeviceProfile, Foreactor, GraphBuilder, GraphMismatch,
+                        MemDevice, ShardedDevice, Sys, io)
+
+SLOW = DeviceProfile(channels=2, base_latency=4e-3, metadata_latency=4e-3,
+                     crossing_cost=0.0)
+
+
+def make_device(backend, n=4, simulated=False):
+    """A device compatible with the backend under test."""
+    if backend == "multi_queue":
+        if simulated:
+            return ShardedDevice.simulated(n, profile=SLOW)
+        return ShardedDevice([MemDevice() for _ in range(n)])
+    if simulated:
+        from repro.core import SimulatedDevice
+        return SimulatedDevice(MemDevice(), SLOW)
+    return MemDevice()
+
+
+def seed_files(dev, count, backend, size=16):
+    paths = [dev.place(f"/d/f{i}", hint=i) for i in range(count)]
+    for i, p in enumerate(paths):
+        fd = dev.open(p, "w")
+        dev.pwrite(fd, bytes([i % 251]) * size, 0)
+        dev.close(fd)
+    return paths
+
+
+def read_chain_weak_graph():
+    """Pure reads behind weak edges: the function may exit at any step."""
+    b = GraphBuilder("read_chain")
+    b.AddSyscallNode(
+        "pread", Sys.PREAD,
+        lambda ctx, ep: (tuple(ctx["extents"][ep[0]]), False)
+        if ep[0] < len(ctx["extents"]) else None)
+    b.AddBranchingNode(
+        "more", lambda ctx, ep: 0 if ep[0] + 1 < len(ctx["extents"]) else 1)
+    b.SyscallSetNext("pread", "more", weak=True)
+    b.BranchAppendChild("more", "pread", loopback=True)
+    b.BranchAppendChild("more", None)
+    return b.Build()
+
+
+def stat_loop_graph():
+    b = GraphBuilder("stat_loop")
+    b.AddSyscallNode(
+        "fstat", Sys.FSTATAT,
+        lambda ctx, ep: ((ctx["paths"][ep[0]],), False)
+        if ep[0] < len(ctx["paths"]) else None)
+    b.AddBranchingNode(
+        "more", lambda ctx, ep: 0 if ep[0] + 1 < len(ctx["paths"]) else 1)
+    b.SyscallSetNext("fstat", "more")
+    b.BranchAppendChild("more", "fstat", loopback=True)
+    b.BranchAppendChild("more", None)
+    return b.Build()
+
+
+BACKENDS = ["io_uring", "user_threads", "multi_queue"]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_early_exit_cancels_inflight_speculation(backend):
+    """On a slow device with a deep peek, an early exit must find some
+    requests still queued (cancelled) and account the completed-but-unread
+    ones as wasted; deactivate drains so nothing runs after."""
+    dev = make_device(backend, simulated=True)
+    # files live on the inner store; open through the public namespace
+    paths = []
+    for i in range(24):
+        p = dev.place(f"/d/f{i}", hint=i)
+        fd = dev.open(p, "w")
+        dev.pwrite(fd, bytes([i % 251]) * 8, 0)
+        dev.close(fd)
+        paths.append(p)
+    fa = Foreactor(device=dev, backend=backend, depth=24, workers=2)
+    fa.register("read_chain", read_chain_weak_graph)
+    extents = []
+    for p in paths:
+        fd = dev.open(p, "r")
+        extents.append((fd, 8, 0))
+
+    @fa.wrap("read_chain", lambda: {"extents": extents})
+    def search():
+        for i, (fd, n, off) in enumerate(extents):
+            data = io.pread(dev, fd, n, off)
+            if i == 1:  # found early
+                return data
+        return None
+
+    out = search()
+    assert out == bytes([1]) * 8
+    s = fa.total_stats
+    assert s.pre_issued > 2  # speculation ran past the exit point
+    assert s.cancelled > 0  # slow device: some requests never started
+    assert s.cancelled + s.wasted_completions <= s.pre_issued
+    # drain happened on deactivate: no request is still in flight
+    assert dev.stats.snapshot()["max_inflight"] >= 1
+    with dev.stats._lock:
+        assert dev.stats.inflight == 0
+    fa.shutdown()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_wasted_completions_accounted_on_fast_device(backend):
+    """On a fast device everything completes before the early exit, so the
+    discarded work shows up as wasted_completions, not cancellations."""
+    dev = make_device(backend, simulated=False)
+    paths = seed_files(dev, 16, backend)
+    fa = Foreactor(device=dev, backend=backend, depth=16)
+    fa.register("read_chain", read_chain_weak_graph)
+    extents = []
+    for p in paths:
+        fd = dev.open(p, "r")
+        extents.append((fd, 16, 0))
+
+    @fa.wrap("read_chain", lambda: {"extents": extents})
+    def search():
+        for i, (fd, n, off) in enumerate(extents):
+            data = io.pread(dev, fd, n, off)
+            if i == 2:
+                return data
+        return None
+
+    assert search() == bytes([2]) * 16
+    s = fa.total_stats
+    assert s.pre_issued > 3
+    assert s.cancelled + s.wasted_completions > 0
+    fa.shutdown()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_strict_mode_raises_graph_mismatch(backend):
+    dev = make_device(backend)
+    paths = seed_files(dev, 4, backend)
+    fa = Foreactor(device=dev, backend=backend, depth=4, strict=True)
+    fa.register("stat_loop", stat_loop_graph)
+
+    @fa.wrap("stat_loop", lambda paths: {"paths": paths})
+    def bad(paths):
+        fd = dev.open(paths[0], "r")  # graph expects fstatat, app opens
+        return io.pread(dev, fd, 4, 0)
+
+    with pytest.raises(GraphMismatch):
+        bad(paths)
+    fa.shutdown()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_lenient_mode_passes_mismatch_through(backend):
+    dev = make_device(backend)
+    paths = seed_files(dev, 4, backend)
+    fa = Foreactor(device=dev, backend=backend, depth=4, strict=False)
+    fa.register("stat_loop", stat_loop_graph)
+
+    @fa.wrap("stat_loop", lambda paths: {"paths": paths})
+    def mixed(paths):
+        total = sum(io.fstatat(dev, p).st_size for p in paths)
+        return total, io.getdents(dev, "/d")  # not in the graph: untracked
+
+    total, names = mixed(paths)
+    assert total == 4 * 16
+    assert len(names) == 4
+    assert fa.total_stats.untracked >= 1
+    fa.shutdown()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_session_finish_is_idempotent_and_backend_reusable(backend):
+    """After a teardown the per-thread backend must serve the next
+    activation (the paper keeps queue pairs live across invocations)."""
+    dev = make_device(backend)
+    paths = seed_files(dev, 8, backend)
+    fa = Foreactor(device=dev, backend=backend, depth=8)
+    fa.register("stat_loop", stat_loop_graph)
+
+    @fa.wrap("stat_loop", lambda paths: {"paths": paths})
+    def du(paths):
+        return sum(io.fstatat(dev, p).st_size for p in paths)
+
+    expect = sum(dev.fstatat(p).st_size for p in paths)
+    assert du(paths) == expect
+    assert du(paths) == expect  # same backend, fresh session
+    sess = fa.activate("stat_loop", {"paths": paths})
+    fa.deactivate(sess)
+    assert sess.finish() is sess.stats  # idempotent finish
+    fa.shutdown()

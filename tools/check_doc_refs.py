@@ -1,0 +1,72 @@
+#!/usr/bin/env python3
+"""Fail if a doc references a repository path that no longer exists.
+
+Scans markdown files for path-like references (``src/...``, ``tests/...``,
+``benchmarks/...``, ``docs/...``, ``examples/...``) and dotted module names
+(``repro.core.engine``), and checks each against the working tree. Keeps
+docs/ARCHITECTURE.md honest as modules move (run by the CI docs job).
+
+Usage: python tools/check_doc_refs.py docs/ARCHITECTURE.md README.md ...
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+PATH_RE = re.compile(
+    r"\b(?:src|tests|benchmarks|docs|examples|tools)/[\w./-]+\.(?:py|md|json|yml)\b"
+)
+MODULE_RE = re.compile(r"\brepro(?:\.\w+)+\b")
+
+#: paths docs may legitimately reference before they exist at check time
+GENERATED = {"benchmarks/results/sharding.json"}
+
+
+def module_exists(dotted: str) -> bool:
+    parts = dotted.split(".")
+    # Trailing CapitalCase components are class/constant attributes
+    # (repro.core.device.ShardedDevice); strip those. A lowercase tail is a
+    # module name and must resolve — otherwise a deleted module would pass as
+    # long as its parent package survives.
+    while len(parts) > 1 and not parts[-1][:1].islower():
+        parts = parts[:-1]
+    base = os.path.join(REPO, "src", *parts)
+    return os.path.isfile(base + ".py") or os.path.isdir(base)
+
+
+def check(path: str) -> list:
+    with open(path) as f:
+        text = f.read()
+    missing = []
+    for ref in sorted(set(PATH_RE.findall(text))):
+        if ref in GENERATED:
+            continue
+        if not os.path.exists(os.path.join(REPO, ref)):
+            missing.append(ref)
+    for ref in sorted(set(MODULE_RE.findall(text))):
+        if not module_exists(ref):
+            missing.append(ref)
+    return missing
+
+
+def main(argv) -> int:
+    files = argv or ["docs/ARCHITECTURE.md"]
+    bad = 0
+    for f in files:
+        missing = check(os.path.join(REPO, f))
+        for ref in missing:
+            print(f"{f}: dangling reference: {ref}")
+        bad += len(missing)
+    if bad:
+        print(f"{bad} dangling reference(s)")
+        return 1
+    print(f"ok: {len(files)} file(s), no dangling references")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
