@@ -1,0 +1,229 @@
+"""Adaptive speculation depth vs fixed-depth sweeps (docs/TUNING.md).
+
+Three workloads with opposite depth preferences, all on the simulated
+device so the effect is deterministic in CI:
+
+* **scan_deep** — one long pure pread loop (192 extents).  Deeper is
+  better until the device's channel parallelism saturates; depth 1 leaves
+  the device almost idle.
+* **search_early_exit** — an LSM-get-shaped weak-edge read chain over 64
+  candidates that exits at the third read, repeated per run.  Depth beyond
+  the exit point only buys cancellation + drain time (paper Fig. 10), so
+  the *deepest* fixed depth is the worst config here.
+* **stat_batch** — a du-shaped fstatat loop over 24 paths, invoked
+  repeatedly (short sessions; convergence must happen across calls).
+
+Each workload is swept over ``FIXED_DEPTHS`` and the adaptive controller
+(``depth="adaptive"``).  The controller is warmed up with a few
+invocations (it persists per graph on the ``Foreactor``), then timed at
+steady state — exactly how a long-running service would experience it.
+
+Headline numbers (written to ``benchmarks/results/adaptive.json``):
+``summary.<workload>.adaptive_vs_best`` (target: <= 1.10, within 10% of
+the best fixed depth) and ``summary.<workload>.worst_vs_adaptive``
+(target: >= 1.25, beating the worst fixed depth by 25%+).
+
+``python -m benchmarks.bench_adaptive --table`` renders the result JSON
+as the markdown table embedded in docs/TUNING.md.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List
+
+from repro.core import (DeviceProfile, Foreactor, MemDevice, SimulatedDevice,
+                        io)
+from repro.core.patterns import build_pread_extents_graph, build_stat_list_graph
+
+from .common import RESULTS_DIR, Row, timeit_min, write_results
+
+FIXED_DEPTHS = (1, 4, 16, 64)
+CHANNELS = 16
+
+#: ms-scale per-op latency: far above CI sleep granularity, so the ordering
+#: between depth configs is stable run to run
+ADAPTIVE_PROFILE = DeviceProfile(channels=CHANNELS, base_latency=1.2e-3,
+                                 metadata_latency=1.0e-3, per_byte=2.0e-10,
+                                 crossing_cost=4e-6)
+
+
+def _make_dev(nfiles: int, size: int = 512):
+    inner = MemDevice()
+    paths = []
+    for i in range(nfiles):
+        p = f"/bench/f{i}"
+        fd = inner.open(p, "w")
+        inner.pwrite(fd, bytes([i % 251]) * size, 0)
+        inner.close(fd)
+        paths.append(p)
+    return SimulatedDevice(inner, ADAPTIVE_PROFILE), paths
+
+
+def _fa(dev, depth):
+    return Foreactor(device=dev, backend="io_uring", depth=depth,
+                     workers=CHANNELS, depth_range=(1, 64))
+
+
+def _run_config(make_workload, depth, warmup: int, repeats: int):
+    """Time one (workload, depth-config) pair; returns (seconds, info)."""
+    fa, run_once, graph_name = make_workload(depth)
+    try:
+        t = timeit_min(run_once, repeats=repeats, warmup=warmup)
+        info = {}
+        if depth == "adaptive":
+            info = fa.controller(graph_name).snapshot()
+        return t, info
+    finally:
+        fa.shutdown()
+
+
+# -- workloads ----------------------------------------------------------------
+def scan_deep(depth):
+    dev, paths = _make_dev(192)
+    fa = _fa(dev, depth)
+    fa.register("scan", lambda: build_pread_extents_graph("scan"))
+    extents = []
+    for p in paths:
+        fd = dev.open(p, "r")
+        extents.append((fd, 512, 0))
+
+    @fa.wrap("scan", lambda: {"extents": extents})
+    def scan():
+        total = 0
+        for fd, n, off in extents:
+            total += len(io.pread(dev, fd, n, off))
+        return total
+
+    return fa, scan, "scan"
+
+
+def search_early_exit(depth, gets_per_run: int = 10, exit_at: int = 2):
+    dev, paths = _make_dev(64)
+    fa = _fa(dev, depth)
+    fa.register("search", lambda: build_pread_extents_graph("search", weak=True))
+    extents = []
+    for p in paths:
+        fd = dev.open(p, "r")
+        extents.append((fd, 512, 0))
+
+    @fa.wrap("search", lambda: {"extents": extents})
+    def one_get():
+        for i, (fd, n, off) in enumerate(extents):
+            data = io.pread(dev, fd, n, off)
+            if i == exit_at:
+                return data
+        return None
+
+    def run():
+        for _ in range(gets_per_run):
+            one_get()
+
+    return fa, run, "search"
+
+
+def stat_batch(depth, calls_per_run: int = 4):
+    dev, paths = _make_dev(24)
+    fa = _fa(dev, depth)
+    fa.register("stats", build_stat_list_graph)
+
+    @fa.wrap("stats", lambda: {"paths": paths})
+    def one_batch():
+        return sum(io.fstatat(dev, p).st_size for p in paths)
+
+    def run():
+        for _ in range(calls_per_run):
+            one_batch()
+
+    return fa, run, "stats"
+
+
+WORKLOADS = [
+    ("scan_deep", scan_deep, 1, 2),
+    ("search_early_exit", search_early_exit, 2, 2),
+    ("stat_batch", stat_batch, 2, 2),
+]
+#: extra steady-state warmup for the adaptive controller (it has to learn)
+ADAPTIVE_WARMUP = {"scan_deep": 2, "search_early_exit": 3, "stat_batch": 3}
+
+
+def bench() -> Dict[str, Dict]:
+    out: Dict[str, Dict] = {"config": {
+        "fixed_depths": list(FIXED_DEPTHS), "channels": CHANNELS,
+    }}
+    summary: Dict[str, Dict] = {}
+    for wname, make, warmup, repeats in WORKLOADS:
+        cells: Dict[str, Dict] = {}
+        for d in FIXED_DEPTHS:
+            t, _ = _run_config(make, d, warmup, repeats)
+            cells[str(d)] = {"seconds": t}
+        t, info = _run_config(make, "adaptive", ADAPTIVE_WARMUP[wname], repeats)
+        cells["adaptive"] = {"seconds": t, "controller": info}
+        out[wname] = cells
+        fixed = {d: cells[str(d)]["seconds"] for d in FIXED_DEPTHS}
+        best_d = min(fixed, key=fixed.get)
+        worst_d = max(fixed, key=fixed.get)
+        summary[wname] = {
+            "best_fixed_depth": best_d,
+            "worst_fixed_depth": worst_d,
+            "adaptive_vs_best": t / fixed[best_d],
+            "worst_vs_adaptive": fixed[worst_d] / t,
+            "within_10pct_of_best": t <= 1.10 * fixed[best_d],
+            "beats_worst_by_25pct": fixed[worst_d] >= 1.25 * t,
+        }
+    out["summary"] = summary
+    return out
+
+
+def run() -> List[Row]:
+    out = bench()
+    path = write_results("adaptive", out)
+    rows: List[Row] = []
+    for wname, _make, _w, _r in WORKLOADS:
+        for key, cell in out[wname].items():
+            if key == "config":
+                continue
+            rows.append((f"adaptive_{wname}_depth{key}",
+                         cell["seconds"] * 1e6, ""))
+        s = out["summary"][wname]
+        rows.append((
+            f"adaptive_{wname}_summary", 0.0,
+            f"vs_best=x{s['adaptive_vs_best']:.2f} "
+            f"vs_worst=x{s['worst_vs_adaptive']:.2f}",
+        ))
+    rows.append(("adaptive_results_json", 0.0, path))
+    return rows
+
+
+def render_table(path: str = None) -> str:
+    """The markdown table embedded in docs/TUNING.md, generated from the
+    benchmark's JSON results."""
+    path = path or os.path.join(RESULTS_DIR, "adaptive.json")
+    with open(path) as f:
+        data = json.load(f)
+    depths = data["config"]["fixed_depths"]
+    header = ("| workload | " + " | ".join(f"depth {d}" for d in depths)
+              + " | adaptive | adaptive vs best | worst vs adaptive |")
+    sep = "|" + "---|" * (len(depths) + 4)
+    lines = [header, sep]
+    for wname, _make, _w, _r in WORKLOADS:
+        cells = data[wname]
+        s = data["summary"][wname]
+        ms = [f"{cells[str(d)]['seconds'] * 1e3:.1f} ms" for d in depths]
+        lines.append(
+            f"| {wname} | " + " | ".join(ms)
+            + f" | {cells['adaptive']['seconds'] * 1e3:.1f} ms"
+            + f" | x{s['adaptive_vs_best']:.2f}"
+            + f" | x{s['worst_vs_adaptive']:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    if "--table" in sys.argv:
+        print(render_table())
+    else:
+        for line in run():
+            print(",".join(str(x) for x in line))

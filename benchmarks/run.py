@@ -9,6 +9,9 @@ Prints ``name,us_per_call,derived`` CSV.  Sections:
 * Fig. 10 — overhead breakdown + framework-plane I/O (bench_overhead)
 * Sharding — multi-device restore/pipeline scaling      (bench_sharding;
   structured results also land in benchmarks/results/sharding.json)
+* Adaptive — fixed depth sweep vs the adaptive controller (bench_adaptive;
+  structured results also land in benchmarks/results/adaptive.json, and
+  ``python -m benchmarks.bench_adaptive --table`` renders the TUNING.md table)
 
 Roofline tables (§Roofline) are produced separately by
 ``python -m benchmarks.roofline`` from the dry-run reports.
@@ -19,8 +22,8 @@ import time
 
 
 def main() -> None:
-    from . import (bench_bptree, bench_lsm, bench_overhead, bench_sharding,
-                   bench_utilities)
+    from . import (bench_adaptive, bench_bptree, bench_lsm, bench_overhead,
+                   bench_sharding, bench_utilities)
     from .common import fmt
 
     sections = [
@@ -29,6 +32,7 @@ def main() -> None:
         ("fig8_fig9_lsm", bench_lsm.run),
         ("fig10_overhead_framework", bench_overhead.run),
         ("sharding_multi_device", bench_sharding.run),
+        ("adaptive_depth", bench_adaptive.run),
     ]
     print("name,us_per_call,derived")
     for name, fn in sections:

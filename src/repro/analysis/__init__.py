@@ -1,6 +1,13 @@
-"""Compiled-artifact analysis: scan-aware HLO cost extraction + roofline."""
+"""Analysis tools: HLO cost extraction, roofline, and the foreaction-graph
+miner that folds recorded syscall traces into speculatable graphs."""
 
 from .hlo import HloSummary, analyze_hlo
+from .mine import (MinedGraph, ReplayMismatch, UnminableTrace, UnsoundGraph,
+                   mine_and_validate, mine_traces, replay_trace)
 from .roofline import HW, RooflineTerms, roofline_from_report
 
-__all__ = ["HloSummary", "analyze_hlo", "HW", "RooflineTerms", "roofline_from_report"]
+__all__ = [
+    "HloSummary", "analyze_hlo", "HW", "RooflineTerms", "roofline_from_report",
+    "MinedGraph", "ReplayMismatch", "UnminableTrace", "UnsoundGraph",
+    "mine_and_validate", "mine_traces", "replay_trace",
+]

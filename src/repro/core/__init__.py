@@ -23,9 +23,10 @@ from .device import (
     Device, DeviceProfile, MemDevice, NVME_PROFILE, OSDevice, REMOTE_PROFILE,
     ShardedDevice, SimulatedDevice,
 )
-from .engine import GraphMismatch, SessionStats, SpecSession
+from .engine import DepthController, GraphMismatch, SessionStats, SpecSession
 from .graph import BranchNode, ForeactionGraph, GraphBuilder, SyscallNode
 from .syscalls import Sys, is_pure
+from .trace import Trace, TraceEvent, TraceRecorder
 
 __all__ = [
     "Foreactor", "current_session", "io", "make_foreactor",
@@ -33,7 +34,8 @@ __all__ = [
     "ThreadPoolBackend", "make_backend",
     "Device", "DeviceProfile", "MemDevice", "NVME_PROFILE", "OSDevice",
     "REMOTE_PROFILE", "ShardedDevice", "SimulatedDevice",
-    "GraphMismatch", "SessionStats", "SpecSession",
+    "DepthController", "GraphMismatch", "SessionStats", "SpecSession",
     "BranchNode", "ForeactionGraph", "GraphBuilder", "SyscallNode",
     "Sys", "is_pure",
+    "Trace", "TraceEvent", "TraceRecorder",
 ]

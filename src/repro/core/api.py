@@ -24,13 +24,14 @@ from __future__ import annotations
 
 import functools
 import threading
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 from .backends import Backend, SyncBackend, make_backend
 from .device import Device, OSDevice
-from .engine import SessionStats, SpecSession
+from .engine import DepthController, SessionStats, SpecSession
 from .graph import ForeactionGraph
 from .syscalls import Sys
+from .trace import Trace, TraceRecorder
 
 _tls = threading.local()
 
@@ -55,17 +56,23 @@ class Foreactor:
         self,
         device: Optional[Device] = None,
         backend: str = "auto",
-        depth: int = 8,
+        depth: Union[int, str] = 8,
         workers: int = 16,
         strict: bool = False,
+        depth_range: Tuple[int, int] = (1, 64),
     ):
+        if not (isinstance(depth, int) or depth == "adaptive"):
+            raise ValueError(f"depth must be an int or 'adaptive', got {depth!r}")
         self.device = device if device is not None else OSDevice()
         self.backend_name = backend
         self.depth = depth
+        self.depth_range = depth_range
         self.workers = workers
         self.strict = strict
         self._graphs: Dict[str, ForeactionGraph] = {}
         self._graph_builders: Dict[str, Callable[[], ForeactionGraph]] = {}
+        self._controllers: Dict[str, DepthController] = {}
+        self._traces: Dict[str, List[Tuple[Dict[str, Any], Trace]]] = {}
         self.total_stats = SessionStats()
         self._backends: List[Backend] = []
         self._backend_pool = threading.local()  # one live queue pair per thread
@@ -95,16 +102,33 @@ class Foreactor:
                 self._backends.append(b)
         return b
 
+    def controller(self, graph_name: str) -> DepthController:
+        """The shared per-graph adaptive depth controller (created lazily);
+        sessions of the same graph learn one depth together."""
+        with self._lock:
+            c = self._controllers.get(graph_name)
+            if c is None:
+                lo, hi = self.depth_range
+                c = DepthController(min_depth=lo, max_depth=hi)
+                self._controllers[graph_name] = c
+            return c
+
     # -- activation ----------------------------------------------------------
     def activate(self, graph_name: str, ctx: Dict[str, Any],
-                 depth: Optional[int] = None) -> SpecSession:
+                 depth: Optional[Union[int, str]] = None) -> SpecSession:
+        depth = self.depth if depth is None else depth
+        controller = None
+        if depth == "adaptive":
+            controller = self.controller(graph_name)
+            depth = 0  # ignored: SpecSession.depth tracks the controller live
         sess = SpecSession(
             graph=self.graph(graph_name),
             ctx=ctx,
             backend=self._make_backend(),
             device=self.device,
-            depth=self.depth if depth is None else depth,
+            depth=depth,
             strict=self.strict,
+            controller=controller,
         )
         _session_stack().append(sess)
         return sess
@@ -119,24 +143,135 @@ class Foreactor:
         return stats
 
     def wrap(self, graph_name: str,
-             capture: Callable[..., Dict[str, Any]]) -> Callable:
+             capture: Callable[..., Dict[str, Any]],
+             auto_graph: bool = False,
+             observe_calls: int = 2) -> Callable:
         """Decorator: shadow function ``f`` with a wrapper that captures the
-        Input annotation variables and runs ``f`` under a SpecSession."""
+        Input annotation variables and runs ``f`` under a SpecSession.
+
+        With ``auto_graph=True`` no registered graph is needed: the first
+        ``observe_calls`` invocations run serially under a
+        :class:`TraceRecorder`, then the traces are mined into a graph
+        (:func:`repro.analysis.mine.mine_and_validate`) and — if the mined
+        graph replays every recorded trace exactly — registered and used for
+        speculation from then on.  A function the miner cannot prove sound
+        stays permanently serial (``wrapper.__foreactor_auto__['state']``
+        reports ``'disabled'`` with the reason) rather than speculating on a
+        wrong graph.
+        """
+
+        def deco(fn: Callable) -> Callable:
+            if not auto_graph:
+                @functools.wraps(fn)
+                def wrapper(*args, **kwargs):
+                    ctx = capture(*args, **kwargs)
+                    sess = self.activate(graph_name, ctx)
+                    try:
+                        return fn(*args, **kwargs)
+                    finally:
+                        self.deactivate(sess)
+
+                wrapper.__foreactor_graph__ = graph_name  # type: ignore[attr-defined]
+                return wrapper
+
+            state = {"state": "observing", "reason": None}
+            state_lock = threading.Lock()
+
+            @functools.wraps(fn)
+            def auto_wrapper(*args, **kwargs):
+                with state_lock:
+                    mode = state["state"]
+                if mode == "speculating":
+                    ctx = capture(*args, **kwargs)
+                    sess = self.activate(graph_name, ctx)
+                    try:
+                        return fn(*args, **kwargs)
+                    finally:
+                        self.deactivate(sess)
+                if mode == "disabled":
+                    return fn(*args, **kwargs)
+                # observing: record one more trace, then try to mine
+                ctx = capture(*args, **kwargs)
+                out = self.record(graph_name, ctx, fn, *args, **kwargs)
+                with state_lock:
+                    if state["state"] == "observing" \
+                            and len(self.traces(graph_name)) >= observe_calls:
+                        try:
+                            self.mine(graph_name)
+                            state["state"] = "speculating"
+                        except Exception as e:  # Unminable / Unsound
+                            state["state"] = "disabled"
+                            state["reason"] = str(e)
+                return out
+
+            auto_wrapper.__foreactor_graph__ = graph_name  # type: ignore[attr-defined]
+            auto_wrapper.__foreactor_auto__ = state  # type: ignore[attr-defined]
+            return auto_wrapper
+
+        return deco
+
+    # -- observe-then-speculate ----------------------------------------------
+    def record(self, name: str, ctx: Dict[str, Any],
+               fn: Callable, *args, **kwargs) -> Any:
+        """Run ``fn`` once under a :class:`TraceRecorder` (serial, direct
+        execution) and store the (ctx, trace) pair under ``name``."""
+        rec = TraceRecorder(self.device, name=name)
+        _session_stack().append(rec)
+        try:
+            out = fn(*args, **kwargs)
+        finally:
+            st = _session_stack()
+            assert st and st[-1] is rec, "unbalanced recorder stack"
+            st.pop()
+        trace = rec.finish()
+        with self._lock:
+            self._traces.setdefault(name, []).append((dict(ctx), trace))
+        return out
+
+    def observe(self, name: str,
+                capture: Callable[..., Dict[str, Any]]) -> Callable:
+        """Decorator: every invocation of the wrapped function is recorded
+        as a trace under ``name`` (serial execution; see ``wrap(...,
+        auto_graph=True)`` for the record→mine→speculate pipeline)."""
 
         def deco(fn: Callable) -> Callable:
             @functools.wraps(fn)
             def wrapper(*args, **kwargs):
                 ctx = capture(*args, **kwargs)
-                sess = self.activate(graph_name, ctx)
-                try:
-                    return fn(*args, **kwargs)
-                finally:
-                    self.deactivate(sess)
+                return self.record(name, ctx, fn, *args, **kwargs)
 
-            wrapper.__foreactor_graph__ = graph_name  # type: ignore[attr-defined]
+            wrapper.__foreactor_observed__ = name  # type: ignore[attr-defined]
             return wrapper
 
         return deco
+
+    def traces(self, name: str) -> List[Tuple[Dict[str, Any], Trace]]:
+        with self._lock:
+            return list(self._traces.get(name, ()))
+
+    def mine(self, name: str, register: bool = True, holdout: bool = True):
+        """Mine the traces recorded under ``name`` into a validated
+        ``ForeactionGraph`` and (by default) register it under the same
+        name.  Raises ``UnminableTrace``/``UnsoundGraph`` on refusal.
+
+        On successful registration the recorded traces are released — the
+        raw I/O buffers they hold (every pread result) must not stay
+        resident for the Foreactor's lifetime once the graph exists.
+        """
+        from repro.analysis.mine import mine_and_validate  # lazy: no cycle
+
+        pairs = self.traces(name)
+        if not pairs:
+            raise ValueError(f"no traces recorded under {name!r}")
+        ctxs = [c for (c, _t) in pairs]
+        trs = [t for (_c, t) in pairs]
+        mined = mine_and_validate(trs, ctxs, name=name, holdout=holdout)
+        if register:
+            with self._lock:
+                self._graph_builders[name] = mined.builder()
+                self._graphs.pop(name, None)  # rebuild on next activation
+                self._traces.pop(name, None)
+        return mined
 
     def shutdown(self) -> None:
         with self._lock:

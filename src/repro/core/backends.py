@@ -41,9 +41,17 @@ class Backend:
     """Engine-facing interface — identical across backends (paper Table 1)."""
 
     name = "abstract"
+    #: requests this backend can usefully run at once (worker count, summed
+    #: across queue pairs); 0 = no async execution.  The adaptive depth
+    #: controller stops growing once occupancy reaches this.
+    capacity = 0
 
     def __init__(self, device: Device):
         self.device = device
+
+    def inflight(self) -> int:
+        """Submitted-but-incomplete request count (queue occupancy)."""
+        return 0
 
     def prepare(self, req: IORequest) -> None:
         raise NotImplementedError
@@ -185,6 +193,11 @@ class _AsyncBackend(Backend):
         self._sq: List[IORequest] = []
         self._submitted: List[IORequest] = []
 
+    def inflight(self) -> int:
+        # prune completed entries while counting, keeping the ledger short
+        self._submitted = [r for r in self._submitted if not r.done.is_set()]
+        return len(self._submitted)
+
     def prepare(self, req: IORequest) -> None:
         self._sq.append(req)
 
@@ -238,6 +251,7 @@ class QueuePairBackend(_AsyncBackend):
 
     def __init__(self, device: Device, workers: int = 16):
         super().__init__(device)
+        self.capacity = workers
         self._pool = _WorkerPool(device, workers)
 
     def _pools(self) -> List[_WorkerPool]:
@@ -256,6 +270,7 @@ class ThreadPoolBackend(_AsyncBackend):
 
     def __init__(self, device: Device, workers: int = 16):
         super().__init__(device)
+        self.capacity = workers
         self._pool = _WorkerPool(device, workers)
 
     def _pools(self) -> List[_WorkerPool]:
@@ -292,6 +307,7 @@ class MultiQueueBackend(_AsyncBackend):
         # workers execute against the sharded device (vfd/namespace routing
         # happens there); the partition decides *which* pool runs a chain and
         # which sub-device pays the crossing.
+        self.capacity = workers * len(device.devices)
         self._queue_pools = [_WorkerPool(device, workers) for _ in device.devices]
 
     def _pools(self) -> List[_WorkerPool]:

@@ -29,6 +29,7 @@ defined in docs/GLOSSARY.md.
 
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, Optional, Tuple
@@ -37,6 +38,126 @@ from .backends import Backend
 from .device import Device
 from .graph import BranchNode, Edge, ForeactionGraph, FromNode, SyscallNode
 from .syscalls import FromRequest, IORequest, ReqState, Sys, execute, is_pure
+
+
+class DepthController:
+    """Online speculation-depth tuning (replaces a hand-picked fixed depth).
+
+    The paper fixes ``depth`` per workload; Fig. 10 shows why no single
+    value wins — too shallow leaves the device idle (the frontier blocks on
+    requests issued moments earlier), too deep pays cancellation/wasted-
+    completion overhead on early exits and drain time at teardown.  The
+    controller learns the workload's shape from two cheap signals:
+
+    * **wait fraction** — time the frontier spends blocked in ``wait()``
+      relative to wall time.  High wait with no waste means requests were
+      issued too late: grow (multiplicative).
+    * **wasted work** — cancelled + wasted completions at session teardown.
+      Waste above ``waste_tolerance`` × harvested means speculation ran past
+      the function's real exit: shrink the depth to just past the observed
+      consumption (``served_async + 1``).
+
+    Growth is additionally gated on *backend queue occupancy*: when the
+    backend already has ``capacity`` requests in flight, more depth only
+    queues entries behind busy workers, so the controller stops growing
+    there (paper Fig. 10's submission-cost plateau).
+
+    One controller is shared by every session of a graph (per
+    ``Foreactor``), so short repeated invocations converge across calls
+    while a single long loop converges within one session via the
+    window-based wait signal.  Thread-safe; decisions are coarse on purpose
+    — the cost of being one step off is tiny next to device latency.
+    """
+
+    def __init__(
+        self,
+        initial: int = 2,
+        min_depth: int = 1,
+        max_depth: int = 64,
+        window: int = 8,
+        waste_tolerance: float = 0.25,
+        wait_threshold: float = 0.05,
+    ):
+        self.min_depth = max(1, min_depth)
+        self.max_depth = max(self.min_depth, max_depth)
+        self._depth = min(self.max_depth, max(self.min_depth, initial))
+        self.window = max(2, window)
+        self.waste_tolerance = waste_tolerance
+        self.wait_threshold = wait_threshold
+        self._lock = threading.Lock()
+        # intra-session window accumulators
+        self._win_serves = 0
+        self._win_wait = 0.0
+        self._win_t0: Optional[float] = None
+        # last finished session's waste verdict (gates growth)
+        self._last_wasteful = False
+        self.grows = 0
+        self.shrinks = 0
+
+    @property
+    def depth(self) -> int:
+        return self._depth
+
+    def _grow(self, backend: Optional[Backend]) -> None:
+        if self._last_wasteful:
+            return  # the workload exits early; deeper only wastes more
+        if backend is not None:
+            cap = backend.capacity
+            if cap and backend.inflight() >= cap and self._depth >= cap:
+                return  # queue already saturated: depth buys nothing
+        new = min(self.max_depth, self._depth * 2)
+        if new != self._depth:
+            self._depth = new
+            self.grows += 1
+
+    def on_serve(self, wait_seconds: float, async_hit: bool,
+                 backend: Optional[Backend] = None) -> None:
+        """Per-intercept signal: how long the frontier blocked."""
+        now = time.perf_counter()
+        with self._lock:
+            if self._win_t0 is None:
+                self._win_t0 = now
+                return  # the first serve of a window only starts the clock
+            self._win_serves += 1
+            self._win_wait += wait_seconds
+            if self._win_serves >= self.window:
+                elapsed = max(now - self._win_t0, 1e-9)
+                if self._win_wait > self.wait_threshold * elapsed:
+                    self._grow(backend)
+                self._win_serves = 0
+                self._win_wait = 0.0
+                self._win_t0 = now
+
+    def on_finish(self, stats: "SessionStats", wall_seconds: float,
+                  backend: Optional[Backend] = None) -> None:
+        """Session-teardown signal: wasted vs harvested speculation."""
+        with self._lock:
+            self._win_serves = 0
+            self._win_wait = 0.0
+            self._win_t0 = None
+            waste = stats.cancelled + stats.wasted_completions
+            useful = stats.served_async
+            if stats.pre_issued > 0 and waste > self.waste_tolerance * max(1, useful):
+                target = max(self.min_depth, useful + 1)
+                if target < self._depth:
+                    self._depth = target
+                    self.shrinks += 1
+                self._last_wasteful = True
+                return
+            # hysteresis: one clean session must pass after a wasteful one
+            # before growth resumes (prevents grow/shrink oscillation on
+            # early-exit workloads)
+            prev_wasteful = self._last_wasteful
+            self._last_wasteful = False
+            wall = max(wall_seconds, 1e-9)
+            if not prev_wasteful and stats.intercepted >= 2 and \
+                    stats.wait_seconds + stats.sync_seconds > self.wait_threshold * wall:
+                self._grow(backend)
+
+    def snapshot(self) -> Dict[str, int]:
+        with self._lock:
+            return {"depth": self._depth, "grows": self.grows,
+                    "shrinks": self.shrinks}
 
 
 @dataclass
@@ -95,14 +216,17 @@ class SpecSession:
         device: Device,
         depth: int = 8,
         strict: bool = True,
+        controller: Optional[DepthController] = None,
     ):
         self.graph = graph
         self.ctx = ctx
         self.backend = backend
         self.device = device
-        self.depth = depth
+        self._fixed_depth = depth
+        self.controller = controller
         self.strict = strict
         self.stats = SessionStats()
+        self._t0 = time.perf_counter()
         self._state: Dict[Tuple[str, Tuple[int, ...]], NodeState] = {}
         self._cursor = Cursor(node=graph.start.dst, epochs=graph.initial_epochs(),
                               weak_crossed=graph.start.weak)
@@ -111,6 +235,14 @@ class SpecSession:
         self._peek: Optional[Cursor] = None
         self._peek_dist = 0
         self._finished = False
+
+    @property
+    def depth(self) -> int:
+        """Current speculation depth — fixed, or the adaptive controller's
+        live value (re-read at every peek, so depth changes mid-session)."""
+        if self.controller is not None:
+            return self.controller.depth
+        return self._fixed_depth
 
     # -- cursor movement ---------------------------------------------------
     @staticmethod
@@ -164,45 +296,51 @@ class SpecSession:
             cur, dist = self._follow(frontier.node.out, frontier.epochs, False), 0
         prefix = True  # still walking the contiguous issued prefix
         prepared_any = False
-        while dist < self.depth and cur.node is not None:
-            cur2 = self._resolve_branches(cur)
-            if cur2 is None:  # branch decision not ready: stop peeking
-                break
-            cur = cur2
-            if cur.node is None:  # reached End
-                break
-            node: SyscallNode = cur.node
-            st = self._node_state(node, cur.epochs)
-            if node is frontier.node and cur.epochs == frontier.epochs:
-                # the resume cursor caught up with the frontier: intercept()
-                # is serving this node right now — pre-issuing it here would
-                # buy no overlap and cost an extra crossing + worker handoff
-                pass
-            elif not st.issued:
-                out = node.compute_args(self.ctx, cur.epochs)
-                if out is not None:
-                    args, link = out
-                    args = self._bind_deferred(args, cur.epochs)
-                    if args is not None:
-                        pure = is_pure(node.sc, args)
-                        if pure or not cur.weak_crossed:
-                            req = IORequest(sc=node.sc, args=args, link=link,
-                                            tag=(node.name, cur.epochs))
-                            self.backend.prepare(req)
-                            st.issued = True
-                            st.req = req
-                            self.stats.pre_issued += 1
-                            prepared_any = True
-                if not st.issued:
-                    prefix = False  # retry this node on the next peek
-            cur = self._follow(node.out, cur.epochs, cur.weak_crossed)
-            dist += 1
-            if prefix:
-                self._peek, self._peek_dist = cur, dist
-        if prepared_any:
-            if self.backend.submit_all():
-                self.stats.submits += 1
-        self.stats.peek_seconds += time.perf_counter() - t0
+        try:
+            while dist < self.depth and cur.node is not None:
+                cur2 = self._resolve_branches(cur)
+                if cur2 is None:  # branch decision not ready: stop peeking
+                    break
+                cur = cur2
+                if cur.node is None:  # reached End
+                    break
+                node: SyscallNode = cur.node
+                st = self._node_state(node, cur.epochs)
+                if node is frontier.node and cur.epochs == frontier.epochs:
+                    # the resume cursor caught up with the frontier: intercept()
+                    # is serving this node right now — pre-issuing it here would
+                    # buy no overlap and cost an extra crossing + worker handoff
+                    pass
+                elif not st.issued:
+                    out = node.compute_args(self.ctx, cur.epochs)
+                    if out is not None:
+                        args, link = out
+                        args = self._bind_deferred(args, cur.epochs)
+                        if args is not None:
+                            pure = is_pure(node.sc, args)
+                            if pure or not cur.weak_crossed:
+                                req = IORequest(sc=node.sc, args=args, link=link,
+                                                tag=(node.name, cur.epochs))
+                                self.backend.prepare(req)
+                                st.issued = True
+                                st.req = req
+                                self.stats.pre_issued += 1
+                                prepared_any = True
+                    if not st.issued:
+                        prefix = False  # retry this node on the next peek
+                cur = self._follow(node.out, cur.epochs, cur.weak_crossed)
+                dist += 1
+                if prefix:
+                    self._peek, self._peek_dist = cur, dist
+            # only a completed walk submits: if a stub raised mid-batch the
+            # prepared entries stay in the submission queue, where finish()
+            # cancels them before they ever execute — a non-pure request is
+            # only "guaranteed to happen" while the function keeps running.
+            if prepared_any:
+                if self.backend.submit_all():
+                    self.stats.submits += 1
+        finally:
+            self.stats.peek_seconds += time.perf_counter() - t0
 
     def _bind_deferred(self, args, epochs):
         """Rewrite FromNode placeholders to the producer's request at the
@@ -250,8 +388,10 @@ class SpecSession:
         if st.issued and st.req is not None and st.req.state is not ReqState.CANCELLED:
             t0 = time.perf_counter()
             result = self.backend.wait(st.req)
-            self.stats.wait_seconds += time.perf_counter() - t0
+            blocked = time.perf_counter() - t0
+            self.stats.wait_seconds += blocked
             self.stats.served_async += 1
+            served_async = True
             # copy the internal buffer back to the caller (paper Fig. 10
             # 'result copy' overhead) — bytes results are memcpy'd.
             t0 = time.perf_counter()
@@ -262,9 +402,13 @@ class SpecSession:
             t0 = time.perf_counter()
             self.device.charge_crossing()
             result = execute(self.device, sc, args)
-            self.stats.sync_seconds += time.perf_counter() - t0
+            blocked = time.perf_counter() - t0
+            self.stats.sync_seconds += blocked
             self.stats.served_sync += 1
+            served_async = False
             st.issued = True
+        if self.controller is not None:
+            self.controller.on_serve(blocked, served_async, self.backend)
         if frontier.save_result is not None and not st.harvested:
             frontier.save_result(self.ctx, cur.epochs, result)
         st.harvested = True
@@ -282,14 +426,32 @@ class SpecSession:
 
     # -- teardown ------------------------------------------------------------
     def finish(self) -> SessionStats:
-        """Cancel in-flight speculation and account for wasted work."""
+        """Cancel in-flight speculation and account for wasted work.
+
+        Exception-safe and idempotent: even when ``intercept`` raised
+        mid-batch (a stub error between ``prepare`` and ``submit_all``, a
+        strict-mode :class:`GraphMismatch`, a failed request surfacing at
+        ``wait``), every pre-issued-but-unharvested request is cancelled or
+        drained exactly once — nothing may keep running into the next
+        activation that reuses this backend, and nothing may be counted
+        twice.  If cancellation itself raises, the drain and the wasted-work
+        accounting still run before the error propagates.
+        """
         if self._finished:
             return self.stats
         self._finished = True
-        self.stats.cancelled += self.backend.cancel_remaining()
-        self.backend.drain()
-        for st in self._state.values():
-            if st.issued and not st.harvested and st.req is not None \
-                    and st.req.state is ReqState.COMPLETED:
-                self.stats.wasted_completions += 1
+        try:
+            self.stats.cancelled += self.backend.cancel_remaining()
+        finally:
+            try:
+                self.backend.drain()
+            finally:
+                for st in self._state.values():
+                    if st.issued and not st.harvested and st.req is not None \
+                            and st.req.state is ReqState.COMPLETED:
+                        self.stats.wasted_completions += 1
+                if self.controller is not None:
+                    self.controller.on_finish(
+                        self.stats, time.perf_counter() - self._t0, self.backend
+                    )
         return self.stats

@@ -89,13 +89,18 @@ def build_open_list_graph(name: str = "open_list") -> ForeactionGraph:
     return b.Build()
 
 
-def build_pread_extents_graph(name: str = "pread_extents") -> ForeactionGraph:
-    """ctx: {"extents": [(fd, size, offset)]}; pure read loop."""
+def build_pread_extents_graph(name: str = "pread_extents",
+                              weak: bool = False) -> ForeactionGraph:
+    """ctx: {"extents": [(fd, size, offset)]}; pure read loop.
+
+    ``weak=True`` marks the loop's closing edge weak — the LSM-get shape
+    where the caller may return early after any read (still safe to
+    pre-issue: reads are pure)."""
     b = GraphBuilder(name)
 
     def args(ctx, ep):
         ext = ctx["extents"]
-        return ((ext[ep[0]]), False) if ep[0] < len(ext) else None
+        return ((tuple(ext[ep[0]])), False) if ep[0] < len(ext) else None
 
     def head(ctx, ep):
         return 0 if len(ctx["extents"]) > 0 else 1
@@ -109,7 +114,7 @@ def build_pread_extents_graph(name: str = "pread_extents") -> ForeactionGraph:
     b.SetStart("any")
     b.BranchAppendChild("any", "pread")
     b.BranchAppendChild("any", None)
-    b.SyscallSetNext("pread", "more")
+    b.SyscallSetNext("pread", "more", weak=weak)
     b.BranchAppendChild("more", "pread", loopback=True)
     b.BranchAppendChild("more", None)
     return b.Build()

@@ -1,0 +1,135 @@
+"""Syscall trace recording — the *observe* half of observe-then-speculate.
+
+The paper's adoption cost is hand-writing foreaction graphs.  This module
+removes it for a large class of functions: run the function once (or a few
+times) under a :class:`TraceRecorder`, and the recorded syscall trace —
+ordered events with full argument and result values — becomes the input to
+the graph miner (:mod:`repro.analysis.mine`), which folds traces into a
+directly-follows graph and emits a ready-to-register ``ForeactionGraph``.
+
+A ``TraceRecorder`` rides the same per-thread activation stack that
+``SpecSession`` uses: while it is on top, every ``io.*`` call on that thread
+executes *directly* against the device (no speculation, no extra crossings
+beyond the serial baseline) and is appended to the trace.  Recording cost is
+one tuple append per call — near-zero next to any real device latency.
+
+Cross-references: docs/AUTHORING.md ("Mining a graph from traces") is the
+end-to-end guide; *trace* and *directly-follows graph* are defined in
+docs/GLOSSARY.md.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+from .device import Device
+from .syscalls import Sys, execute
+
+
+@dataclass
+class TraceEvent:
+    """One recorded syscall: position, descriptor, arguments, and outcome.
+
+    ``result`` holds the live return value (bytes for pread, fd int for
+    open, stat object, entry list) — the miner needs the real values for
+    argument-provenance detection, so no summarization happens here.
+    """
+
+    seq: int
+    sc: Sys
+    args: Tuple[Any, ...]
+    result: Any = None
+    error: Optional[BaseException] = None
+    t_seconds: float = 0.0  # service time of this call (serial, by design)
+
+    def kind(self) -> Sys:
+        return self.sc
+
+
+class Trace:
+    """An ordered sequence of :class:`TraceEvent` from one invocation."""
+
+    def __init__(self, name: str = "trace"):
+        self.name = name
+        self.events: List[TraceEvent] = []
+        self.wall_seconds: float = 0.0
+
+    def append(self, ev: TraceEvent) -> None:
+        self.events.append(ev)
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def __iter__(self) -> Iterator[TraceEvent]:
+        return iter(self.events)
+
+    def __getitem__(self, i: int) -> TraceEvent:
+        return self.events[i]
+
+    def kinds(self) -> List[Sys]:
+        """The syscall-kind string of the trace — the miner's alphabet."""
+        return [ev.sc for ev in self.events]
+
+    def to_jsonable(self, max_bytes: int = 32) -> List[Dict[str, Any]]:
+        """A JSON-friendly rendering for docs/debugging (large byte values
+        are abbreviated; objects fall back to repr)."""
+
+        def _render(v: Any) -> Any:
+            if isinstance(v, bytes):
+                if len(v) > max_bytes:
+                    return f"<{len(v)} bytes>"
+                return v.hex()
+            if isinstance(v, (int, float, str, bool)) or v is None:
+                return v
+            if isinstance(v, (list, tuple)):
+                return [_render(x) for x in v]
+            return repr(v)
+
+        return [
+            {
+                "seq": ev.seq,
+                "sc": ev.sc.value,
+                "args": _render(ev.args),
+                "result": _render(ev.result),
+                "error": repr(ev.error) if ev.error is not None else None,
+            }
+            for ev in self.events
+        ]
+
+
+class TraceRecorder:
+    """Records every intercepted I/O call while active on a thread.
+
+    Duck-types the slice of the ``SpecSession`` surface the interception
+    layer (:class:`repro.core.api.io`) touches: ``.device`` for routing and
+    ``.intercept(sc, args)`` for the call itself.  Execution is strictly
+    serial and direct — observation must not perturb the behaviour being
+    recorded (the mined graph describes the *serial* order, exactly what the
+    pre-issuing engine needs).
+    """
+
+    def __init__(self, device: Device, name: str = "trace"):
+        self.device = device
+        self.trace = Trace(name)
+        self._t0 = time.perf_counter()
+
+    def intercept(self, sc: Sys, args: Tuple[Any, ...]) -> Any:
+        t0 = time.perf_counter()
+        ev = TraceEvent(seq=len(self.trace.events), sc=sc, args=args)
+        self.trace.append(ev)
+        try:
+            self.device.charge_crossing()
+            result = execute(self.device, sc, args)
+        except BaseException as e:
+            ev.error = e
+            ev.t_seconds = time.perf_counter() - t0
+            raise
+        ev.result = result
+        ev.t_seconds = time.perf_counter() - t0
+        return result
+
+    def finish(self) -> Trace:
+        self.trace.wall_seconds = time.perf_counter() - self._t0
+        return self.trace

@@ -307,3 +307,56 @@ def register_all(fa) -> None:
     fa.register("bptree_scan", build_bptree_scan_graph)
     fa.register("bptree_load", build_bptree_load_graph)
     fa.register("lsm_get", build_lsm_get_graph)
+
+
+# ---------------------------------------------------------------------------
+# Mined counterparts: the same du/cp applications observed and mined instead
+# of hand-annotated.  The graphs above are the ground truth the miner is
+# cross-checked against (tests/test_trace_mine.py asserts the mined graphs
+# produce the same pre-issue schedule); docs/AUTHORING.md renders them, and
+# tools/check_doc_refs.py rebuilds them to keep those renderings honest.
+# ---------------------------------------------------------------------------
+
+
+def mine_reference_graphs():
+    """Record du/cp traces on a deterministic scratch workload and mine
+    them; returns ``{"du": MinedGraph, "cp": MinedGraph}``.
+
+    Deterministic by construction (fixed file set, fixed sizes), so two
+    calls yield structurally identical graphs — the property the doc
+    checker and the determinism test both lean on.
+    """
+    from repro.core import Foreactor, MemDevice
+    from repro.core.api import io as _io  # noqa: F401  (app code routes via io)
+
+    from .fileutils import cp_file, du_dir
+
+    dev = MemDevice()
+    for i in range(5):
+        fd = dev.open(f"/dir/f{i}", "w")
+        dev.pwrite(fd, bytes([i % 251]) * (32 + 8 * i), 0)
+        dev.close(fd)
+    for i in range(3):
+        fd = dev.open(f"/dir2/g{i}", "w")
+        dev.pwrite(fd, bytes([i]) * 16, 0)
+        dev.close(fd)
+    # cp sources: one even multiple of the buffer, one with a remainder
+    for name, size in (("/src_a.bin", 4 * 4096), ("/src_b.bin", 6 * 4096 + 100)):
+        fd = dev.open(name, "w")
+        dev.pwrite(fd, bytes(range(256)) * (size // 256) + b"\x00" * (size % 256), 0)
+        dev.close(fd)
+
+    fa = Foreactor(device=dev, backend="sync")
+    du = fa.observe("du_mined", capture_du)(du_dir)
+    du(dev, "/dir")
+    du(dev, "/dir2")
+    cp = fa.observe("cp_mined", lambda device, src, dst, buf_size=4096:
+                    capture_cp(device, src, dst, buf_size))(cp_file)
+    # train on the remainder-chunk trace (it pins the clamped-residual size
+    # provenance); the even-multiple trace is the held-out validation run
+    cp(dev, "/src_b.bin", "/dst_b.bin", 4096)
+    cp(dev, "/src_a.bin", "/dst_a.bin", 4096)
+    mined_du = fa.mine("du_mined", register=False)
+    mined_cp = fa.mine("cp_mined", register=False)
+    fa.shutdown()
+    return {"du": mined_du, "cp": mined_cp}

@@ -1,0 +1,171 @@
+"""Adaptive speculation depth: DepthController policy units and
+engine-integrated convergence on deep-loop vs early-exit workloads."""
+
+import pytest
+
+from repro.core import (DepthController, DeviceProfile, Foreactor, MemDevice,
+                        SessionStats, SimulatedDevice, io)
+from repro.core.patterns import build_pread_extents_graph, build_stat_list_graph
+
+FAST_SIM = DeviceProfile(channels=8, base_latency=1.5e-3,
+                         metadata_latency=1.0e-3, per_byte=0.0,
+                         crossing_cost=0.0)
+
+
+def _stats(**kw) -> SessionStats:
+    s = SessionStats()
+    for k, v in kw.items():
+        setattr(s, k, v)
+    return s
+
+
+# -- controller policy units --------------------------------------------------
+def test_controller_grows_on_blocked_sessions():
+    c = DepthController(initial=2, max_depth=32)
+    blocked = _stats(intercepted=20, pre_issued=19, served_async=19,
+                     wait_seconds=0.5)
+    c.on_finish(blocked, wall_seconds=1.0)
+    assert c.depth == 4
+    c.on_finish(blocked, wall_seconds=1.0)
+    c.on_finish(blocked, wall_seconds=1.0)
+    assert c.depth == 16
+
+
+def test_controller_shrinks_toward_consumption_on_waste():
+    c = DepthController(initial=32, max_depth=64)
+    wasteful = _stats(intercepted=3, pre_issued=30, served_async=2,
+                      cancelled=20, wasted_completions=8)
+    c.on_finish(wasteful, wall_seconds=1.0)
+    assert c.depth == 3  # served_async + 1
+    # a wasteful verdict gates the next growth attempt
+    blocked = _stats(intercepted=3, pre_issued=2, served_async=2,
+                     wait_seconds=0.5)
+    c.on_finish(blocked, wall_seconds=1.0)
+    assert c.depth == 3  # no regrow right after waste
+    c.on_finish(blocked, wall_seconds=1.0)
+    assert c.depth == 6  # waste verdict cleared, growth resumes
+
+
+def test_controller_respects_bounds():
+    c = DepthController(initial=1, min_depth=1, max_depth=8)
+    blocked = _stats(intercepted=50, pre_issued=49, served_async=49,
+                     wait_seconds=1.0)
+    for _ in range(10):
+        c.on_finish(blocked, wall_seconds=1.0)
+    assert c.depth == 8
+    wasteful = _stats(intercepted=1, pre_issued=8, served_async=0,
+                      cancelled=8)
+    c.on_finish(wasteful, wall_seconds=1.0)
+    assert c.depth == 1
+
+
+def test_controller_window_grows_within_a_session():
+    c = DepthController(initial=2, max_depth=64, window=4)
+    # 1st serve starts the window clock; 4 more blocked serves close it
+    for _ in range(5):
+        c.on_serve(wait_seconds=0.1, async_hit=True)
+    assert c.depth == 4
+
+
+def test_controller_occupancy_gates_growth():
+    class Saturated:
+        capacity = 4
+
+        def inflight(self):
+            return 4
+
+    c = DepthController(initial=4, max_depth=64)
+    blocked = _stats(intercepted=20, pre_issued=19, served_async=19,
+                     wait_seconds=0.5)
+    c.on_finish(blocked, wall_seconds=1.0, backend=Saturated())
+    assert c.depth == 4  # queue full at depth >= capacity: growth refused
+
+
+def test_depth_argument_validation():
+    with pytest.raises(ValueError):
+        Foreactor(device=MemDevice(), depth="turbo")
+
+
+# -- engine integration -------------------------------------------------------
+def stat_loop_graph():
+    return build_stat_list_graph("stat_loop")
+
+
+def read_chain_weak_graph():
+    return build_pread_extents_graph("read_chain", weak=True)
+
+
+def _seed(dev, n, size=16):
+    paths = []
+    for i in range(n):
+        p = f"/d/f{i}"
+        fd = dev.open(p, "w")
+        dev.pwrite(fd, bytes([i % 251]) * size, 0)
+        dev.close(fd)
+        paths.append(p)
+    return paths
+
+
+def test_adaptive_depth_external_synchrony_and_growth():
+    inner = MemDevice()
+    paths = _seed(inner, 24)
+    dev = SimulatedDevice(inner, FAST_SIM)
+    fa = Foreactor(device=dev, backend="io_uring", depth="adaptive",
+                   workers=8)
+    fa.register("stat_loop", stat_loop_graph)
+
+    @fa.wrap("stat_loop", lambda paths: {"paths": paths})
+    def du(paths):
+        return sum(io.fstatat(dev, p).st_size for p in paths)
+
+    expect = 24 * 16
+    for _ in range(4):
+        assert du(paths) == expect  # correctness at every depth it visits
+    c = fa.controller("stat_loop")
+    assert c.depth > 2  # a fully-consumed blocked loop grew the depth
+    assert c.grows >= 1
+    fa.shutdown()
+
+
+def test_adaptive_depth_shrinks_on_early_exit_workload():
+    inner = MemDevice()
+    paths = _seed(inner, 32)
+    dev = SimulatedDevice(inner, FAST_SIM)
+    fa = Foreactor(device=dev, backend="io_uring", depth="adaptive",
+                   depth_range=(1, 64), workers=8)
+    fa.register("read_chain", read_chain_weak_graph)
+    extents = []
+    for p in paths:
+        fd = dev.open(p, "r")
+        extents.append((fd, 16, 0))
+
+    @fa.wrap("read_chain", lambda: {"extents": extents})
+    def search():
+        for i, (fd, n, off) in enumerate(extents):
+            data = io.pread(dev, fd, n, off)
+            if i == 2:
+                return data
+        return None
+
+    for _ in range(6):
+        assert search() == bytes([2]) * 16
+    c = fa.controller("read_chain")
+    # consumption is 3 reads per call: depth must settle near that, far
+    # below the 64 ceiling a fixed-depth config would waste
+    assert c.depth <= 8
+    fa.shutdown()
+
+
+def test_explicit_depth_overrides_adaptive():
+    dev = MemDevice()
+    paths = _seed(dev, 8)
+    fa = Foreactor(device=dev, backend="io_uring", depth="adaptive")
+    fa.register("stat_loop", stat_loop_graph)
+    sess = fa.activate("stat_loop", {"paths": paths}, depth=3)
+    assert sess.controller is None
+    assert sess.depth == 3
+    fa.deactivate(sess)
+    sess2 = fa.activate("stat_loop", {"paths": paths})
+    assert sess2.controller is fa.controller("stat_loop")
+    fa.deactivate(sess2)
+    fa.shutdown()

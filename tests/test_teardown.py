@@ -172,6 +172,118 @@ def test_lenient_mode_passes_mismatch_through(backend):
 
 
 @pytest.mark.parametrize("backend", BACKENDS)
+def test_finish_after_stub_raises_mid_batch(backend):
+    """Regression: a ComputeArgs stub raising *mid-peek* (after some
+    requests were prepared but before the batch was submitted) must leave no
+    request behind — finish() cancels/drains everything exactly once, the
+    prepared-but-unsubmitted entries never execute, and the per-thread
+    backend serves the next activation cleanly."""
+    dev = make_device(backend)
+    paths = seed_files(dev, 12, backend)
+
+    class Boom(RuntimeError):
+        pass
+
+    def exploding_graph():
+        b = GraphBuilder("exploding")
+
+        def args(ctx, ep):
+            if ep[0] >= len(ctx["paths"]):
+                return None
+            if ep[0] == 5:
+                raise Boom("stub failure mid-peek")
+            return ((ctx["paths"][ep[0]],), False)
+
+        b.AddSyscallNode("fstat", Sys.FSTATAT, args)
+        b.AddBranchingNode(
+            "more", lambda ctx, ep: 0 if ep[0] + 1 < len(ctx["paths"]) else 1)
+        b.SyscallSetNext("fstat", "more")
+        b.BranchAppendChild("more", "fstat", loopback=True)
+        b.BranchAppendChild("more", None)
+        return b.Build()
+
+    fa = Foreactor(device=dev, backend=backend, depth=12)
+    fa.register("exploding", exploding_graph)
+
+    @fa.wrap("exploding", lambda paths: {"paths": paths})
+    def du(paths):
+        return sum(io.fstatat(dev, p).st_size for p in paths)
+
+    with pytest.raises(Boom):
+        du(paths)  # the first intercept's peek walks into the raising stub
+    s = fa.total_stats
+    # everything pre-issued was either harvested, cancelled, or drained to
+    # completion and accounted wasted — nothing is unaccounted or in flight
+    assert s.pre_issued == s.served_async + s.cancelled + s.wasted_completions
+    with dev.stats._lock:
+        assert dev.stats.inflight == 0
+    # the same thread's backend must be reusable for a healthy activation
+    fa.register("stat_loop", stat_loop_graph)
+
+    @fa.wrap("stat_loop", lambda paths: {"paths": paths})
+    def du_ok(paths):
+        return sum(io.fstatat(dev, p).st_size for p in paths)
+
+    assert du_ok(paths) == 12 * 16
+    fa.shutdown()
+
+
+def test_finish_runs_accounting_even_if_teardown_raises():
+    """Regression: finish() used to mark itself done before doing any work,
+    so an error during teardown skipped the remaining steps and a retry
+    returned without ever draining or accounting.  Now cancellation, drain
+    and wasted-completion accounting are chained in finally blocks: an error
+    in one step still runs the later ones, every request ends in a terminal
+    state, and a second finish() is a no-op returning the same stats."""
+    from repro.core.api import _session_stack
+    from repro.core.syscalls import ReqState
+
+    dev = make_device("io_uring")
+    paths = seed_files(dev, 8, "io_uring")
+    fa = Foreactor(device=dev, backend="io_uring", depth=8)
+    fa.register("read_chain", read_chain_weak_graph)
+    extents = []
+    for p in paths:
+        fd = dev.open(p, "r")
+        extents.append((fd, 16, 0))
+    sess = fa.activate("read_chain", {"extents": extents})
+    try:
+        io.pread(dev, extents[0][0], 16, 0)  # pre-issues the rest
+    finally:
+        _session_stack().pop()
+    assert sess.stats.pre_issued > 0
+
+    backend = sess.backend
+    real_drain = backend.drain
+
+    class DrainBoom(RuntimeError):
+        pass
+
+    def bad_drain():
+        real_drain()  # the backend does quiesce...
+        raise DrainBoom()  # ...but the teardown path errors afterwards
+
+    backend.drain = bad_drain
+    with pytest.raises(DrainBoom):
+        sess.finish()
+    backend.drain = real_drain
+    # cancellation and accounting both ran despite the drain error:
+    stats = sess.stats
+    assert stats.pre_issued == stats.served_async + stats.cancelled \
+        + stats.wasted_completions
+    # every speculated request reached a terminal state (nothing leaks into
+    # the next activation on this backend)
+    for st in sess._state.values():
+        if st.req is not None:
+            assert st.req.state in (ReqState.COMPLETED, ReqState.CANCELLED)
+    # idempotent: a second finish() does not double-cancel or double-count
+    before = (stats.cancelled, stats.wasted_completions)
+    assert sess.finish() is stats
+    assert (stats.cancelled, stats.wasted_completions) == before
+    fa.shutdown()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
 def test_session_finish_is_idempotent_and_backend_reusable(backend):
     """After a teardown the per-thread backend must serve the next
     activation (the paper keeps queue pairs live across invocations)."""

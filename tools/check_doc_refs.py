@@ -1,10 +1,18 @@
 #!/usr/bin/env python3
-"""Fail if a doc references a repository path that no longer exists.
+"""Fail if a doc references a repository path that no longer exists, or
+embeds a ``dot`` graph that no buildable graph renders.
 
-Scans markdown files for path-like references (``src/...``, ``tests/...``,
-``benchmarks/...``, ``docs/...``, ``examples/...``) and dotted module names
-(``repro.core.engine``), and checks each against the working tree. Keeps
-docs/ARCHITECTURE.md honest as modules move (run by the CI docs job).
+Two checks per markdown file:
+
+1. **Path/module references** — path-like references (``src/...``,
+   ``tests/...``, ...) and dotted module names (``repro.core.engine``)
+   must exist in the working tree.
+2. **Fenced ``dot`` blocks** — every ```` ```dot ```` block must parse
+   against the ``to_dot()`` line grammar *and* byte-for-byte match the
+   ``to_dot()`` output of a buildable graph (the hand-written plugin
+   graphs, the reusable patterns, or the mined reference graphs from
+   ``repro.store.plugins.mine_reference_graphs``).  Docs cannot drift from
+   the graphs the code actually builds.
 
 Usage: python tools/check_doc_refs.py docs/ARCHITECTURE.md README.md ...
 """
@@ -21,9 +29,69 @@ PATH_RE = re.compile(
     r"\b(?:src|tests|benchmarks|docs|examples|tools)/[\w./-]+\.(?:py|md|json|yml)\b"
 )
 MODULE_RE = re.compile(r"\brepro(?:\.\w+)+\b")
+DOT_BLOCK_RE = re.compile(r"^```dot\n(.*?)^```", re.MULTILINE | re.DOTALL)
+
+#: the exact line shapes ForeactionGraph.to_dot() can emit
+DOT_LINE_RES = [
+    re.compile(r'^digraph "[^"]+" \{$'),
+    re.compile(r"^  rankdir=LR;$"),
+    re.compile(r"^  [SE] \[shape=(?:double)?circle\];$"),
+    re.compile(r'^  "[^"]+" \[shape=(?:box, label="[^"]*"|diamond)\];$'),
+    re.compile(r'^  (?:S|"[^"]+") -> (?:E|"[^"]+")'
+               r'(?: \[(?:style=dashed)?(?:, )?(?:label="loop \d+")?\])?;$'),
+    re.compile(r"^\}$"),
+]
 
 #: paths docs may legitimately reference before they exist at check time
-GENERATED = {"benchmarks/results/sharding.json"}
+GENERATED = {"benchmarks/results/sharding.json",
+             "benchmarks/results/adaptive.json"}
+
+
+def _buildable_dots() -> dict:
+    """to_dot() renderings of every graph the repo can build, keyed by a
+    human-readable origin (for error messages)."""
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.core.patterns import PATTERNS
+    from repro.store import plugins
+
+    dots = {}
+    for name, builder in (
+        ("plugins.build_du_graph", plugins.build_du_graph),
+        ("plugins.build_cp_graph", plugins.build_cp_graph),
+        ("plugins.build_bptree_scan_graph", plugins.build_bptree_scan_graph),
+        ("plugins.build_bptree_load_graph", plugins.build_bptree_load_graph),
+        ("plugins.build_lsm_get_graph", plugins.build_lsm_get_graph),
+    ):
+        dots[name] = builder().to_dot()
+    for name, builder in PATTERNS.items():
+        dots[f"patterns.{name}"] = builder().to_dot()
+    for name, mined in plugins.mine_reference_graphs().items():
+        dots[f"mined.{name}"] = mined.graph.to_dot()
+    return dots
+
+
+def check_dot_blocks(path: str, get_dots) -> list:
+    """Problems with the fenced dot blocks of one markdown file.
+    ``get_dots`` is called lazily on the first block found, so files
+    without dot blocks never pay the graph-building (or numpy) cost."""
+    with open(path) as f:
+        text = f.read()
+    problems = []
+    dots = None
+    for i, m in enumerate(DOT_BLOCK_RE.finditer(text)):
+        if dots is None:
+            dots = get_dots()
+        block = m.group(1).rstrip("\n")
+        label = f"dot block #{i + 1}"
+        for line in block.split("\n"):
+            if not any(r.match(line) for r in DOT_LINE_RES):
+                problems.append(f"{label}: unparseable line: {line!r}")
+        if block not in dots.values():
+            problems.append(
+                f"{label}: matches no buildable graph's to_dot() "
+                f"(known: {', '.join(sorted(dots))})"
+            )
+    return problems
 
 
 def module_exists(dotted: str) -> bool:
@@ -55,16 +123,28 @@ def check(path: str) -> list:
 
 def main(argv) -> int:
     files = argv or ["docs/ARCHITECTURE.md"]
+    cache: dict = {}
+
+    def get_dots() -> dict:
+        if not cache:
+            cache.update(_buildable_dots())
+        return cache
+
     bad = 0
     for f in files:
-        missing = check(os.path.join(REPO, f))
+        full = os.path.join(REPO, f)
+        missing = check(full)
         for ref in missing:
             print(f"{f}: dangling reference: {ref}")
-        bad += len(missing)
+        problems = check_dot_blocks(full, get_dots)
+        for p in problems:
+            print(f"{f}: {p}")
+        bad += len(missing) + len(problems)
     if bad:
-        print(f"{bad} dangling reference(s)")
+        print(f"{bad} problem(s)")
         return 1
-    print(f"ok: {len(files)} file(s), no dangling references")
+    print(f"ok: {len(files)} file(s), no dangling references, "
+          f"all dot blocks match buildable graphs")
     return 0
 
 
