@@ -1,0 +1,176 @@
+"""Multi-tenant serving benchmark: shared-backend scheduler vs per-thread
+isolation vs no speculation (docs/TUNING.md, docs/ARCHITECTURE.md
+"Shared-backend scheduling").
+
+Two experiments over the closed-loop server in ``repro.launch.ioserver``:
+
+* **concurrency sweep** — N get clients (N in ``CLIENT_COUNTS``) × modes
+  {sync, isolated, shared}: per-mode p50/p99 latency and aggregate
+  throughput.  Headline checks (written to ``summary``):
+  ``shared_beats_sync_p99`` at the highest concurrency, and
+  ``shared_tput_vs_isolated`` within ~10% (the price of arbitration).
+* **priority mix** — 4 high-priority get clients alone vs the same 4 plus
+  4 low-priority checkpoint-restore clients flooding the pool with
+  speculation.  Headline: ``high_pri_p99_delta`` ≤ ~10% — weighted-fair
+  admission + pressure eviction keep the hot tenants' tail flat.
+
+Every cell is best-of-``REPEATS`` (min per metric) to filter 2-vCPU CI
+scheduler noise.  Results land in ``benchmarks/results/serve.json``;
+``python -m benchmarks.bench_serve --table`` renders the markdown table
+embedded in docs/TUNING.md.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List
+
+from repro.launch.ioserver import (build_store, get_clients, restore_clients,
+                                   run_serving)
+
+from .common import RESULTS_DIR, Row, write_results
+
+CLIENT_COUNTS = (2, 8)
+MODES = ("sync", "isolated", "shared")
+#: best-of-N per cell: 2-vCPU CI boxes show 2x wall-time noise between
+#: identical runs; the min/max aggregation converges on true capability
+REPEATS = 4
+OPS = 30
+HIGH_CLIENTS = 4
+LOW_RESTORES = 4
+#: the priority-mix comparison is a p99-vs-p99 delta — the most
+#: noise-sensitive number in the file — so it gets more samples per run
+#: and more repeats than the sweep cells
+PRIORITY_OPS = 60
+PRIORITY_REPEATS = 6
+
+
+def _best_of(mode: str, clients, store, repeats: int = REPEATS) -> dict:
+    """Run one config ``repeats`` times; keep per-metric minima (latency,
+    wall) / maxima (throughput) plus the last run's scheduler snapshot."""
+    runs = [run_serving(mode, clients, store=store) for _ in range(repeats)]
+    best = dict(runs[-1])
+    for r in runs:
+        assert r["errors"] == 0, f"{mode}: {r['errors']} serving errors"
+    def agg(metric, cls):
+        return min(r["classes"][cls][metric] for r in runs if cls in r["classes"])
+    classes = runs[-1]["classes"]
+    best["classes"] = {
+        cls: {"ops": classes[cls]["ops"],
+              "p50_ms": agg("p50_ms", cls), "p99_ms": agg("p99_ms", cls)}
+        for cls in classes
+    }
+    best["throughput_ops"] = max(r["throughput_ops"] for r in runs)
+    best["wall_s"] = min(r["wall_s"] for r in runs)
+    best.pop("per_client", None)  # keep the JSON small; classes suffice
+    return best
+
+
+def bench() -> Dict[str, dict]:
+    store = build_store()
+    out: Dict[str, dict] = {"config": {
+        "client_counts": list(CLIENT_COUNTS), "modes": list(MODES),
+        "repeats": REPEATS, "ops_per_client": OPS,
+        "high_clients": HIGH_CLIENTS, "low_restores": LOW_RESTORES,
+    }}
+
+    # -- concurrency sweep ----------------------------------------------------
+    sweep: Dict[str, dict] = {}
+    for n in CLIENT_COUNTS:
+        cell: Dict[str, dict] = {}
+        for mode in MODES:
+            cell[mode] = _best_of(mode, get_clients(n, priority="high",
+                                                    ops=OPS), store)
+        sweep[str(n)] = cell
+    out["sweep"] = sweep
+
+    # -- priority mix on the shared scheduler ---------------------------------
+    high = get_clients(HIGH_CLIENTS, priority="high", ops=PRIORITY_OPS,
+                       prefix="hot")
+    base = _best_of("shared", high, store, repeats=PRIORITY_REPEATS)
+    loaded = _best_of("shared", high + restore_clients(LOW_RESTORES), store,
+                      repeats=PRIORITY_REPEATS)
+    out["priority_mix"] = {"high_only": base, "with_low_pri_load": loaded}
+
+    # -- summary --------------------------------------------------------------
+    top = str(max(CLIENT_COUNTS))
+    sync_p99 = sweep[top]["sync"]["classes"]["high"]["p99_ms"]
+    shared_p99 = sweep[top]["shared"]["classes"]["high"]["p99_ms"]
+    iso_tput = sweep[top]["isolated"]["throughput_ops"]
+    shared_tput = sweep[top]["shared"]["throughput_ops"]
+    hp_base = base["classes"]["high"]["p99_ms"]
+    hp_loaded = loaded["classes"]["high"]["p99_ms"]
+    out["summary"] = {
+        "clients": int(top),
+        "sync_p99_ms": sync_p99,
+        "shared_p99_ms": shared_p99,
+        "shared_beats_sync_p99": shared_p99 < sync_p99,
+        "shared_p99_speedup": sync_p99 / shared_p99,
+        "isolated_tput_ops": iso_tput,
+        "shared_tput_ops": shared_tput,
+        "shared_tput_vs_isolated": shared_tput / iso_tput,
+        "shared_tput_within_10pct": shared_tput >= 0.90 * iso_tput,
+        "high_pri_p99_base_ms": hp_base,
+        "high_pri_p99_loaded_ms": hp_loaded,
+        "high_pri_p99_delta": hp_loaded / hp_base - 1.0,
+        "high_pri_p99_stable": hp_loaded <= 1.10 * hp_base,
+        "loaded_scheduler": loaded.get("scheduler"),
+    }
+    return out
+
+
+def run() -> List[Row]:
+    out = bench()
+    path = write_results("serve", out)
+    rows: List[Row] = []
+    for n, cell in out["sweep"].items():
+        for mode, rep in cell.items():
+            c = rep["classes"]["high"]
+            rows.append((
+                f"serve_{mode}_{n}clients", c["p50_ms"] * 1e3,
+                f"p99={c['p99_ms']:.1f}ms tput={rep['throughput_ops']:.0f}ops",
+            ))
+    s = out["summary"]
+    rows.append((
+        "serve_summary", 0.0,
+        f"shared_vs_sync_p99=x{s['shared_p99_speedup']:.2f} "
+        f"tput_vs_isolated={s['shared_tput_vs_isolated']:.2f} "
+        f"high_pri_delta={s['high_pri_p99_delta']*100:+.1f}%",
+    ))
+    rows.append(("serve_results_json", 0.0, path))
+    return rows
+
+
+def render_table(path: str = None) -> str:
+    """The markdown table embedded in docs/TUNING.md, generated from the
+    benchmark's JSON results."""
+    path = path or os.path.join(RESULTS_DIR, "serve.json")
+    with open(path) as f:
+        data = json.load(f)
+    lines = [
+        "| clients | mode | p50 | p99 | throughput |",
+        "|---|---|---|---|---|",
+    ]
+    for n, cell in sorted(data["sweep"].items(), key=lambda kv: int(kv[0])):
+        for mode in data["config"]["modes"]:
+            c = cell[mode]["classes"]["high"]
+            lines.append(
+                f"| {n} | {mode} | {c['p50_ms']:.1f} ms | {c['p99_ms']:.1f} ms"
+                f" | {cell[mode]['throughput_ops']:.0f} op/s |")
+    s = data["summary"]
+    lines.append("")
+    lines.append(
+        f"High-priority p99 with 4 low-priority restore tenants added: "
+        f"{s['high_pri_p99_base_ms']:.1f} ms → {s['high_pri_p99_loaded_ms']:.1f} ms "
+        f"({s['high_pri_p99_delta']*100:+.1f}%).")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    if "--table" in sys.argv:
+        print(render_table())
+    else:
+        for line in run():
+            print(",".join(str(x) for x in line))

@@ -12,6 +12,9 @@ Prints ``name,us_per_call,derived`` CSV.  Sections:
 * Adaptive — fixed depth sweep vs the adaptive controller (bench_adaptive;
   structured results also land in benchmarks/results/adaptive.json, and
   ``python -m benchmarks.bench_adaptive --table`` renders the TUNING.md table)
+* Serving — multi-tenant shared-backend scheduler vs per-thread isolation
+  vs sync (bench_serve; results in benchmarks/results/serve.json, table via
+  ``python -m benchmarks.bench_serve --table``)
 
 Roofline tables (§Roofline) are produced separately by
 ``python -m benchmarks.roofline`` from the dry-run reports.
@@ -23,7 +26,7 @@ import time
 
 def main() -> None:
     from . import (bench_adaptive, bench_bptree, bench_lsm, bench_overhead,
-                   bench_sharding, bench_utilities)
+                   bench_serve, bench_sharding, bench_utilities)
     from .common import fmt
 
     sections = [
@@ -33,6 +36,7 @@ def main() -> None:
         ("fig10_overhead_framework", bench_overhead.run),
         ("sharding_multi_device", bench_sharding.run),
         ("adaptive_depth", bench_adaptive.run),
+        ("serving_multi_tenant", bench_serve.run),
     ]
     print("name,us_per_call,derived")
     for name, fn in sections:

@@ -16,8 +16,8 @@ docs/ARCHITECTURE.md for the full paper-to-module map.
 
 from .api import Foreactor, current_session, io, make_foreactor
 from .backends import (
-    BACKENDS, MultiQueueBackend, QueuePairBackend, SyncBackend,
-    ThreadPoolBackend, make_backend,
+    BACKENDS, MultiQueueBackend, QueuePairBackend, SharedBackend,
+    SlotScheduler, SyncBackend, ThreadPoolBackend, make_backend,
 )
 from .device import (
     Device, DeviceProfile, MemDevice, NVME_PROFILE, OSDevice, REMOTE_PROFILE,
@@ -30,8 +30,8 @@ from .trace import Trace, TraceEvent, TraceRecorder
 
 __all__ = [
     "Foreactor", "current_session", "io", "make_foreactor",
-    "BACKENDS", "MultiQueueBackend", "QueuePairBackend", "SyncBackend",
-    "ThreadPoolBackend", "make_backend",
+    "BACKENDS", "MultiQueueBackend", "QueuePairBackend", "SharedBackend",
+    "SlotScheduler", "SyncBackend", "ThreadPoolBackend", "make_backend",
     "Device", "DeviceProfile", "MemDevice", "NVME_PROFILE", "OSDevice",
     "REMOTE_PROFILE", "ShardedDevice", "SimulatedDevice",
     "DepthController", "GraphMismatch", "SessionStats", "SpecSession",

@@ -16,17 +16,28 @@ when the device is a :class:`repro.core.device.ShardedDevice`, and to the
 single io_uring-style queue pair otherwise — existing call sites gain
 multi-device fan-out transparently.
 
+Concurrency model is opt-in per Foreactor: the default keeps one private
+live queue pair per application thread (the paper's setup); ``shared=True``
+instead multiplexes every concurrent session onto ONE backend through a
+:class:`repro.core.backends.SlotScheduler` — sessions carry a *tenant*
+identity (``activate(tenant=...)``, the ``fa.tenant(...)`` thread context,
+or the thread name) and lease submission slots weighted-fairly, so a
+serving process with hundreds of clients does not need hundreds of worker
+pools and no tenant's demand I/O waits behind another's speculation.
+
 Cross-references: docs/ARCHITECTURE.md ("Public API") maps this module to
 paper §5.1; docs/GLOSSARY.md defines the terms used here.
 """
 
 from __future__ import annotations
 
+import contextlib
 import functools
 import threading
 from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
-from .backends import Backend, SyncBackend, make_backend
+from .backends import (Backend, SharedBackend, SlotScheduler, SyncBackend,
+                       make_backend, resolve_priority)
 from .device import Device, OSDevice
 from .engine import DepthController, SessionStats, SpecSession
 from .graph import ForeactionGraph
@@ -60,6 +71,8 @@ class Foreactor:
         workers: int = 16,
         strict: bool = False,
         depth_range: Tuple[int, int] = (1, 64),
+        shared: bool = False,
+        shared_slots: Optional[int] = None,
     ):
         if not (isinstance(depth, int) or depth == "adaptive"):
             raise ValueError(f"depth must be an int or 'adaptive', got {depth!r}")
@@ -69,6 +82,14 @@ class Foreactor:
         self.depth_range = depth_range
         self.workers = workers
         self.strict = strict
+        #: shared=True replaces the per-thread private queue pairs with ONE
+        #: backend whose submission slots are leased to concurrent sessions
+        #: through a SlotScheduler (multi-tenant serving mode).  shared_slots
+        #: sets the scheduler's slot window independently of the worker
+        #: count (slots above it queue as cancellable, evictable entries);
+        #: default: one slot per worker.
+        self.shared = shared
+        self.shared_slots = shared_slots
         self._graphs: Dict[str, ForeactionGraph] = {}
         self._graph_builders: Dict[str, Callable[[], ForeactionGraph]] = {}
         self._controllers: Dict[str, DepthController] = {}
@@ -76,6 +97,9 @@ class Foreactor:
         self.total_stats = SessionStats()
         self._backends: List[Backend] = []
         self._backend_pool = threading.local()  # one live queue pair per thread
+        self._tenant_tls = threading.local()  # fa.tenant(...) context state
+        self.scheduler: Optional[SlotScheduler] = None
+        self._shared_inner: Optional[Backend] = None
         self._lock = threading.Lock()
 
     # -- registry ----------------------------------------------------------
@@ -102,6 +126,52 @@ class Foreactor:
                 self._backends.append(b)
         return b
 
+    def shared_backend(self) -> Backend:
+        """The one shared async backend (created lazily; ``shared=True``)."""
+        with self._lock:
+            if self._shared_inner is None:
+                inner = make_backend(self.backend_name, self.device,
+                                     workers=self.workers)
+                if isinstance(inner, SyncBackend):
+                    raise ValueError(
+                        "shared=True needs an async backend (got 'sync')")
+                self._shared_inner = inner
+                self.scheduler = SlotScheduler(self.shared_slots
+                                               or inner.capacity)
+                self._backends.append(inner)
+            return self._shared_inner
+
+    @contextlib.contextmanager
+    def tenant(self, name: str, weight: float = 1.0, priority="normal"):
+        """Default tenant identity for activations made on this thread —
+        how a serving client thread (or anything activating indirectly,
+        e.g. through the checkpoint manager) states who it is and what its
+        weight/priority class are, without threading kwargs through every
+        call site."""
+        prev = getattr(self._tenant_tls, "ident", None)
+        self._tenant_tls.ident = (name, float(weight), priority)
+        try:
+            yield self
+        finally:
+            self._tenant_tls.ident = prev
+
+    def _shared_view(self, tenant: Optional[str], weight: Optional[float],
+                     priority) -> SharedBackend:
+        inner = self.shared_backend()
+        tls = getattr(self._tenant_tls, "ident", None)
+        if tenant is None:
+            # the TLS context's weight/priority belong to the TLS tenant —
+            # they must never leak onto an explicitly named tenant
+            tenant = tls[0] if tls else threading.current_thread().name
+            if weight is None:
+                weight = tls[1] if tls else None
+            if priority is None:
+                priority = tls[2] if tls else None
+        return SharedBackend(inner, self.scheduler, tenant=tenant,
+                             weight=1.0 if weight is None else weight,
+                             priority=resolve_priority(
+                                 "normal" if priority is None else priority))
+
     def controller(self, graph_name: str) -> DepthController:
         """The shared per-graph adaptive depth controller (created lazily);
         sessions of the same graph learn one depth together."""
@@ -115,20 +185,28 @@ class Foreactor:
 
     # -- activation ----------------------------------------------------------
     def activate(self, graph_name: str, ctx: Dict[str, Any],
-                 depth: Optional[Union[int, str]] = None) -> SpecSession:
+                 depth: Optional[Union[int, str]] = None,
+                 tenant: Optional[str] = None,
+                 weight: Optional[float] = None,
+                 priority=None) -> SpecSession:
         depth = self.depth if depth is None else depth
         controller = None
         if depth == "adaptive":
             controller = self.controller(graph_name)
             depth = 0  # ignored: SpecSession.depth tracks the controller live
+        if self.shared:
+            backend: Backend = self._shared_view(tenant, weight, priority)
+        else:
+            backend = self._make_backend()
         sess = SpecSession(
             graph=self.graph(graph_name),
             ctx=ctx,
-            backend=self._make_backend(),
+            backend=backend,
             device=self.device,
             depth=depth,
             strict=self.strict,
             controller=controller,
+            tenant=tenant,
         )
         _session_stack().append(sess)
         return sess
@@ -138,6 +216,8 @@ class Foreactor:
         assert st and st[-1] is sess, "unbalanced session stack"
         st.pop()
         stats = sess.finish()  # cancels leftovers + drains; backend is reused
+        if getattr(sess.backend, "is_view", False):
+            sess.backend.shutdown()  # release the slot lease, keep the inner
         with self._lock:
             self.total_stats.merge(stats)
         return stats
@@ -145,9 +225,18 @@ class Foreactor:
     def wrap(self, graph_name: str,
              capture: Callable[..., Dict[str, Any]],
              auto_graph: bool = False,
-             observe_calls: int = 2) -> Callable:
+             observe_calls: int = 2,
+             tenant: Optional[Union[str, Callable[..., str]]] = None,
+             weight: Optional[float] = None,
+             priority=None) -> Callable:
         """Decorator: shadow function ``f`` with a wrapper that captures the
         Input annotation variables and runs ``f`` under a SpecSession.
+
+        ``tenant``/``weight``/``priority`` set the activation's identity for
+        the shared-backend scheduler (``shared=True``); ``tenant`` may be a
+        callable over the wrapped function's arguments for per-call tenancy.
+        Unset, they fall back to the thread's ``fa.tenant(...)`` context and
+        then to the thread name.
 
         With ``auto_graph=True`` no registered graph is needed: the first
         ``observe_calls`` invocations run serially under a
@@ -160,12 +249,17 @@ class Foreactor:
         wrong graph.
         """
 
+        def _tenant_of(args, kwargs) -> Optional[str]:
+            return tenant(*args, **kwargs) if callable(tenant) else tenant
+
         def deco(fn: Callable) -> Callable:
             if not auto_graph:
                 @functools.wraps(fn)
                 def wrapper(*args, **kwargs):
                     ctx = capture(*args, **kwargs)
-                    sess = self.activate(graph_name, ctx)
+                    sess = self.activate(graph_name, ctx,
+                                         tenant=_tenant_of(args, kwargs),
+                                         weight=weight, priority=priority)
                     try:
                         return fn(*args, **kwargs)
                     finally:
@@ -183,7 +277,9 @@ class Foreactor:
                     mode = state["state"]
                 if mode == "speculating":
                     ctx = capture(*args, **kwargs)
-                    sess = self.activate(graph_name, ctx)
+                    sess = self.activate(graph_name, ctx,
+                                         tenant=_tenant_of(args, kwargs),
+                                         weight=weight, priority=priority)
                     try:
                         return fn(*args, **kwargs)
                     finally:
@@ -283,7 +379,7 @@ class Foreactor:
 class _PassthroughForeactor(Foreactor):
     """A disabled Foreactor: wrap() runs the function unmodified (baseline)."""
 
-    def activate(self, graph_name, ctx, depth=None):  # type: ignore[override]
+    def activate(self, graph_name, ctx, depth=None, **kw):  # type: ignore[override]
         sess = SpecSession(self.graph(graph_name), ctx, SyncBackend(self.device),
                            self.device, depth=0, strict=False)
         # depth=0 sync-backend session == original serial execution

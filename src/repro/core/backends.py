@@ -22,16 +22,25 @@ pays one boundary crossing *per sub-device touched* — N parallel
 ride independent execution resources and aggregate bandwidth scales with
 device count.
 
+``SharedBackend`` + ``SlotScheduler`` are the multi-tenant extension: many
+concurrent sessions lease submission slots from *one* underlying queue pair
+(or multi-queue) instead of each owning a private one.  The scheduler
+arbitrates whose speculation occupies the queue — weighted-fair shares
+across tenants, priority classes, and pressure-triggered eviction of
+speculative-only (not-yet-demanded) requests — so demand I/O is never
+starved behind another tenant's speculation.
+
 Cross-references: docs/ARCHITECTURE.md ("Backends", "Sharded multi-device
-substrate") maps this module to paper §2.3/§5.4; see docs/GLOSSARY.md for
-*queue-pair crossing* and *link flag*.
+substrate", "Shared-backend scheduling") maps this module to paper
+§2.3/§5.4; see docs/GLOSSARY.md for *queue-pair crossing*, *link flag*,
+*tenant*, and *slot lease*.
 """
 
 from __future__ import annotations
 
 import queue
 import threading
-from typing import List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from .device import Device, ShardedDevice
 from .syscalls import IORequest, ReqState, Sys, execute
@@ -71,6 +80,18 @@ class Backend:
         """Block until nothing is in flight (session teardown)."""
         raise NotImplementedError
 
+    def spec_budget(self) -> Optional[int]:
+        """Speculation-budget lease: how many requests this backend will let
+        its session keep speculative at once, or None for unlimited (private
+        backends).  The engine caps its peek depth here; on a
+        :class:`SharedBackend` this is the tenant's weighted-fair share."""
+        return None
+
+    def note_demand(self) -> None:
+        """Hint: the session is about to serve a request synchronously (a
+        *demand* operation).  Shared backends use it to shed speculative
+        queue pressure; private backends ignore it."""
+
     def shutdown(self) -> None:
         pass
 
@@ -88,9 +109,13 @@ class SyncBackend(Backend):
         self._prepared.append(req)
 
     def submit_all(self) -> int:
-        n = len(self._prepared)
-        self._prepared.clear()  # sync backend never runs anything early
-        return 0 if n else 0
+        # sync backend never runs anything early, but the prepared entries
+        # stay on the ledger so cancel_remaining() can mark the never-
+        # demanded ones cancelled — otherwise they end the session neither
+        # completed nor cancelled and the SessionStats ledger invariant
+        # (pre_issued == served_async + cancelled + wasted_completions)
+        # would not hold on this backend.
+        return 0
 
     def wait(self, req: IORequest):
         self.device.charge_crossing()
@@ -98,7 +123,10 @@ class SyncBackend(Backend):
         return req.wait_result()
 
     def cancel_remaining(self) -> int:
-        n = len(self._prepared)
+        n = 0
+        for req in self._prepared:
+            if req.cancel():
+                n += 1
         self._prepared.clear()
         return n
 
@@ -107,11 +135,21 @@ class SyncBackend(Backend):
 
 
 class _WorkerPool:
-    """Shared worker-pool machinery (the 'io_workqueue')."""
+    """Shared worker-pool machinery (the 'io_workqueue').
+
+    The queue is priority-ordered (FIFO within a priority level via the
+    sequence counter): a multi-tenant backend stamps requests with their
+    tenant's priority class, so a hot tenant's chains never wait behind a
+    cold tenant's queued speculation.  Single-tenant backends leave every
+    request at priority 0 — plain FIFO, as before.
+    """
+
+    _SHUTDOWN_PRIORITY = -(1 << 30)  # drains after all real work
 
     def __init__(self, device: Device, workers: int):
         self.device = device
-        self._q: "queue.Queue[Optional[List[IORequest]]]" = queue.Queue()
+        self._q: "queue.PriorityQueue" = queue.PriorityQueue()
+        self._seq = 0
         self._inflight = 0
         self._lock = threading.Lock()
         self._idle = threading.Condition(self._lock)
@@ -126,18 +164,29 @@ class _WorkerPool:
     def push_chain(self, chain: List[IORequest]) -> None:
         with self._lock:
             self._inflight += 1
-        self._q.put(chain)
+            seq = self._seq
+            self._seq += 1
+        self._q.put((-chain[0].priority, seq, chain))
+
+    def _push_sentinel(self) -> None:
+        with self._lock:
+            seq = self._seq
+            self._seq += 1
+        self._q.put((-self._SHUTDOWN_PRIORITY, seq, None))
 
     def _run(self) -> None:
         while True:
-            chain = self._q.get()
+            _prio, _seq, chain = self._q.get()
             if chain is None:
                 return
             try:
                 for req in chain:
-                    if req.state is ReqState.CANCELLED:
+                    # atomically claim the request; a failed claim means it
+                    # was cancelled (early exit / scheduler eviction) or
+                    # served inline by a demand promotion — executing it here
+                    # would double a side effect.
+                    if not req.claim():
                         continue
-                    req.state = ReqState.SUBMITTED
                     try:
                         req.finish(execute(self.device, req.sc, req.args))
                     except BaseException as e:  # propagate to the waiter
@@ -162,7 +211,7 @@ class _WorkerPool:
             return
         self._shutdown = True
         for _ in self._threads:
-            self._q.put(None)
+            self._push_sentinel()
         for t in self._threads:
             t.join(timeout=5)
 
@@ -192,14 +241,21 @@ class _AsyncBackend(Backend):
         super().__init__(device)
         self._sq: List[IORequest] = []
         self._submitted: List[IORequest] = []
+        # guards both queues: inflight()/drain() rebuild the _submitted ledger
+        # and submit_all() swaps _sq — unguarded, concurrent sessions sharing
+        # this backend lose ledger entries (requests that then never get
+        # cancelled or drained).
+        self._ledger_lock = threading.Lock()
 
     def inflight(self) -> int:
         # prune completed entries while counting, keeping the ledger short
-        self._submitted = [r for r in self._submitted if not r.done.is_set()]
-        return len(self._submitted)
+        with self._ledger_lock:
+            self._submitted = [r for r in self._submitted if not r.done.is_set()]
+            return len(self._submitted)
 
     def prepare(self, req: IORequest) -> None:
-        self._sq.append(req)
+        with self._ledger_lock:
+            self._sq.append(req)
 
     def _dispatch(self, batch: List[IORequest]) -> None:
         raise NotImplementedError
@@ -208,23 +264,39 @@ class _AsyncBackend(Backend):
         raise NotImplementedError
 
     def submit_all(self) -> int:
-        if not self._sq:
-            return 0
-        batch, self._sq = self._sq, []
+        with self._ledger_lock:
+            if not self._sq:
+                return 0
+            batch, self._sq = self._sq, []
         self._dispatch(batch)
-        self._submitted.extend(batch)
+        with self._ledger_lock:
+            self._submitted.extend(batch)
+        return len(batch)
+
+    def submit_batch(self, batch: List[IORequest]) -> int:
+        """Dispatch a pre-formed batch, bypassing this backend's own
+        submission queue.  :class:`SharedBackend` views stage their entries
+        privately and submit through here, so concurrent tenants can never
+        interleave entries into each other's link chains."""
+        if not batch:
+            return 0
+        self._dispatch(batch)
+        with self._ledger_lock:
+            self._submitted.extend(batch)
         return len(batch)
 
     def wait(self, req: IORequest):
         return req.wait_result()
 
     def cancel_remaining(self) -> int:
+        with self._ledger_lock:
+            pending, self._sq = self._sq, []
+            submitted = list(self._submitted)
         n = 0
-        for req in self._sq:
+        for req in pending:
             if req.cancel():
                 n += 1
-        self._sq.clear()
-        for req in self._submitted:
+        for req in submitted:
             if req.cancel():
                 n += 1
         return n
@@ -232,7 +304,8 @@ class _AsyncBackend(Backend):
     def drain(self) -> None:
         for pool in self._pools():
             pool.drain()
-        self._submitted = [r for r in self._submitted if not r.done.is_set()]
+        with self._ledger_lock:
+            self._submitted = [r for r in self._submitted if not r.done.is_set()]
 
     def shutdown(self) -> None:
         for pool in self._pools():
@@ -330,6 +403,368 @@ class MultiQueueBackend(_AsyncBackend):
             dev.stats.crossing()  # keep the aggregate view consistent
         for qi, chain in routed:
             self._queue_pools[qi].push_chain(chain)
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant shared-backend scheduling
+# ---------------------------------------------------------------------------
+#: priority classes, ordered: higher value preempts lower-value speculation
+PRIORITIES = {"low": 0, "normal": 1, "high": 2}
+
+
+def resolve_priority(priority) -> int:
+    if isinstance(priority, str):
+        return PRIORITIES[priority]
+    return int(priority)
+
+
+class _TenantState:
+    """Scheduler-side view of one tenant: its weight/priority and the ledger
+    of speculative requests it currently holds slots for."""
+
+    __slots__ = ("name", "weight", "priority", "views", "spec")
+
+    def __init__(self, name: str, weight: float, priority: int):
+        self.name = name
+        self.weight = weight
+        self.priority = priority
+        self.views: set = set()
+        # (request, owning view) — admitted speculation; demanded entries are
+        # removed, so everything here is fair game for pressure eviction
+        self.spec: List[Tuple[IORequest, "SharedBackend"]] = []
+
+    def prune(self) -> None:
+        self.spec = [(r, v) for (r, v) in self.spec if not r.done.is_set()]
+
+
+class SlotScheduler:
+    """Weighted-fair arbitration of one backend's submission slots.
+
+    A *slot* is one speculative request in flight on the shared backend.
+    Each tenant's share is ``capacity * weight / sum(active weights)``
+    (at least 1); admission is per link chain (chains never split) and is
+    denied once the tenant is at its share or the backend at capacity —
+    denied chains stay staged in the tenant's view until capacity frees or
+    the frontier *demands* them, at which point they bypass the budget
+    entirely.  Under pressure, :meth:`make_room` cancels speculative-only
+    requests that have not started executing, lowest priority class first,
+    most-over-share tenant first, newest request first (LIFO wastes the
+    least already-paid queue time).  Total speculative occupancy therefore
+    never exceeds ``capacity``: a demand request can never wait behind more
+    than ``capacity`` speculative ones.
+    """
+
+    def __init__(self, capacity: int):
+        self.capacity = max(1, int(capacity))
+        self._lock = threading.Lock()
+        self._tenants: Dict[str, _TenantState] = {}
+        # observability (tests + bench report)
+        self.max_spec_inflight = 0
+        self.admitted = 0
+        self.deferred = 0
+        self.evictions = 0
+        self.demand_promotions = 0
+
+    # -- tenant lifecycle ---------------------------------------------------
+    def attach(self, view: "SharedBackend") -> None:
+        with self._lock:
+            t = self._tenants.get(view.tenant)
+            if t is None:
+                t = _TenantState(view.tenant, view.weight, view.priority)
+                self._tenants[view.tenant] = t
+            else:
+                # latest activation's weight/priority wins for the tenant
+                t.weight = view.weight
+                t.priority = view.priority
+            t.views.add(view)
+
+    def detach(self, view: "SharedBackend") -> None:
+        with self._lock:
+            t = self._tenants.get(view.tenant)
+            if t is None:
+                return
+            t.views.discard(view)
+            t.prune()
+            if not t.views and not t.spec:
+                del self._tenants[view.tenant]
+
+    # -- shares -------------------------------------------------------------
+    def _share(self, name: str) -> int:
+        t = self._tenants.get(name)
+        if t is None:
+            return self.capacity
+        active_w = sum(s.weight for s in self._tenants.values() if s.views)
+        active_w = max(active_w, t.weight, 1e-9)
+        return max(1, int(self.capacity * t.weight / active_w))
+
+    def fair_share(self, tenant: str) -> int:
+        with self._lock:
+            return self._share(tenant)
+
+    def _total_spec(self) -> int:
+        return sum(len(t.spec) for t in self._tenants.values())
+
+    # -- admission ----------------------------------------------------------
+    def admit(self, view: "SharedBackend",
+              chains: List[List[IORequest]]) -> Tuple[List[List[IORequest]],
+                                                      List[List[IORequest]]]:
+        """Partition ``chains`` into (admitted, deferred).  Whole chains
+        only; an over-length chain is still admitted when the tenant holds
+        no slots at all (a tenant is never locked out of speculation
+        entirely by a share smaller than its shortest chain)."""
+        with self._lock:
+            for t in self._tenants.values():
+                t.prune()
+            ten = self._tenants.get(view.tenant)
+            if ten is None:  # detached view: nothing speculates anymore
+                return [], chains
+            share = self._share(view.tenant)
+            total = self._total_spec()
+            admitted: List[List[IORequest]] = []
+            deferred: List[List[IORequest]] = []
+            for chain in chains:
+                n = len(chain)
+                fits_share = len(ten.spec) + n <= share or not ten.spec
+                if fits_share and total + n <= self.capacity:
+                    ten.spec.extend((r, view) for r in chain)
+                    total += n
+                    admitted.append(chain)
+                    self.admitted += n
+                else:
+                    deferred.append(chain)
+                    # count each chain's first denial only: deferred chains
+                    # are re-offered on every wait/flush, and counting the
+                    # retries would inflate the metric by orders of magnitude
+                    if not getattr(chain[0], "_defer_counted", False):
+                        chain[0]._defer_counted = True
+                        self.deferred += n
+            self.max_spec_inflight = max(self.max_spec_inflight, total)
+            return admitted, deferred
+
+    # -- demand -------------------------------------------------------------
+    def note_demanded(self, view: "SharedBackend", req: IORequest) -> None:
+        """A speculative request just became demanded (the frontier reached
+        it): it no longer counts against anyone's budget and must never be
+        evicted."""
+        with self._lock:
+            t = self._tenants.get(view.tenant)
+            if t is not None:
+                t.spec = [(r, v) for (r, v) in t.spec if r is not req]
+
+    def make_room(self, need: int = 1) -> int:
+        """Pressure-triggered cancellation: free ``need`` slots for demand
+        I/O by cancelling speculative requests that have not started
+        executing.  Victim order: priority class ascending, occupancy/share
+        ratio descending, newest request first.  Returns #evicted."""
+        evicted = 0
+        with self._lock:
+            for t in self._tenants.values():
+                t.prune()
+            while self._total_spec() + need > self.capacity:
+                victims = [
+                    t for t in self._tenants.values()
+                    if any(r.state is ReqState.PREPARED for (r, _v) in t.spec)
+                ]
+                if not victims:
+                    break
+                victims.sort(key=lambda t: (
+                    t.priority, -len(t.spec) / self._share(t.name)))
+                t = victims[0]
+                done = False
+                for i in range(len(t.spec) - 1, -1, -1):
+                    req, _view = t.spec[i]
+                    if req.cancel():  # atomic: only if no worker claimed it
+                        t.spec.pop(i)
+                        self.evictions += 1
+                        evicted += 1
+                        done = True
+                        break
+                if not done:  # racing workers picked everything up
+                    break
+        return evicted
+
+    def note_promotion(self) -> None:
+        with self._lock:
+            self.demand_promotions += 1
+
+    def snapshot(self) -> Dict[str, int]:
+        with self._lock:
+            return {
+                "capacity": self.capacity,
+                "tenants": len(self._tenants),
+                "spec_inflight": self._total_spec(),
+                "max_spec_inflight": self.max_spec_inflight,
+                "admitted": self.admitted,
+                "deferred": self.deferred,
+                "evictions": self.evictions,
+                "demand_promotions": self.demand_promotions,
+            }
+
+
+class SharedBackend(Backend):
+    """One session's lease on a shared async backend.
+
+    Implements the engine-facing ``Backend`` surface, but every submission
+    passes through the :class:`SlotScheduler`: prepared entries stage in a
+    per-view queue, ``submit_all`` asks for slots chain-by-chain, and chains
+    the scheduler defers stay staged until capacity frees or the frontier
+    demands one of their requests — ``wait`` then *promotes* the chain past
+    the budget (demand beats speculation, always).  ``cancel_remaining`` and
+    ``drain`` are view-scoped: they touch only this session's requests, so
+    one tenant tearing down never cancels or blocks on another tenant's
+    work.
+    """
+
+    name = "shared"
+    is_view = True
+
+    def __init__(self, inner: _AsyncBackend, scheduler: SlotScheduler,
+                 tenant: str, weight: float = 1.0, priority=1):
+        super().__init__(inner.device)
+        self.inner = inner
+        self.scheduler = scheduler
+        self.tenant = tenant
+        self.weight = float(weight)
+        self.priority = resolve_priority(priority)
+        self._lock = threading.Lock()
+        self._sq: List[IORequest] = []  # prepared, not yet offered
+        self._deferred: List[List[IORequest]] = []  # offered, denied slots
+        self._submitted: List[IORequest] = []  # admitted or promoted
+        self._closed = False
+        scheduler.attach(self)
+
+    # the adaptive depth controller gates growth on capacity/inflight; for a
+    # view both are tenant-scoped: the fair share and this session's own
+    # speculative occupancy.
+    @property
+    def capacity(self) -> int:  # type: ignore[override]
+        return self.scheduler.fair_share(self.tenant)
+
+    def spec_budget(self) -> Optional[int]:
+        return self.scheduler.fair_share(self.tenant)
+
+    def inflight(self) -> int:
+        with self._lock:
+            self._submitted = [r for r in self._submitted if not r.done.is_set()]
+            return len(self._submitted) + sum(len(c) for c in self._deferred)
+
+    #: priority stamp for demand-promoted chains: above every priority
+    #: class, so promoted demand never queues behind anyone's speculation
+    DEMAND_BOOST = 1 << 20
+
+    def prepare(self, req: IORequest) -> None:
+        req.priority = self.priority  # tenant class orders the worker queue
+        with self._lock:
+            self._sq.append(req)
+
+    def submit_all(self) -> int:
+        with self._lock:
+            batch, self._sq = self._sq, []
+            if batch:
+                self._deferred.extend(_chains(batch))
+        return self._flush_deferred()
+
+    def _flush_deferred(self) -> int:
+        """Offer every staged chain to the scheduler and dispatch whatever
+        it admits; chains denied slots go back to the staging queue.  The
+        admitted set is dispatched as one flat batch — chain boundaries
+        survive concatenation (a chain's last request has link=False), so
+        this costs one crossing, like a private backend's submit_all."""
+        with self._lock:
+            chains, self._deferred = self._deferred, []
+        if not chains:
+            return 0
+        admitted, deferred = self.scheduler.admit(self, chains)
+        with self._lock:
+            self._deferred.extend(deferred)
+        if not admitted:
+            return 0
+        batch = [r for chain in admitted for r in chain]
+        n = self.inner.submit_batch(batch)
+        with self._lock:
+            self._submitted.extend(batch)
+        return n
+
+    def note_demand(self) -> None:
+        """The session is about to run a demand op synchronously: shed
+        speculative queue pressure so it is not stuck behind cold tenants'
+        speculation, then give own deferred chains a chance."""
+        self.scheduler.make_room(1)
+        self._flush_deferred()
+
+    def wait(self, req: IORequest):
+        promoted: Optional[List[IORequest]] = None
+        with self._lock:
+            for i, chain in enumerate(self._deferred):
+                if req in chain:
+                    promoted = self._deferred.pop(i)
+                    break
+        if promoted is None:
+            # completion frees slots: give deferred chains a chance before
+            # blocking, so the pipeline refills without waiting for the
+            # next prepare (otherwise a saturated tenant degenerates to
+            # demand-at-a-time serial execution)
+            self._flush_deferred()
+        if promoted is not None:
+            # demand promotion: bypass the speculation budget entirely —
+            # evict other tenants' queued speculation if the queue is full,
+            # and outrank every queued chain in the worker pool
+            for r in promoted:
+                r.priority = self.DEMAND_BOOST + self.priority
+            self.scheduler.make_room(len(promoted))
+            self.scheduler.note_promotion()
+            self.inner.submit_batch(promoted)
+            with self._lock:
+                self._submitted.extend(promoted)
+        else:
+            self.scheduler.note_demanded(self, req)
+        try:
+            return req.wait_result()
+        except RuntimeError:
+            if req.state is ReqState.CANCELLED and req.error is None:
+                # evicted between the engine's state check and this wait:
+                # serve it as demand inline.  Safe: eviction only cancels
+                # PREPARED requests and workers skip anything not PREPARED,
+                # so nobody else will ever execute it.
+                self.device.charge_crossing()
+                result = execute(self.device, req.sc, req.args)
+                req.finish(result)
+                return result
+            raise
+
+    def cancel_remaining(self) -> int:
+        with self._lock:
+            pending, self._sq = self._sq, []
+            for chain in self._deferred:
+                pending.extend(chain)
+            self._deferred = []
+            submitted = list(self._submitted)
+        n = 0
+        for req in pending:
+            if req.cancel():
+                n += 1
+        for req in submitted:
+            if req.cancel():
+                n += 1
+        return n
+
+    def drain(self) -> None:
+        # view-scoped: wait for this session's submitted requests only —
+        # never for other tenants' work on the shared pool.
+        with self._lock:
+            submitted = list(self._submitted)
+        for req in submitted:
+            req.done.wait()
+        with self._lock:
+            self._submitted = [r for r in self._submitted if not r.done.is_set()]
+
+    def shutdown(self) -> None:
+        """Release the lease (the inner backend is owned by the Foreactor
+        and outlives every view)."""
+        if self._closed:
+            return
+        self._closed = True
+        self.scheduler.detach(self)
 
 
 BACKENDS = {

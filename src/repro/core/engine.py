@@ -217,11 +217,17 @@ class SpecSession:
         depth: int = 8,
         strict: bool = True,
         controller: Optional[DepthController] = None,
+        tenant: Optional[str] = None,
     ):
         self.graph = graph
         self.ctx = ctx
         self.backend = backend
         self.device = device
+        # tenant identity: who this activation speculates on behalf of (the
+        # shared-backend scheduler arbitrates slots between tenants); private
+        # backends leave it None.
+        self.tenant = tenant if tenant is not None \
+            else getattr(backend, "tenant", None)
         self._fixed_depth = depth
         self.controller = controller
         self.strict = strict
@@ -239,10 +245,14 @@ class SpecSession:
     @property
     def depth(self) -> int:
         """Current speculation depth — fixed, or the adaptive controller's
-        live value (re-read at every peek, so depth changes mid-session)."""
-        if self.controller is not None:
-            return self.controller.depth
-        return self._fixed_depth
+        live value (re-read at every peek, so depth changes mid-session) —
+        capped by the backend's speculation-budget lease: on a shared
+        backend a session never peeks past its tenant's fair share of the
+        queue, so depth tuning and slot arbitration cannot fight."""
+        d = self.controller.depth if self.controller is not None \
+            else self._fixed_depth
+        lease = self.backend.spec_budget()
+        return d if lease is None else min(d, lease)
 
     # -- cursor movement ---------------------------------------------------
     @staticmethod
@@ -296,8 +306,12 @@ class SpecSession:
             cur, dist = self._follow(frontier.node.out, frontier.epochs, False), 0
         prefix = True  # still walking the contiguous issued prefix
         prepared_any = False
+        # snapshot once per peek: on a shared backend the depth property
+        # consults the scheduler (a global lock) for the tenant's lease —
+        # per-node re-evaluation would serialize every peeking thread on it
+        depth = self.depth
         try:
-            while dist < self.depth and cur.node is not None:
+            while dist < depth and cur.node is not None:
                 cur2 = self._resolve_branches(cur)
                 if cur2 is None:  # branch decision not ready: stop peeking
                     break
@@ -400,6 +414,9 @@ class SpecSession:
             self.stats.harvest_seconds += time.perf_counter() - t0
         else:
             t0 = time.perf_counter()
+            # demand I/O about to run synchronously: let a shared backend
+            # shed speculative queue pressure first (no-op on private ones)
+            self.backend.note_demand()
             self.device.charge_crossing()
             result = execute(self.device, sc, args)
             blocked = time.perf_counter() - t0
@@ -441,14 +458,25 @@ class SpecSession:
             return self.stats
         self._finished = True
         try:
-            self.stats.cancelled += self.backend.cancel_remaining()
+            self.backend.cancel_remaining()
         finally:
             try:
                 self.backend.drain()
             finally:
+                # Account every pre-issued request from this session's own
+                # node-state ledger, not from the backend's return value: on
+                # a shared backend the scheduler may have evicted requests
+                # mid-session, and a failed link head cancels its chain's
+                # dependents on the worker — both must land in ``cancelled``
+                # exactly once for the invariant
+                #   pre_issued == served_async + cancelled + wasted_completions
+                # to hold (tests/test_conformance.py checks it everywhere).
                 for st in self._state.values():
-                    if st.issued and not st.harvested and st.req is not None \
-                            and st.req.state is ReqState.COMPLETED:
+                    if not st.issued or st.req is None:
+                        continue
+                    if st.req.state is ReqState.CANCELLED:
+                        self.stats.cancelled += 1
+                    elif st.req.state is ReqState.COMPLETED and not st.harvested:
                         self.stats.wasted_completions += 1
                 if self.controller is not None:
                     self.controller.on_finish(

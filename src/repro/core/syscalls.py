@@ -109,10 +109,21 @@ class IORequest:
     args: Tuple[Any, ...]
     link: bool = False
     tag: Any = None  # (node id, epoch) — used by the engine to find it again
+    #: dispatch priority (io_uring's IOSQE ioprio analogue): worker pools
+    #: run higher values first; shared-backend views stamp their tenant's
+    #: priority class here, demand promotions outrank all speculation
+    priority: int = 0
     state: ReqState = ReqState.PREPARED
     result: Any = None
     error: Optional[BaseException] = None
     done: threading.Event = field(default_factory=threading.Event, repr=False)
+    # serializes the PREPARED -> {SUBMITTED, CANCELLED} transition: a worker
+    # claiming the request and a canceller (early exit, scheduler eviction)
+    # race on the same check-then-act, and whoever loses must see the other's
+    # state — otherwise a cancelled request could still execute (or execute
+    # twice via the demand-promotion fallback).
+    _claim_lock: threading.Lock = field(default_factory=threading.Lock,
+                                        repr=False)
 
     def finish(self, result: Any = None, error: Optional[BaseException] = None) -> None:
         self.result = result
@@ -120,12 +131,22 @@ class IORequest:
         self.state = ReqState.COMPLETED
         self.done.set()
 
+    def claim(self) -> bool:
+        """Atomically take PREPARED -> SUBMITTED (a worker about to execute
+        it); False means it was already claimed, cancelled, or completed."""
+        with self._claim_lock:
+            if self.state is ReqState.PREPARED:
+                self.state = ReqState.SUBMITTED
+                return True
+            return False
+
     def cancel(self) -> bool:
-        if self.state is ReqState.PREPARED:
-            self.state = ReqState.CANCELLED
-            self.done.set()
-            return True
-        return False
+        with self._claim_lock:
+            if self.state is ReqState.PREPARED:
+                self.state = ReqState.CANCELLED
+                self.done.set()
+                return True
+            return False
 
     def wait_result(self):
         self.done.wait()

@@ -1,0 +1,252 @@
+"""Backend-conformance suite.
+
+Randomized graph programs — mixed pread/fstat/getdents chains with random
+early exits, plus guaranteed-write and linked copy programs — executed under
+every backend ({sync, user_threads, io_uring, multi_queue, shared-scheduler})
+× speculation depth ({0, 1, adaptive}) must be *byte-identical* to the same
+program run on ``SyncBackend``, and every session must satisfy the ledger
+invariant::
+
+    pre_issued == served_async + cancelled + wasted_completions
+
+i.e. every pre-issued request is accounted exactly once: harvested by the
+frontier, cancelled before execution, or drained to completion and wasted.
+"""
+
+import random
+
+import pytest
+from _hypothesis_support import HAS_HYPOTHESIS, given, settings, st
+
+from repro.core import (Foreactor, GraphBuilder, MemDevice, ShardedDevice,
+                        Sys, io)
+from repro.core.patterns import (build_copy_extents_graph,
+                                 build_pwrite_extents_graph)
+
+N_FILES = 10
+FILE_SIZE = 96
+
+
+def file_bytes(i: int) -> bytes:
+    return bytes((i * 7 + j) % 251 for j in range(FILE_SIZE))
+
+
+def make_device(kind: str):
+    dev = ShardedDevice([MemDevice() for _ in range(3)]) if kind == "sharded" \
+        else MemDevice()
+    for i in range(N_FILES):
+        fd = dev.open(f"/c/f{i}", "w")
+        dev.pwrite(fd, file_bytes(i), 0)
+        dev.close(fd)
+    return dev
+
+
+# -- random read programs -----------------------------------------------------
+# A program is a list of pure steps plus an exit point (the early return that
+# weak edges model): ("pread", file, size, offset) | ("fstat", file) |
+# ("getdents",).
+
+def random_program(rng: random.Random, length: int):
+    steps = []
+    for _ in range(length):
+        r = rng.random()
+        if r < 0.7:
+            off = rng.randrange(0, FILE_SIZE - 8)
+            steps.append(("pread", rng.randrange(N_FILES),
+                          rng.randrange(1, FILE_SIZE - off), off))
+        elif r < 0.9:
+            steps.append(("fstat", rng.randrange(N_FILES)))
+        else:
+            steps.append(("getdents",))
+    exit_at = rng.randint(1, length)  # stop after this many steps
+    return steps, exit_at
+
+
+def build_chain_graph(name: str, steps):
+    """One syscall node per step, every edge weak (the caller may return
+    after any step — all steps are pure, so still fully pre-issuable)."""
+    b = GraphBuilder(name)
+    prev = None
+    for idx, step in enumerate(steps):
+        node = f"s{idx}"
+        if step[0] == "pread":
+            def args(ctx, ep, step=step):
+                return ((ctx["fds"][step[1]], step[2], step[3]), False)
+            b.AddSyscallNode(node, Sys.PREAD, args)
+        elif step[0] == "fstat":
+            def args(ctx, ep, step=step):
+                return ((f"/c/f{step[1]}",), False)
+            b.AddSyscallNode(node, Sys.FSTATAT, args)
+        else:
+            b.AddSyscallNode(node, Sys.GETDENTS,
+                             lambda ctx, ep: (("/c",), False))
+        if prev is not None:
+            b.SyscallSetNext(prev, node, weak=True)
+        prev = node
+    b.SyscallSetNext(prev, None, weak=True)
+    return b.Build()
+
+
+def run_program(dev, steps, exit_at, fa_kwargs, depth):
+    """Execute a read program under a fresh Foreactor; returns (results,
+    stats) where results is a canonical list (bytes / sizes / name lists)."""
+    fa = Foreactor(device=dev, depth=depth, **fa_kwargs)
+    fa.register("prog", lambda: build_chain_graph("prog", steps))
+    fds = [dev.open(f"/c/f{i}", "r") for i in range(N_FILES)]
+
+    @fa.wrap("prog", lambda: {"fds": fds})
+    def prog():
+        out = []
+        for step in steps[:exit_at]:
+            if step[0] == "pread":
+                out.append(io.pread(dev, fds[step[1]], step[2], step[3]))
+            elif step[0] == "fstat":
+                out.append(io.fstatat(dev, f"/c/f{step[1]}").st_size)
+            else:
+                out.append(tuple(io.getdents(dev, "/c")))
+        return out
+
+    try:
+        result = prog()
+    finally:
+        stats = fa.total_stats
+        fa.shutdown()
+    return result, stats
+
+
+def assert_ledger_invariant(stats):
+    assert stats.pre_issued == (stats.served_async + stats.cancelled
+                                + stats.wasted_completions), vars(stats)
+
+
+CONFIGS = [
+    ("sync", "flat", dict(backend="sync")),
+    ("user_threads", "flat", dict(backend="user_threads", workers=4)),
+    ("io_uring", "flat", dict(backend="io_uring", workers=4)),
+    ("multi_queue", "sharded", dict(backend="multi_queue", workers=2)),
+    ("shared", "flat", dict(backend="io_uring", workers=4, shared=True)),
+]
+DEPTHS = [0, 1, "adaptive"]
+
+_rng = random.Random(20260730)
+PROGRAMS = [random_program(_rng, length) for length in (6, 12, 12, 18)]
+# pin degenerate exits: immediate return and full run
+PROGRAMS[1] = (PROGRAMS[1][0], 1)
+PROGRAMS[2] = (PROGRAMS[2][0], len(PROGRAMS[2][0]))
+
+
+@pytest.mark.parametrize("depth", DEPTHS)
+@pytest.mark.parametrize("cfg", CONFIGS, ids=[c[0] for c in CONFIGS])
+@pytest.mark.parametrize("prog_idx", range(len(PROGRAMS)))
+def test_read_program_conformance(cfg, depth, prog_idx):
+    _name, kind, kwargs = cfg
+    steps, exit_at = PROGRAMS[prog_idx]
+    reference, ref_stats = run_program(make_device(kind), steps, exit_at,
+                                       dict(backend="sync"), 0)
+    result, stats = run_program(make_device(kind), steps, exit_at,
+                                kwargs, depth)
+    assert result == reference
+    assert_ledger_invariant(stats)
+    assert_ledger_invariant(ref_stats)
+
+
+# -- guaranteed writes --------------------------------------------------------
+
+def run_write_program(dev, fa_kwargs, depth):
+    fa = Foreactor(device=dev, depth=depth, **fa_kwargs)
+    fa.register("writes", build_pwrite_extents_graph)
+    fd = dev.open("/c/out.bin", "w")
+    chunks = [bytes([i + 1]) * 24 for i in range(10)]
+    writes = [(fd, chunks[i], i * 24) for i in range(len(chunks))]
+
+    @fa.wrap("writes", lambda: {"writes": writes})
+    def writer():
+        for wfd, data, off in writes:
+            io.pwrite(dev, wfd, data, off)
+        io.fsync(dev, fd)
+
+    try:
+        writer()
+    finally:
+        stats = fa.total_stats
+        fa.shutdown()
+    rfd = dev.open("/c/out.bin", "r")
+    content = dev.pread(rfd, 24 * len(chunks), 0)
+    dev.close(rfd)
+    dev.close(fd)
+    return content, stats
+
+
+@pytest.mark.parametrize("depth", [1, 8, "adaptive"])
+@pytest.mark.parametrize("cfg", CONFIGS, ids=[c[0] for c in CONFIGS])
+def test_write_program_conformance(cfg, depth):
+    _name, kind, kwargs = cfg
+    reference, _ = run_write_program(make_device(kind), dict(backend="sync"), 0)
+    content, stats = run_write_program(make_device(kind), kwargs, depth)
+    assert content == reference
+    assert_ledger_invariant(stats)
+
+
+# -- linked copy (FromRequest plumbing) --------------------------------------
+
+def run_copy_program(dev, fa_kwargs, depth):
+    fa = Foreactor(device=dev, depth=depth, **fa_kwargs)
+    fa.register("cp", build_copy_extents_graph)
+    sfd = dev.open("/c/f0", "r")
+    dfd = dev.open("/c/copy.bin", "w")
+    pairs = [(sfd, dfd, 16, i * 16) for i in range(FILE_SIZE // 16)]
+
+    @fa.wrap("cp", lambda: {"pairs": pairs})
+    def copy():
+        for s, d, size, off in pairs:
+            data = io.pread(dev, s, size, off)
+            io.pwrite(dev, d, data, off)
+
+    try:
+        copy()
+    finally:
+        stats = fa.total_stats
+        fa.shutdown()
+    rfd = dev.open("/c/copy.bin", "r")
+    content = dev.pread(rfd, FILE_SIZE, 0)
+    dev.close(rfd)
+    return content, stats
+
+
+@pytest.mark.parametrize("depth", [1, 8, "adaptive"])
+@pytest.mark.parametrize("cfg", CONFIGS, ids=[c[0] for c in CONFIGS])
+def test_copy_program_conformance(cfg, depth):
+    _name, kind, kwargs = cfg
+    content, stats = run_copy_program(make_device(kind), kwargs, depth)
+    assert content == file_bytes(0)
+    assert_ledger_invariant(stats)
+
+
+# -- property-based sweep (hypothesis) ---------------------------------------
+
+if HAS_HYPOTHESIS:
+    _program_strategy = st.integers(min_value=0, max_value=2 ** 31)
+else:  # the stub accepts anything; the test body will be skipped
+    _program_strategy = st.integers()
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=_program_strategy)
+def test_random_programs_match_sync(seed):
+    """Hypothesis sweep: arbitrary read programs under the deepest-stack
+    configs (shared scheduler + multi-queue, adaptive depth) match sync."""
+    rng = random.Random(seed)
+    steps, exit_at = random_program(rng, rng.randint(2, 16))
+    reference, _ = run_program(make_device("flat"), steps, exit_at,
+                               dict(backend="sync"), 0)
+    for kind, kwargs in (
+        ("flat", dict(backend="io_uring", workers=4, shared=True)),
+        ("sharded", dict(backend="multi_queue", workers=2)),
+    ):
+        ref = reference if kind == "flat" else \
+            run_program(make_device(kind), steps, exit_at,
+                        dict(backend="sync"), 0)[0]
+        result, stats = run_program(make_device(kind), steps, exit_at,
+                                    kwargs, "adaptive")
+        assert result == ref
+        assert_ledger_invariant(stats)

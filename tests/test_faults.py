@@ -1,0 +1,249 @@
+"""Fault-injection tests for the speculation engine and backends.
+
+Faults are keyed by *request identity* (offset / path), never by call
+order — speculation reorders execution, so order-keyed injection would be
+nondeterministic.  Covered:
+
+* a worker raising EIO on a link-chain head cancels the chain's dependents
+  exactly once and never executes the dependent write;
+* a compute-args stub raising mid-peek leaves prepared-but-unsubmitted
+  writes in the submission queue, where teardown cancels them before they
+  ever touch the device;
+* short reads propagate byte-identically to synchronous execution;
+* on a shared backend, one tenant's fault never leaks into another
+  tenant's session.
+"""
+
+import errno
+import threading
+
+import pytest
+
+from repro.core import Foreactor, GraphBuilder, MemDevice, Sys, io
+from repro.core.device import Device
+from repro.core.patterns import (build_copy_extents_graph,
+                                 build_pread_extents_graph)
+from repro.core.syscalls import ReqState
+
+
+class FaultyDevice(Device):
+    """Delegating device that injects deterministic faults:
+
+    * ``eio_offsets`` — any pread at one of these offsets raises EIO;
+    * ``short_offsets`` — any pread at one of these offsets returns half
+      the requested bytes.
+    """
+
+    def __init__(self, inner: Device):
+        self.inner = inner
+        self.stats = inner.stats
+        self.eio_offsets = set()
+        self.short_offsets = set()
+
+    def open(self, path, flags="r"):
+        return self.inner.open(path, flags)
+
+    def close(self, fd):
+        return self.inner.close(fd)
+
+    def pread(self, fd, size, offset):
+        if offset in self.eio_offsets:
+            raise OSError(errno.EIO, f"injected EIO at offset {offset}")
+        data = self.inner.pread(fd, size, offset)
+        if offset in self.short_offsets:
+            return data[: max(1, size // 2)]
+        return data
+
+    def pwrite(self, fd, data, offset):
+        return self.inner.pwrite(fd, data, offset)
+
+    def fstatat(self, path):
+        return self.inner.fstatat(path)
+
+    def getdents(self, path):
+        return self.inner.getdents(path)
+
+    def fsync(self, fd):
+        return self.inner.fsync(fd)
+
+
+def make_faulty(n_blocks: int = 8, block: int = 32):
+    inner = MemDevice()
+    fd = inner.open("/src.bin", "w")
+    # layout: block i is bytes [i*block, (i+1)*block), filled with i+1
+    payload = b"".join(bytes([i + 1]) * block for i in range(n_blocks))
+    inner.pwrite(fd, payload, 0)
+    inner.close(fd)
+    return FaultyDevice(inner), payload
+
+
+BLOCK = 32
+FAIL_AT = 3  # chain index whose pread raises
+
+
+@pytest.mark.parametrize("backend", ["io_uring", "user_threads"])
+def test_eio_mid_link_chain_cancels_dependent_exactly_once(backend):
+    """Fig. 4b copy chains: pread #3 raises EIO on the worker; its linked
+    pwrite must be cancelled exactly once and never executed, while the
+    error surfaces at the frontier and the ledger invariant still holds."""
+    dev, payload = make_faulty()
+    dev.eio_offsets = {FAIL_AT * BLOCK}
+    fa = Foreactor(device=dev, backend=backend, depth=16)
+    fa.register("cp", build_copy_extents_graph)
+    sfd = dev.open("/src.bin", "r")
+    dfd = dev.open("/dst.bin", "w")
+    pairs = [(sfd, dfd, BLOCK, i * BLOCK) for i in range(8)]
+
+    sess = fa.activate("cp", {"pairs": pairs})
+    with pytest.raises(OSError) as exc:
+        try:
+            for s, d, size, off in pairs:
+                data = io.pread(dev, s, size, off)
+                io.pwrite(dev, d, data, off)
+        finally:
+            stats = fa.deactivate(sess)
+    assert exc.value.errno == errno.EIO
+
+    # the dependent pwrite of the failed chain was cancelled, exactly once
+    st = sess._state[("pwrite", (FAIL_AT,))]
+    assert st.req is not None and st.req.state is ReqState.CANCELLED
+    assert not st.harvested
+    # and it never touched the device: block FAIL_AT of dst is unwritten
+    rfd = dev.open("/dst.bin", "r")
+    dst = dev.pread(rfd, BLOCK * 8, 0)
+    assert dst[FAIL_AT * BLOCK : (FAIL_AT + 1) * BLOCK].strip(b"\x00") == b""
+    # chains before the failure did copy
+    assert dst[:BLOCK] == payload[:BLOCK]
+    assert stats.pre_issued == (stats.served_async + stats.cancelled
+                                + stats.wasted_completions), vars(stats)
+    assert stats.cancelled >= 1
+    # idempotent finish: re-running it must not double-count the cancel
+    before = (stats.cancelled, stats.wasted_completions)
+    sess.finish()
+    assert (sess.stats.cancelled, sess.stats.wasted_completions) == before
+    fa.shutdown()
+
+
+def test_stub_error_never_executes_prepared_unsubmitted_write():
+    """A ComputeArgs stub raising mid-peek aborts the batch before
+    submit_all: entries already prepared stay in the submission queue and
+    teardown cancels them — no write may reach the device (§3.3: a non-pure
+    request is only guaranteed while the function keeps running)."""
+    dev = MemDevice()
+    fd = dev.open("/out.bin", "w")
+    chunks = [bytes([i + 1]) * 16 for i in range(8)]
+
+    def build():
+        b = GraphBuilder("wl")
+
+        def args(ctx, ep):
+            if ep[0] == 2:
+                raise RuntimeError("stub blew up computing epoch 2")
+            if ep[0] >= len(chunks):
+                return None
+            return ((fd, chunks[ep[0]], ep[0] * 16), False)
+
+        b.AddSyscallNode("pwrite", Sys.PWRITE, args)
+        b.AddBranchingNode("more",
+                           lambda ctx, ep: 0 if ep[0] + 1 < len(chunks) else 1)
+        b.SyscallSetNext("pwrite", "more")
+        b.BranchAppendChild("more", "pwrite", loopback=True)
+        b.BranchAppendChild("more", None)
+        return b.Build()
+
+    fa = Foreactor(device=dev, backend="io_uring", depth=8)
+    fa.register("wl", build)
+
+    @fa.wrap("wl", lambda: {})
+    def writer():
+        for i, c in enumerate(chunks):
+            io.pwrite(dev, fd, c, i * 16)
+
+    with pytest.raises(RuntimeError, match="epoch 2"):
+        writer()
+    fa.shutdown()
+    # the stub raised during the very first intercept's peek, before the
+    # frontier was served: nothing — demanded or speculative — may have
+    # executed, even though epoch 1 was already prepared.
+    assert dev.stats.write_bytes == 0
+    assert dev.fstatat("/out.bin").st_size == 0
+    s = fa.total_stats
+    assert s.cancelled == s.pre_issued > 0
+    assert s.pre_issued == s.served_async + s.cancelled + s.wasted_completions
+
+
+@pytest.mark.parametrize("shared", [False, True])
+def test_short_read_conforms_to_sync(shared):
+    """A device returning short reads must yield byte-identical results
+    under speculation and under synchronous execution."""
+    def run(fa_kwargs, depth):
+        dev, _payload = make_faulty()
+        dev.short_offsets = {2 * BLOCK, 5 * BLOCK}
+        fa = Foreactor(device=dev, depth=depth, **fa_kwargs)
+        fa.register("scan", lambda: build_pread_extents_graph("scan", weak=True))
+        fd = dev.open("/src.bin", "r")
+        extents = [(fd, BLOCK, i * BLOCK) for i in range(8)]
+
+        @fa.wrap("scan", lambda: {"extents": extents})
+        def scan():
+            return [io.pread(dev, f, n, off) for f, n, off in extents]
+
+        out = scan()
+        fa.shutdown()
+        return out
+
+    reference = run(dict(backend="sync"), 0)
+    assert len(reference[2]) == BLOCK // 2  # the injection really fired
+    speculated = run(dict(backend="io_uring", workers=4, shared=shared), 8)
+    assert speculated == reference
+
+
+def test_fault_never_leaks_across_tenants_on_shared_backend():
+    """Tenant A's EIO must surface only in A's sessions; tenant B sharing
+    the same backend keeps getting correct bytes, and the shared pool is
+    empty once both finish."""
+    dev, payload = make_faulty()
+    dev.eio_offsets = {6 * BLOCK}  # only tenant A reads this offset
+    fa = Foreactor(device=dev, backend="io_uring", depth=8, workers=4,
+                   shared=True)
+    fa.register("scan", lambda: build_pread_extents_graph("scan", weak=True))
+    fd_a = dev.open("/src.bin", "r")
+    fd_b = dev.open("/src.bin", "r")
+    ext_a = [(fd_a, BLOCK, i * BLOCK) for i in range(4, 8)]  # hits offset 6
+    ext_b = [(fd_b, BLOCK, i * BLOCK) for i in range(0, 4)]  # clean
+
+    results = {"a_errors": 0, "b": []}
+
+    def client_a():
+        with fa.tenant("A", priority="low"):
+            @fa.wrap("scan", lambda: {"extents": ext_a})
+            def scan():
+                return [io.pread(dev, f, n, off) for f, n, off in ext_a]
+            for _ in range(6):
+                try:
+                    scan()
+                except OSError as e:
+                    assert e.errno == errno.EIO
+                    results["a_errors"] += 1
+
+    def client_b():
+        with fa.tenant("B", priority="high"):
+            @fa.wrap("scan", lambda: {"extents": ext_b})
+            def scan():
+                return [io.pread(dev, f, n, off) for f, n, off in ext_b]
+            for _ in range(6):
+                results["b"].append(scan())
+
+    ta = threading.Thread(target=client_a)
+    tb = threading.Thread(target=client_b)
+    ta.start(); tb.start()
+    ta.join(timeout=30); tb.join(timeout=30)
+    assert not ta.is_alive() and not tb.is_alive(), "deadlock"
+
+    assert results["a_errors"] == 6  # every A call hit its own fault
+    expect_b = [payload[i * BLOCK : (i + 1) * BLOCK] for i in range(4)]
+    assert results["b"] == [expect_b] * 6  # B never saw A's failure
+    s = fa.total_stats
+    assert s.pre_issued == s.served_async + s.cancelled + s.wasted_completions
+    assert fa.shared_backend().inflight() == 0
+    fa.shutdown()
