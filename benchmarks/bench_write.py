@@ -1,0 +1,191 @@
+"""Write-path speculation: staged checkpoint saves, speculative shard
+writes, and write-behind checkpointing vs the serial write path.
+
+Until the undoable-write extension (docs/ARCHITECTURE.md, "Undoable write
+speculation"), the save path was the one storage-heavy consumer speculation
+could not touch: ``is_pure`` gated pwrite/creating-open behind weak edges,
+so every checkpoint op paid full device latency in sequence.  This section
+measures what lifting that restriction buys:
+
+* **save** — ``CheckpointManager.save`` (one staged write graph: creates,
+  extent writes, fsync/close barriers, marker last) across shard count ×
+  speculation depth, against the serial sync-backend baseline.  Headline:
+  ``save.speedup_4shards`` (best speculated vs serial at 4 shards), the
+  acceptance gate is >= 1.5x.
+* **record_shard** — ``repro.store.recordio.write_shard`` with a Foreactor
+  (one ``write_file`` graph) vs the serial append loop.
+* **write_behind** — a synthetic training loop (fixed compute per step,
+  checkpoint every k steps): serial inline saves vs ``save_async`` over the
+  speculated graph.  Measures wall time and the training-thread stall
+  (``Trainer``'s ``ckpt_wait_s`` equivalent).
+
+Results land in ``benchmarks/results/write.json`` (common.write_results
+conventions; table rendered into docs/BENCHMARKS.md by
+``tools/bench_report.py``).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core import DeviceProfile, Foreactor, MemDevice, SimulatedDevice
+from repro.store.recordio import write_shard
+
+from .common import Row, timeit_min, write_results
+
+SHARD_COUNTS = (1, 2, 4, 8)
+#: (label, backend, depth) — serial is the pre-staging write path
+MODES = (
+    ("serial", "sync", 0),
+    ("spec_d8", "io_uring", 8),
+    ("spec_d64", "io_uring", 64),
+    ("adaptive", "io_uring", "adaptive"),
+)
+
+#: ms-scale per-op latency so Python sleep granularity cannot blur the
+#: effect; 16 channels so a speculated batch actually overlaps
+WRITE_PROFILE = DeviceProfile(channels=16, base_latency=1.2e-3,
+                              metadata_latency=1.0e-3, per_byte=1.0e-9,
+                              crossing_cost=4e-6)
+
+CHUNK = 64 * 1024
+NUM_EXTENTS = 48  # 3 MiB tree -> 48 extent writes round-robined over shards
+
+
+def _tree() -> Dict[str, np.ndarray]:
+    return {"w": np.arange(CHUNK * NUM_EXTENTS // 4, dtype=np.float32)}
+
+
+def bench_save(repeats: int = 2) -> Dict[str, Dict]:
+    tree = _tree()
+    out: Dict[str, Dict] = {"config": {
+        "shard_counts": list(SHARD_COUNTS), "chunk_bytes": CHUNK,
+        "num_extents": NUM_EXTENTS,
+        "modes": [m[0] for m in MODES],
+    }}
+    for shards in SHARD_COUNTS:
+        for label, backend, depth in MODES:
+            dev = SimulatedDevice(MemDevice(), WRITE_PROFILE)
+            fa = Foreactor(device=dev, backend=backend, depth=depth,
+                           workers=16)
+            mgr = CheckpointManager(dev, "/ck", fa=fa, num_shards=shards,
+                                    chunk_bytes=CHUNK, keep=2)
+            step = [0]
+
+            def one_save():
+                step[0] += 1
+                mgr.save(step[0], tree)
+
+            t = timeit_min(one_save, repeats=repeats, warmup=1)
+            # committed state must be complete and restorable every time
+            restored, _ = mgr.restore(step[0], check_crc=True)
+            assert np.array_equal(restored["['w']"], tree["w"]), label
+            fa.shutdown()
+            out.setdefault(label, {})[str(shards)] = {
+                "seconds": t,
+                "mb_per_s": CHUNK * NUM_EXTENTS / t / 1e6,
+            }
+    best4 = min(out[m[0]]["4"]["seconds"] for m in MODES[1:])
+    out["speedup_4shards"] = out["serial"]["4"]["seconds"] / best4
+    out["speedup_8shards"] = (out["serial"]["8"]["seconds"]
+                              / min(out[m[0]]["8"]["seconds"]
+                                    for m in MODES[1:]))
+    return out
+
+
+def bench_record_shard(num_records: int = 64, record_bytes: int = 4096,
+                       repeats: int = 2) -> Dict[str, Dict]:
+    records = [bytes([i % 251]) * record_bytes for i in range(num_records)]
+    out: Dict[str, Dict] = {"config": {
+        "num_records": num_records, "record_bytes": record_bytes,
+    }}
+    for label, backend, depth in (("serial", "sync", 0),
+                                  ("spec", "io_uring", 128)):
+        dev = SimulatedDevice(MemDevice(), WRITE_PROFILE)
+        fa = Foreactor(device=dev, backend=backend, depth=depth, workers=16)
+        n = [0]
+
+        def one_shard():
+            n[0] += 1
+            write_shard(dev, f"/data/s{n[0]}.rio", records,
+                        fa=None if label == "serial" else fa)
+
+        t = timeit_min(one_shard, repeats=repeats, warmup=1)
+        fa.shutdown()
+        out[label] = {"seconds": t,
+                      "mb_per_s": num_records * record_bytes / t / 1e6}
+    out["speedup"] = out["serial"]["seconds"] / out["spec"]["seconds"]
+    return out
+
+
+def bench_write_behind(steps: int = 8, ckpt_every: int = 2,
+                       compute_s: float = 0.02) -> Dict[str, Dict]:
+    """The trainer's view: how much wall time does overlapping the
+    speculated save graph with step compute recover?"""
+    tree = _tree()
+    out: Dict[str, Dict] = {"config": {
+        "steps": steps, "ckpt_every": ckpt_every, "compute_s": compute_s,
+    }}
+    for label, write_behind in (("serial", False), ("write_behind", True)):
+        dev = SimulatedDevice(MemDevice(), WRITE_PROFILE)
+        fa = Foreactor(device=dev, backend="io_uring", depth=64, workers=16)
+        mgr = CheckpointManager(dev, "/ck", fa=fa, num_shards=4,
+                                chunk_bytes=CHUNK, keep=3)
+        mgr.save(0, tree)  # warm the queue pairs + graph
+        stall = 0.0
+        t0 = time.perf_counter()
+        for s in range(1, steps + 1):
+            time.sleep(compute_s)  # the jitted train step
+            if s % ckpt_every == 0:
+                c0 = time.perf_counter()
+                if write_behind:
+                    mgr.save_async(s, tree)
+                else:
+                    mgr.save(s, tree)
+                stall += time.perf_counter() - c0
+        mgr.wait_pending()
+        wall = time.perf_counter() - t0
+        assert mgr.restore_latest() is not None
+        fa.shutdown()
+        out[label] = {"wall_seconds": wall, "stall_seconds": stall}
+    out["speedup"] = (out["serial"]["wall_seconds"]
+                      / out["write_behind"]["wall_seconds"])
+    out["stall_ratio"] = (out["write_behind"]["stall_seconds"]
+                          / max(out["serial"]["stall_seconds"], 1e-9))
+    return out
+
+
+def run() -> List[Row]:
+    save = bench_save()
+    shard = bench_record_shard()
+    wb = bench_write_behind()
+    path = write_results("write", {"save": save, "record_shard": shard,
+                                   "write_behind": wb})
+    rows: List[Row] = []
+    for label, _b, _d in MODES:
+        for n in SHARD_COUNTS:
+            cell = save[label][str(n)]
+            rows.append((f"write_save_{label}_shards{n}",
+                         cell["seconds"] * 1e6,
+                         f"bw={cell['mb_per_s']:.1f}MB/s"))
+    rows.append(("write_save_speedup_4shards", 0.0,
+                 f"x{save['speedup_4shards']:.2f}"))
+    for label in ("serial", "spec"):
+        rows.append((f"write_record_shard_{label}",
+                     shard[label]["seconds"] * 1e6,
+                     f"bw={shard[label]['mb_per_s']:.1f}MB/s"))
+    for label in ("serial", "write_behind"):
+        rows.append((f"write_behind_{label}",
+                     wb[label]["wall_seconds"] * 1e6,
+                     f"stall={wb[label]['stall_seconds'] * 1e3:.0f}ms"))
+    rows.append(("write_results_json", 0.0, path))
+    return rows
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

@@ -15,6 +15,9 @@ Prints ``name,us_per_call,derived`` CSV.  Sections:
 * Serving — multi-tenant shared-backend scheduler vs per-thread isolation
   vs sync (bench_serve; results in benchmarks/results/serve.json, table via
   ``python -m benchmarks.bench_serve --table``)
+* Write — undoable write-path speculation: staged checkpoint saves,
+  speculative shard writes, write-behind checkpointing vs the serial write
+  path (bench_write; results in benchmarks/results/write.json)
 
 Roofline tables (§Roofline) are produced separately by
 ``python -m benchmarks.roofline`` from the dry-run reports.
@@ -26,7 +29,7 @@ import time
 
 def main() -> None:
     from . import (bench_adaptive, bench_bptree, bench_lsm, bench_overhead,
-                   bench_serve, bench_sharding, bench_utilities)
+                   bench_serve, bench_sharding, bench_utilities, bench_write)
     from .common import fmt
 
     sections = [
@@ -37,6 +40,7 @@ def main() -> None:
         ("sharding_multi_device", bench_sharding.run),
         ("adaptive_depth", bench_adaptive.run),
         ("serving_multi_tenant", bench_serve.run),
+        ("write_speculation", bench_write.run),
     ]
     print("name,us_per_call,derived")
     for name, fn in sections:

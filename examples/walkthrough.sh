@@ -1,0 +1,47 @@
+#!/usr/bin/env bash
+# The README quickstart, executable: train with write-behind checkpointing,
+# die mid-run, restore from the emergency checkpoint, verify the state.
+# CI runs this script (.github/workflows/ci.yml, docs job) so the
+# walkthrough in README.md cannot rot.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+WORK="${WORK:-$(mktemp -d)}"
+echo "== walkthrough: working under $WORK"
+
+TRAIN="python -m repro.launch.train --arch tinyllama-1.1b --smoke
+       --steps 8 --batch 2 --seq 32 --ckpt-every 4
+       --shards 2 --records-per-shard 32
+       --data $WORK/data --ckpt $WORK/ckpt"
+
+echo "== 1. train with write-behind checkpointing, kill at step 6"
+if $TRAIN --kill-at 6; then
+    echo "expected the simulated node failure to abort the run" >&2
+    exit 1
+fi
+echo "   (died as intended; an emergency checkpoint was written)"
+
+echo "== 2. rerun the same command: restores and finishes"
+$TRAIN | tee "$WORK/resume.log"
+grep -q "restored step" "$WORK/resume.log"
+grep -q "done: step 8" "$WORK/resume.log"
+
+echo "== 3. verify the committed checkpoint restores cleanly"
+python - "$WORK/ckpt" <<'EOF'
+import sys
+from repro.core import OSDevice
+from repro.checkpoint import CheckpointManager
+
+mgr = CheckpointManager(OSDevice(), sys.argv[1], num_shards=4)
+steps = mgr.committed_steps()
+assert steps, "no committed checkpoints found"
+out = mgr.restore_latest()
+assert out is not None, "latest checkpoint failed validation"
+step, tree, extra = out
+assert step == max(steps) and int(extra["step"]) >= 8, (step, extra)
+print(f"   restored step {step} OK: {len(tree)} leaves, extra={extra}")
+mgr.fa.shutdown()
+EOF
+
+echo "== walkthrough OK"

@@ -8,6 +8,14 @@ device count (docs/ARCHITECTURE.md, "Sharded multi-device substrate").
 Manifest and commit marker stay in the bare namespace: the sharded device
 hash-routes them and merges ``getdents`` across sub-devices, so discovery
 (:meth:`CheckpointManager.committed_steps`) is topology-blind.
+
+The save path is one foreaction *write graph* (docs/ARCHITECTURE.md,
+"Undoable write speculation"): shard creates are staged (undoable), every
+extent pwrite pre-issues with its data thunk serializing leaf *k+1* while
+the writes for leaf *k* are in flight, per-shard fsync/close ride behind as
+harvest barriers, and the manifest + commit marker chains are gated so the
+marker still publishes strictly last.  An aborted save rolls its staged
+files back — no partial step ever enters the committed namespace.
 """
 
 from __future__ import annotations
@@ -16,7 +24,7 @@ import json
 import threading
 import zlib
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -24,7 +32,9 @@ import jax
 
 from repro.core.api import Foreactor, io
 from repro.core.device import Device
+from repro.core.graph import ForeactionGraph, FromNode, GraphBuilder
 from repro.core.patterns import register_patterns
+from repro.core.syscalls import Sys
 
 COMMIT_MARKER = "COMMIT"
 MANIFEST = "manifest.json"
@@ -65,6 +75,206 @@ def _plan_extents(nbytes_per_leaf: Sequence[int], num_shards: int,
     return extents, shard_sizes
 
 
+class _LazyBlobs:
+    """Per-leaf serialization on first touch, cached.
+
+    The extent plan needs only ``nbytes`` (known without serializing), so
+    ``tobytes()`` runs when a write's data thunk fires at pre-issue time —
+    the engine serializes leaf *k+1* on the application thread while the
+    workers are still writing leaf *k*'s extents.
+    """
+
+    def __init__(self, arrays: Sequence[np.ndarray]):
+        self.arrays = arrays
+        self._blobs: Dict[int, bytes] = {}
+
+    def __getitem__(self, i: int) -> bytes:
+        b = self._blobs.get(i)
+        if b is None:
+            b = self._blobs[i] = self.arrays[i].tobytes()
+        return b
+
+    def __len__(self) -> int:
+        return len(self.arrays)
+
+
+def build_save_graph(num_shards: int, num_extents: int,
+                     name: str) -> ForeactionGraph:
+    """The full checkpoint-save chain as one foreaction graph.
+
+    Shape depends only on (num_shards, num_extents); which shard each
+    extent targets, the data thunks, and the paths come from ctx::
+
+        ctx = {"paths": [shard paths], "writes": [(shard, thunk, off)],
+               "per_shard": [extent count per shard],
+               "manifest_path": str, "manifest_bytes": ()->bytes,
+               "marker_path": str}
+
+    Node order mirrors the serial save exactly: S creating opens, E extent
+    pwrites, S fsyncs, S closes, then the manifest chain, then the commit
+    marker chain.  All edges are strong (a started save is guaranteed), so
+    opens and data writes pre-issue in one sweep — the writes take their fd
+    as ``FromNode`` of their shard's open, which is what lets them enter
+    the queue before any open completes.  The fsync of shard *s* is
+    harvest-gated on shard *s*'s writes and each close on its fsync; the
+    marker chain is gated on every shard close plus the manifest close, so
+    the commit marker is published strictly last even though everything
+    before it overlapped.
+    """
+    b = GraphBuilder(name)
+
+    def _fd_of(ctx, s: int):
+        """This shard's fd: the harvested value once the frontier served the
+        open, else a FromNode deferred to the pre-issued open request.  The
+        fallback matters at the chain head — the very first open is served
+        at the frontier (never pre-issued), so nodes depending on it can
+        only bind through ctx."""
+        fds = ctx.get("fds", ())
+        return fds[s] if s in fds else FromNode(f"open{s}")
+
+    def _open(s: int):
+        def args(ctx, ep):
+            return ((ctx["paths"][s], "w"), False)
+
+        def save(ctx, ep, rc):
+            ctx.setdefault("fds", {})[s] = rc
+
+        return args, save
+
+    def _write(j: int):
+        def args(ctx, ep):
+            s, thunk, off = ctx["writes"][j]
+            return ((_fd_of(ctx, s), thunk(), off), False)
+
+        def save(ctx, ep, rc):
+            s, _thunk, _off = ctx["writes"][j]
+            done = ctx.setdefault("_w_done", [0] * len(ctx["paths"]))
+            done[s] += 1
+            ctx["_w_total"] = ctx.get("_w_total", 0) + 1
+
+        return args, save
+
+    def _fsync(s: int):
+        def args(ctx, ep):
+            done = ctx.get("_w_done", [0] * len(ctx["paths"]))
+            if done[s] < ctx["per_shard"][s]:
+                return None  # harvest barrier: this shard's writes first
+            return ((_fd_of(ctx, s),), False)
+
+        def save(ctx, ep, rc):
+            ctx.setdefault("_synced", set()).add(s)
+
+        return args, save
+
+    def _close(s: int):
+        def args(ctx, ep):
+            if s not in ctx.get("_synced", ()):
+                return None
+            return ((_fd_of(ctx, s),), False)
+
+        def save(ctx, ep, rc):
+            ctx["_closed"] = ctx.get("_closed", 0) + 1
+
+        return args, save
+
+    num = [0]
+
+    def chain(nm, sc, args, save=None):
+        b.AddSyscallNode(nm, sc, args, save)
+        if num[0]:
+            b.SyscallSetNext(prev[0], nm)
+        prev[0] = nm
+        num[0] += 1
+
+    prev = [None]
+    for s in range(num_shards):
+        a, sv = _open(s)
+        chain(f"open{s}", Sys.OPEN, a, sv)
+    for j in range(num_extents):
+        a, sv = _write(j)
+        chain(f"w{j}", Sys.PWRITE, a, sv)
+    for s in range(num_shards):
+        a, sv = _fsync(s)
+        chain(f"sync{s}", Sys.FSYNC, a, sv)
+    for s in range(num_shards):
+        a, sv = _close(s)
+        chain(f"close{s}", Sys.CLOSE, a, sv)
+
+    # manifest chain: content is ready once every extent write is harvested
+    def m_open_args(ctx, ep):
+        return ((ctx["manifest_path"], "w"), False)
+
+    def _mfd(ctx):
+        return ctx["mfd"] if "mfd" in ctx else FromNode("open_m")
+
+    def _cfd(ctx):
+        return ctx["cfd"] if "cfd" in ctx else FromNode("open_c")
+
+    def m_write_args(ctx, ep):
+        if ctx.get("_w_total", 0) < len(ctx["writes"]):
+            return None
+        return ((_mfd(ctx), ctx["manifest_bytes"](), 0), False)
+
+    def m_write_save(ctx, ep, rc):
+        ctx["_m_written"] = True
+
+    def m_sync_args(ctx, ep):
+        if not ctx.get("_m_written"):
+            return None
+        return ((_mfd(ctx),), False)
+
+    def m_sync_save(ctx, ep, rc):
+        ctx["_m_synced"] = True
+
+    def m_close_args(ctx, ep):
+        if not ctx.get("_m_synced"):
+            return None
+        return ((_mfd(ctx),), False)
+
+    def m_close_save(ctx, ep, rc):
+        ctx["_m_closed"] = True
+
+    chain("open_m", Sys.OPEN, m_open_args,
+          lambda ctx, ep, rc: ctx.__setitem__("mfd", rc))
+    chain("w_m", Sys.PWRITE, m_write_args, m_write_save)
+    chain("sync_m", Sys.FSYNC, m_sync_args, m_sync_save)
+    chain("close_m", Sys.CLOSE, m_close_args, m_close_save)
+
+    # commit-marker chain: gated on every shard close + the manifest close,
+    # so the marker publishes strictly last (the atomic-commit invariant)
+    def c_open_args(ctx, ep):
+        if ctx.get("_closed", 0) < len(ctx["paths"]) or not ctx.get("_m_closed"):
+            return None
+        return ((ctx["marker_path"], "w"), False)
+
+    def c_write_args(ctx, ep):
+        return ((_cfd(ctx), b"ok", 0), False)
+
+    def c_write_save(ctx, ep, rc):
+        ctx["_c_written"] = True
+
+    def c_sync_args(ctx, ep):
+        if not ctx.get("_c_written"):
+            return None
+        return ((_cfd(ctx),), False)
+
+    def c_sync_save(ctx, ep, rc):
+        ctx["_c_synced"] = True
+
+    def c_close_args(ctx, ep):
+        if not ctx.get("_c_synced"):
+            return None
+        return ((_cfd(ctx),), False)
+
+    chain("open_c", Sys.OPEN, c_open_args,
+          lambda ctx, ep, rc: ctx.__setitem__("cfd", rc))
+    chain("w_c", Sys.PWRITE, c_write_args, c_write_save)
+    chain("sync_c", Sys.FSYNC, c_sync_args, c_sync_save)
+    chain("close_c", Sys.CLOSE, c_close_args)
+    b.SyscallSetNext("close_c", None)
+    return b.Build()
+
+
 class CheckpointManager:
     """Save/restore pytrees of arrays under ``root`` on a Device.
 
@@ -93,6 +303,10 @@ class CheckpointManager:
         register_patterns(self.fa)
         self._async_thread: Optional[threading.Thread] = None
         self._async_error: Optional[BaseException] = None
+        # serializes save_async/wait_pending: starting a second background
+        # save MUST join-or-raise the first (losing its error or orphaning
+        # its thread would silently drop a checkpoint)
+        self._async_lock = threading.Lock()
 
     # -- paths ----------------------------------------------------------------
     def step_dir(self, step: int) -> str:
@@ -106,80 +320,124 @@ class CheckpointManager:
 
     # -- save -------------------------------------------------------------------
     def save(self, step: int, tree: Any, extra: Optional[Dict[str, Any]] = None) -> None:
+        """Write one committed checkpoint step as a single foreaction write
+        graph (:func:`build_save_graph`): staged shard creates, pipelined
+        leaf serialization, pre-issued extent writes, fsync/close harvest
+        barriers, commit marker published strictly last.  Aborting mid-save
+        rolls the staged files back — no trace in the committed namespace.
+        """
         leaves_kp, treedef = jax.tree_util.tree_flatten_with_path(tree)
         names = [_leaf_name(kp) for kp, _ in leaves_kp]
         arrays = [np.asarray(v) for _, v in leaves_kp]
-        blobs = [a.tobytes() for a in arrays]
-        extents, shard_sizes = _plan_extents([len(b) for b in blobs],
+        blobs = _LazyBlobs(arrays)
+        extents, shard_sizes = _plan_extents([a.nbytes for a in arrays],
                                              self.num_shards, self.chunk_bytes)
         d = self.step_dir(step)
-        fds = [io.open(self.device, self._shard_path(step, i), "w")
-               for i in range(self.num_shards)]
-
-        # guaranteed writes -> pre-issuable via the pwrite_extents graph
-        writes = [
-            (fds[e.shard],
+        paths = [self._shard_path(step, i) for i in range(self.num_shards)]
+        per_shard = [0] * self.num_shards
+        for e in extents:
+            per_shard[e.shard] += 1
+        writes: List[Tuple[int, Callable[[], bytes], int]] = [
+            (e.shard,
              (lambda e=e: blobs[e.leaf][e.leaf_off : e.leaf_off + e.length]),
              e.shard_off)
             for e in extents
         ]
+        manifest_cache: Dict[str, bytes] = {}
 
-        @self.fa.wrap("pwrite_extents", lambda writes: {"writes": writes})
-        def _write_all(writes):
-            for fd, data, off in writes:
-                io.pwrite(self.device, fd, data() if callable(data) else data, off)
-
-        _write_all(writes)
-        for fd in fds:
-            io.fsync(self.device, fd)
-            io.close(self.device, fd)
-
-        manifest = {
-            "step": step,
-            "num_shards": self.num_shards,
-            "shard_sizes": shard_sizes,
-            "leaves": [
-                {
-                    "name": names[i],
-                    "dtype": str(arrays[i].dtype),
-                    "shape": list(arrays[i].shape),
-                    "nbytes": len(blobs[i]),
-                    "crc32": zlib.crc32(blobs[i]),
+        def manifest_bytes() -> bytes:
+            data = manifest_cache.get("data")
+            if data is None:
+                manifest = {
+                    "step": step,
+                    "num_shards": self.num_shards,
+                    "shard_sizes": shard_sizes,
+                    "leaves": [
+                        {
+                            "name": names[i],
+                            "dtype": str(arrays[i].dtype),
+                            "shape": list(arrays[i].shape),
+                            "nbytes": arrays[i].nbytes,
+                            "crc32": zlib.crc32(blobs[i]),
+                        }
+                        for i in range(len(arrays))
+                    ],
+                    "extents": [
+                        [e.leaf, e.leaf_off, e.shard, e.shard_off, e.length]
+                        for e in extents
+                    ],
+                    "extra": extra or {},
                 }
-                for i in range(len(blobs))
-            ],
-            "extents": [
-                [e.leaf, e.leaf_off, e.shard, e.shard_off, e.length] for e in extents
-            ],
-            "extra": extra or {},
-        }
-        mf = io.open(self.device, f"{d}/{MANIFEST}", "w")
-        io.pwrite(self.device, mf, json.dumps(manifest).encode(), 0)
-        io.fsync(self.device, mf)
-        io.close(self.device, mf)
-        # atomic commit: the marker is written strictly last
-        cf = io.open(self.device, f"{d}/{COMMIT_MARKER}", "w")
-        io.pwrite(self.device, cf, b"ok", 0)
-        io.fsync(self.device, cf)
-        io.close(self.device, cf)
+                data = manifest_cache["data"] = json.dumps(manifest).encode()
+            return data
+
+        # register is an idempotent builder assignment; the built graph is
+        # cached by name, so re-registering the same shape costs nothing
+        graph_name = f"ckpt_save_s{self.num_shards}_e{len(extents)}"
+        self.fa.register(
+            graph_name,
+            lambda S=self.num_shards, E=len(extents), n=graph_name:
+                build_save_graph(S, E, n))
+
+        def capture():
+            return {
+                "paths": paths,
+                "writes": writes,
+                "per_shard": per_shard,
+                "manifest_path": f"{d}/{MANIFEST}",
+                "manifest_bytes": manifest_bytes,
+                "marker_path": f"{d}/{COMMIT_MARKER}",
+            }
+
+        @self.fa.wrap(graph_name, capture)
+        def _save_all():
+            fds = [io.open(self.device, p, "w") for p in paths]
+            for s, thunk, off in writes:
+                io.pwrite(self.device, fds[s], thunk(), off)
+            for fd in fds:
+                io.fsync(self.device, fd)
+            for fd in fds:
+                io.close(self.device, fd)
+            mf = io.open(self.device, f"{d}/{MANIFEST}", "w")
+            io.pwrite(self.device, mf, manifest_bytes(), 0)
+            io.fsync(self.device, mf)
+            io.close(self.device, mf)
+            # atomic commit: the marker is written (and published) last
+            cf = io.open(self.device, f"{d}/{COMMIT_MARKER}", "w")
+            io.pwrite(self.device, cf, b"ok", 0)
+            io.fsync(self.device, cf)
+            io.close(self.device, cf)
+
+        _save_all()
         self._gc()
 
     def save_async(self, step: int, tree: Any, extra: Optional[Dict[str, Any]] = None) -> None:
-        """Overlap checkpoint I/O with device compute (framework feature)."""
-        self.wait_pending()
-        # snapshot to host memory synchronously; write in the background
-        tree = jax.tree_util.tree_map(np.asarray, tree)
+        """Write-behind checkpointing: snapshot to host memory now, run the
+        (speculated) write graph on a background thread, overlap with step
+        compute.  Join-or-raise semantics: if a previous background save is
+        still running it is joined first, and if it failed its error is
+        raised *here* — a second call can never silently orphan an
+        in-flight save or swallow its failure."""
+        with self._async_lock:
+            self._join_pending_locked()
+            # snapshot to host memory synchronously; write in the background
+            tree = jax.tree_util.tree_map(np.asarray, tree)
 
-        def run():
-            try:
-                self.save(step, tree, extra)
-            except BaseException as e:  # surfaced on next wait_pending()
-                self._async_error = e
+            def run():
+                try:
+                    self.save(step, tree, extra)
+                except BaseException as e:  # surfaced on next wait_pending()
+                    self._async_error = e
 
-        self._async_thread = threading.Thread(target=run, daemon=True)
-        self._async_thread.start()
+            self._async_thread = threading.Thread(
+                target=run, name=f"ckpt-save-{step}", daemon=True)
+            self._async_thread.start()
 
     def wait_pending(self) -> None:
+        with self._async_lock:
+            self._join_pending_locked()
+
+    def _join_pending_locked(self) -> None:
         if self._async_thread is not None:
             self._async_thread.join()
             self._async_thread = None

@@ -25,7 +25,7 @@ from .device import (
 )
 from .engine import DepthController, GraphMismatch, SessionStats, SpecSession
 from .graph import BranchNode, ForeactionGraph, GraphBuilder, SyscallNode
-from .syscalls import Sys, is_pure
+from .syscalls import Effect, Sys, effect_of, is_pure
 from .trace import Trace, TraceEvent, TraceRecorder
 
 __all__ = [
@@ -36,6 +36,6 @@ __all__ = [
     "REMOTE_PROFILE", "ShardedDevice", "SimulatedDevice",
     "DepthController", "GraphMismatch", "SessionStats", "SpecSession",
     "BranchNode", "ForeactionGraph", "GraphBuilder", "SyscallNode",
-    "Sys", "is_pure",
+    "Effect", "Sys", "effect_of", "is_pure",
     "Trace", "TraceEvent", "TraceRecorder",
 ]

@@ -73,6 +73,7 @@ class Foreactor:
         depth_range: Tuple[int, int] = (1, 64),
         shared: bool = False,
         shared_slots: Optional[int] = None,
+        staging: bool = True,
     ):
         if not (isinstance(depth, int) or depth == "adaptive"):
             raise ValueError(f"depth must be an int or 'adaptive', got {depth!r}")
@@ -90,6 +91,14 @@ class Foreactor:
         #: default: one slot per worker.
         self.shared = shared
         self.shared_slots = shared_slots
+        #: undoable write speculation (repro.store.staging): sessions run
+        #: tracked writes inside a staging transaction — speculative pwrites
+        #: land in staging extents / carry undo bytes, creating opens get
+        #: anonymous staged names, publish happens at close barriers or
+        #: session commit, rollback on abort.  Requires device support
+        #: (rename/unlink/truncate); silently off where unsupported.
+        self.staging = staging and getattr(
+            self.device, "supports_staging", lambda: False)()
         self._graphs: Dict[str, ForeactionGraph] = {}
         self._graph_builders: Dict[str, Callable[[], ForeactionGraph]] = {}
         self._controllers: Dict[str, DepthController] = {}
@@ -207,6 +216,7 @@ class Foreactor:
             strict=self.strict,
             controller=controller,
             tenant=tenant,
+            staging=self.staging,
         )
         _session_stack().append(sess)
         return sess
@@ -262,6 +272,10 @@ class Foreactor:
                                          weight=weight, priority=priority)
                     try:
                         return fn(*args, **kwargs)
+                    except BaseException:
+                        # the staging transaction must roll back, not commit
+                        sess.mark_failed()
+                        raise
                     finally:
                         self.deactivate(sess)
 
@@ -282,6 +296,9 @@ class Foreactor:
                                          weight=weight, priority=priority)
                     try:
                         return fn(*args, **kwargs)
+                    except BaseException:
+                        sess.mark_failed()
+                        raise
                     finally:
                         self.deactivate(sess)
                 if mode == "disabled":

@@ -43,7 +43,7 @@ import threading
 from typing import Dict, List, Optional, Tuple
 
 from .device import Device, ShardedDevice
-from .syscalls import IORequest, ReqState, Sys, execute
+from .syscalls import IORequest, ReqState, Sys, perform
 
 
 class Backend:
@@ -119,7 +119,7 @@ class SyncBackend(Backend):
 
     def wait(self, req: IORequest):
         self.device.charge_crossing()
-        req.finish(execute(self.device, req.sc, req.args))
+        req.finish(perform(self.device, req))
         return req.wait_result()
 
     def cancel_remaining(self) -> int:
@@ -188,7 +188,7 @@ class _WorkerPool:
                     if not req.claim():
                         continue
                     try:
-                        req.finish(execute(self.device, req.sc, req.args))
+                        req.finish(perform(self.device, req))
                     except BaseException as e:  # propagate to the waiter
                         req.finish(error=e)
                         # a failed link head breaks the chain (io_uring semantics)
@@ -727,7 +727,7 @@ class SharedBackend(Backend):
                 # PREPARED requests and workers skip anything not PREPARED,
                 # so nobody else will ever execute it.
                 self.device.charge_crossing()
-                result = execute(self.device, req.sc, req.args)
+                result = perform(self.device, req)
                 req.finish(result)
                 return result
             raise

@@ -103,6 +103,25 @@ class Device:
     def fsync(self, fd: int) -> None:
         raise NotImplementedError
 
+    # -- staging support (repro.store.staging) ----------------------------
+    # rename/unlink/truncate are not syscall nodes (graphs never speculate
+    # them); they are the namespace operations the staging layer needs to
+    # publish (rename staged -> final), undo (unlink a staged file), and
+    # roll back an extending overwrite (truncate to the old end).
+    def rename(self, src: str, dst: str) -> None:
+        raise NotImplementedError
+
+    def unlink(self, path: str) -> None:
+        raise NotImplementedError
+
+    def truncate(self, fd: int, size: int) -> None:
+        raise NotImplementedError
+
+    def supports_staging(self) -> bool:
+        """True iff rename/unlink/truncate are implemented — the gate for
+        undoable write speculation on this device."""
+        return False
+
     # cost hook for the user/kernel boundary; real devices pay it implicitly.
     def charge_crossing(self) -> None:
         self.stats.crossing()
@@ -183,6 +202,33 @@ class OSDevice(Device):
             os.fsync(fd)
         finally:
             self.stats.op_end()
+
+    def rename(self, src: str, dst: str) -> None:
+        self.stats.op_begin()
+        try:
+            parent = os.path.dirname(dst)
+            if parent and not os.path.isdir(parent):
+                os.makedirs(parent, exist_ok=True)
+            os.replace(src, dst)
+        finally:
+            self.stats.op_end()
+
+    def unlink(self, path: str) -> None:
+        self.stats.op_begin()
+        try:
+            os.unlink(path)
+        finally:
+            self.stats.op_end()
+
+    def truncate(self, fd: int, size: int) -> None:
+        self.stats.op_begin()
+        try:
+            os.ftruncate(fd, size)
+        finally:
+            self.stats.op_end()
+
+    def supports_staging(self) -> bool:
+        return True
 
 
 @dataclass(frozen=True)
@@ -382,6 +428,37 @@ class SimulatedDevice(Device):
         finally:
             self.stats.op_end()
 
+    def rename(self, src: str, dst: str) -> None:
+        self.stats.op_begin()
+        try:
+            self._service(0, metadata=True)
+            self.inner.rename(src, dst)
+            with self._fd_lock:
+                for fd, p in self._fd_paths.items():
+                    if p == src:
+                        self._fd_paths[fd] = dst
+        finally:
+            self.stats.op_end()
+
+    def unlink(self, path: str) -> None:
+        self.stats.op_begin()
+        try:
+            self._service(0, metadata=True)
+            self.inner.unlink(path)
+        finally:
+            self.stats.op_end()
+
+    def truncate(self, fd: int, size: int) -> None:
+        self.stats.op_begin()
+        try:
+            self._service(0, metadata=True)
+            self.inner.truncate(fd, size)
+        finally:
+            self.stats.op_end()
+
+    def supports_staging(self) -> bool:
+        return self.inner.supports_staging()
+
 
 _SHARD_PREFIX = re.compile(r"^shard(\d+):(.*)$")
 
@@ -549,6 +626,50 @@ class ShardedDevice(Device):
         finally:
             self.stats.op_end()
 
+    def rename(self, src: str, dst: str) -> None:
+        """Same-shard renames are the atomic fast path (the staging layer
+        derives staged names so src and dst co-locate); cross-shard renames
+        degrade to copy + unlink, which is not atomic — callers that need
+        publish atomicity must keep staged and final names on one shard."""
+        s_shard, s_sub = self.resolve(src)
+        d_shard, d_sub = self.resolve(dst)
+        self.stats.op_begin()
+        try:
+            if s_shard == d_shard:
+                self.devices[s_shard].rename(s_sub, d_sub)
+                return
+            size = self.devices[s_shard].fstatat(s_sub).st_size
+            sfd = self.devices[s_shard].open(s_sub, "r")
+            dfd = self.devices[d_shard].open(d_sub, "w")
+            try:
+                data = self.devices[s_shard].pread(sfd, size, 0)
+                self.devices[d_shard].pwrite(dfd, data, 0)
+            finally:
+                self.devices[s_shard].close(sfd)
+                self.devices[d_shard].close(dfd)
+            self.devices[s_shard].unlink(s_sub)
+        finally:
+            self.stats.op_end()
+
+    def unlink(self, path: str) -> None:
+        shard, sub = self.resolve(path)
+        self.stats.op_begin()
+        try:
+            self.devices[shard].unlink(sub)
+        finally:
+            self.stats.op_end()
+
+    def truncate(self, fd: int, size: int) -> None:
+        dev, rfd = self._lookup(fd)
+        self.stats.op_begin()
+        try:
+            dev.truncate(rfd, size)
+        finally:
+            self.stats.op_end()
+
+    def supports_staging(self) -> bool:
+        return all(d.supports_staging() for d in self.devices)
+
     def charge_crossing(self) -> None:
         # A single-queue caller crosses into "the kernel" once; attribute the
         # cost to sub-device 0 (representative) and count it at the aggregate.
@@ -644,3 +765,39 @@ class MemDevice(Device):
     def fsync(self, fd: int) -> None:
         self.stats.op_begin()
         self.stats.op_end()
+
+    def rename(self, src: str, dst: str) -> None:
+        self.stats.op_begin()
+        try:
+            with self._lock:
+                if src not in self._files:
+                    raise FileNotFoundError(src)
+                self._files[dst] = self._files.pop(src)
+                # open fds follow the file to its new name (inode semantics)
+                for fd, p in self._fds.items():
+                    if p == src:
+                        self._fds[fd] = dst
+        finally:
+            self.stats.op_end()
+
+    def unlink(self, path: str) -> None:
+        self.stats.op_begin()
+        try:
+            with self._lock:
+                if path not in self._files:
+                    raise FileNotFoundError(path)
+                del self._files[path]
+        finally:
+            self.stats.op_end()
+
+    def truncate(self, fd: int, size: int) -> None:
+        self.stats.op_begin()
+        try:
+            with self._lock:
+                buf = self._files[self._fds[fd]]
+                del buf[size:]
+        finally:
+            self.stats.op_end()
+
+    def supports_staging(self) -> bool:
+        return True

@@ -37,7 +37,8 @@ from typing import Any, Dict, Optional, Tuple
 from .backends import Backend
 from .device import Device
 from .graph import BranchNode, Edge, ForeactionGraph, FromNode, SyscallNode
-from .syscalls import FromRequest, IORequest, ReqState, Sys, execute, is_pure
+from .syscalls import (Effect, FromRequest, IORequest, ReqState, Sys,
+                       effect_of, execute)
 
 
 class DepthController:
@@ -218,6 +219,7 @@ class SpecSession:
         strict: bool = True,
         controller: Optional[DepthController] = None,
         tenant: Optional[str] = None,
+        staging: bool = False,
     ):
         self.graph = graph
         self.ctx = ctx
@@ -241,6 +243,25 @@ class SpecSession:
         self._peek: Optional[Cursor] = None
         self._peek_dist = 0
         self._finished = False
+        # undoable write speculation: when enabled, every tracked UNDOABLE
+        # syscall — pre-issued or frontier-served — runs inside one staging
+        # transaction (repro.store.staging), committed on clean exit and
+        # rolled back on failure.  The txn is created lazily on first use.
+        self._staging_enabled = staging
+        self.staging = None  # Optional[StagingTxn]
+        self._failed = False
+
+    def mark_failed(self) -> None:
+        """The wrapped function raised: the session's staging transaction
+        must roll back instead of committing (called by ``Foreactor.wrap``
+        before ``deactivate`` runs in its ``finally``)."""
+        self._failed = True
+
+    def _txn(self):
+        if self.staging is None and self._staging_enabled:
+            from repro.store.staging import StagingTxn  # lazy: no cycle
+            self.staging = StagingTxn(self.device)
+        return self.staging
 
     @property
     def depth(self) -> int:
@@ -331,10 +352,10 @@ class SpecSession:
                         args, link = out
                         args = self._bind_deferred(args, cur.epochs)
                         if args is not None:
-                            pure = is_pure(node.sc, args)
-                            if pure or not cur.weak_crossed:
-                                req = IORequest(sc=node.sc, args=args, link=link,
-                                                tag=(node.name, cur.epochs))
+                            req = self._make_request(node, args, link,
+                                                     cur.epochs,
+                                                     cur.weak_crossed)
+                            if req is not None:
                                 self.backend.prepare(req)
                                 st.issued = True
                                 st.req = req
@@ -355,6 +376,76 @@ class SpecSession:
                     self.stats.submits += 1
         finally:
             self.stats.peek_seconds += time.perf_counter() - t0
+
+    def _make_request(self, node: SyscallNode, args, link: bool,
+                      epochs: Tuple[int, ...],
+                      weak_crossed: bool) -> Optional[IORequest]:
+        """Build the IORequest for a peeked node, or None if the node's
+        effect class forbids pre-issuing here (paper §3.3, extended):
+
+        * PURE — always pre-issuable, unchanged.
+        * UNDOABLE — with staging on, always pre-issuable: creates are
+          redirected to a staging extent, overwrites capture undo bytes
+          (writes to files this txn created need neither).  Without
+          staging, only when guaranteed (no weak edge crossed) — the
+          paper's original rule.
+        * BARRIER — only when guaranteed; a barrier can never run ahead of
+          an exit that might abandon it.
+        """
+        tag = (node.name, epochs)
+        eff = effect_of(node.sc, args)
+        if eff is Effect.PURE:
+            return IORequest(sc=node.sc, args=args, link=link, tag=tag)
+        if eff is Effect.UNDOABLE and self._staging_enabled:
+            txn = self._txn()
+            if node.sc is Sys.OPEN:
+                runner, rec = txn.stage_create(
+                    args[0], args[1] if len(args) > 1 else "w")
+                return IORequest(sc=node.sc, args=args, link=link, tag=tag,
+                                 runner=runner, stage=rec)
+            # PWRITE into a file this transaction created: on a guaranteed
+            # path it needs no undo record (rollback unlinks the file).
+            # Behind a weak edge it must NOT pre-issue at all — if the
+            # create publishes (its open was demanded) the file's bytes
+            # commit wholesale, and a byte-range undo of the un-demanded
+            # writes is unsound under concurrency (interleaved extends make
+            # old-bytes + truncate replay order-dependent).  The create
+            # itself still speculates; its writes wait for the frontier.
+            if self._fd_is_staged(txn, args[0]):
+                if weak_crossed:
+                    return None
+                return IORequest(sc=node.sc, args=args, link=link, tag=tag)
+            runner, rec = txn.stage_overwrite(args)
+            return IORequest(sc=node.sc, args=args, link=link, tag=tag,
+                             runner=runner, stage=rec)
+        if not weak_crossed:  # guaranteed: UNDOABLE-unstaged and BARRIER
+            req = IORequest(sc=node.sc, args=args, link=link, tag=tag)
+            if node.sc is Sys.CLOSE:
+                # bind the publish barrier to its record NOW, while the fd
+                # is still open; the worker may execute this close (and the
+                # OS recycle the fd number) long before the frontier serves
+                # it, making fd-keyed lookup at harvest time unsound
+                req.barrier_for = self._close_barrier_rec(args[0])
+            return req
+        return None
+
+    def _close_barrier_rec(self, fd_arg):
+        """The staged-create record a CLOSE's fd refers to, or None."""
+        if self.staging is None:
+            return None
+        if isinstance(fd_arg, FromRequest):
+            rec = fd_arg.req.stage
+            return rec if rec is not None and rec.kind == "create" else None
+        if isinstance(fd_arg, int):
+            return self.staging.record_for_fd(fd_arg)
+        return None
+
+    @staticmethod
+    def _fd_is_staged(txn, fd_arg) -> bool:
+        if isinstance(fd_arg, FromRequest):
+            rec = fd_arg.req.stage
+            return rec is not None and rec.kind == "create"
+        return isinstance(fd_arg, int) and txn.is_staged_fd(fd_arg)
 
     def _bind_deferred(self, args, epochs):
         """Rewrite FromNode placeholders to the producer's request at the
@@ -399,6 +490,17 @@ class SpecSession:
 
         # 3. serve the frontier
         st = self._node_state(frontier, cur.epochs)
+        # resolve a close's publish-barrier record BEFORE serving: for a
+        # pre-issued close it was bound at pre-issue; for a sync serve the
+        # fd is still open right now.  After the close executes, the OS may
+        # recycle the fd number onto a newer staged create.
+        close_rec = None
+        if sc is Sys.CLOSE and self.staging is not None:
+            if st.issued and st.req is not None \
+                    and st.req.state is not ReqState.CANCELLED:
+                close_rec = st.req.barrier_for
+            else:
+                close_rec = self.staging.record_for_fd(args[0])
         if st.issued and st.req is not None and st.req.state is not ReqState.CANCELLED:
             t0 = time.perf_counter()
             result = self.backend.wait(st.req)
@@ -406,6 +508,10 @@ class SpecSession:
             self.stats.wait_seconds += blocked
             self.stats.served_async += 1
             served_async = True
+            if st.req.stage is not None:
+                # the frontier reached a staged side effect: real execution
+                # now depends on it — eligible for publish at its barrier
+                self.staging.on_demand(st.req.stage)
             # copy the internal buffer back to the caller (paper Fig. 10
             # 'result copy' overhead) — bytes results are memcpy'd.
             t0 = time.perf_counter()
@@ -418,12 +524,15 @@ class SpecSession:
             # shed speculative queue pressure first (no-op on private ones)
             self.backend.note_demand()
             self.device.charge_crossing()
-            result = execute(self.device, sc, args)
+            result = self._serve_sync(sc, args)
             blocked = time.perf_counter() - t0
             self.stats.sync_seconds += blocked
             self.stats.served_sync += 1
             served_async = False
             st.issued = True
+        if close_rec is not None:
+            # publish barrier: closing a staged file commits it (rename)
+            self.staging.publish_close(close_rec)
         if self.controller is not None:
             self.controller.on_serve(blocked, served_async, self.backend)
         if frontier.save_result is not None and not st.harvested:
@@ -436,10 +545,37 @@ class SpecSession:
             self._peek_dist -= 1
         return result
 
+    def _serve_sync(self, sc: Sys, args: Tuple[Any, ...]) -> Any:
+        """Serve the frontier synchronously.  With staging on, undoable
+        syscalls stay inside the transaction even here: a session is a
+        write transaction whether or not speculation got ahead, so the
+        abort path can roll back demand writes too."""
+        if self._staging_enabled and effect_of(sc, args) is Effect.UNDOABLE:
+            txn = self._txn()
+            if sc is Sys.OPEN:
+                runner, rec = txn.stage_create(
+                    args[0], args[1] if len(args) > 1 else "w")
+            elif not self._fd_is_staged(txn, args[0]):
+                runner, rec = txn.stage_overwrite(args)
+            else:  # write into a staged file: nothing extra to log
+                return execute(self.device, sc, args)
+            rec.demanded = True
+            return runner(self.device)
+        return execute(self.device, sc, args)
+
     def _exec_untracked(self, sc: Sys, args: Tuple[Any, ...]) -> Any:
         self.stats.untracked += 1
+        # untracked closes are still publish barriers (plenty of wrapped
+        # functions open through the graph but tear down outside it);
+        # resolve the record before the close frees the fd number
+        close_rec = None
+        if sc is Sys.CLOSE and self.staging is not None:
+            close_rec = self.staging.record_for_fd(args[0])
         self.device.charge_crossing()
-        return execute(self.device, sc, args)
+        result = execute(self.device, sc, args)
+        if close_rec is not None:
+            self.staging.publish_close(close_rec)
+        return result
 
     # -- teardown ------------------------------------------------------------
     def finish(self) -> SessionStats:
@@ -478,8 +614,17 @@ class SpecSession:
                         self.stats.cancelled += 1
                     elif st.req.state is ReqState.COMPLETED and not st.harvested:
                         self.stats.wasted_completions += 1
-                if self.controller is not None:
-                    self.controller.on_finish(
-                        self.stats, time.perf_counter() - self._t0, self.backend
-                    )
+                try:
+                    # settle the write transaction strictly after the drain:
+                    # no staged runner can still be executing.  Success
+                    # publishes what the frontier demanded and rolls back
+                    # overshoot; failure rolls back everything unpublished.
+                    if self.staging is not None:
+                        self.staging.finalize(ok=not self._failed)
+                finally:
+                    if self.controller is not None:
+                        self.controller.on_finish(
+                            self.stats, time.perf_counter() - self._t0,
+                            self.backend
+                        )
         return self.stats

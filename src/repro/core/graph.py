@@ -27,7 +27,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
-from .syscalls import Sys, is_pure
+from .syscalls import Effect, Sys, effect_of, is_pure
 
 # Stub signatures (paper §5.1):
 #   ComputeArgsFn(ctx, epochs) -> None (not ready) | (args_tuple, link_flag)
@@ -74,6 +74,12 @@ class SyscallNode(Node):
 
     def pure_with(self, args: Tuple[Any, ...]) -> bool:
         return is_pure(self.sc, args)
+
+    def effect_with(self, args: Tuple[Any, ...]) -> Effect:
+        """Three-way effect class of this node with concrete arguments:
+        pure / undoable / barrier (the §3.3 pre-issue gate, extended —
+        see ``repro.core.syscalls.effect_of``)."""
+        return effect_of(self.sc, args)
 
 
 @dataclass

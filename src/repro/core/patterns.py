@@ -11,6 +11,11 @@ these generic builders instead of hand-drawing a graph per call site:
 * ``build_pwrite_extents_graph``— pwrite over (fd, data|thunk, offset) extents
   (guaranteed writes: strong edges throughout)
 * ``build_copy_extents_graph``  — Link'ed pread->pwrite pairs (cp shape, Fig. 4b)
+* ``build_write_file_graph``    — create + pwrite loop + fsync + close: the
+  whole-file write chain, speculable end to end because the create is
+  *undoable* (it lands in a staging extent and publishes at the close
+  barrier — repro.store.staging); fsync/close are harvest-gated so the
+  barrier never runs ahead of the writes it orders
 
 ctx conventions are documented per builder.  Results are harvested into
 ctx lists so wrapped functions can also consume them if desired.
@@ -155,6 +160,75 @@ def build_pwrite_extents_graph(name: str = "pwrite_extents") -> ForeactionGraph:
     return b.Build()
 
 
+def build_write_file_graph(name: str = "write_file") -> ForeactionGraph:
+    """ctx: {"path": str, "writes": [(data|()->data, offset)]}.
+
+    One whole-file write chain: ``open(path, "w")`` -> pwrite loop ->
+    fsync -> close.  The open's fd is harvested into ``ctx["fd"]``; each
+    write may carry a zero-arg thunk so serialization is pulled ahead of
+    the frontier.  fsync is not ready until every write is harvested and
+    close not until the fsync is — the mined-graph *harvest barrier* idiom
+    — so the teardown pair can never overtake the data it orders.  With a
+    staging transaction active the create is undoable: the file appears in
+    the committed namespace only at the close (publish) barrier.
+    """
+    b = GraphBuilder(name)
+
+    def open_args(ctx, ep):
+        return ((ctx["path"], "w"), False)
+
+    def open_save(ctx, ep, rc):
+        ctx["fd"] = rc
+
+    def wargs(ctx, ep):
+        ws = ctx["writes"]
+        if "fd" not in ctx or ep[0] >= len(ws):
+            return None
+        data, off = ws[ep[0]]
+        if callable(data):
+            data = data()
+        return ((ctx["fd"], data, off), False)
+
+    def wsave(ctx, ep, rc):
+        ctx["_wf_done"] = ctx.get("_wf_done", 0) + 1
+
+    def sync_args(ctx, ep):
+        if ctx.get("_wf_done", 0) < len(ctx["writes"]) or "fd" not in ctx:
+            return None  # harvest barrier: all writes first
+        return ((ctx["fd"],), False)
+
+    def sync_save(ctx, ep, rc):
+        ctx["_wf_synced"] = True
+
+    def close_args(ctx, ep):
+        if not ctx.get("_wf_synced"):
+            return None
+        return ((ctx["fd"],), False)
+
+    def head(ctx, ep):
+        return 0 if len(ctx["writes"]) > 0 else 1
+
+    def more(ctx, ep):
+        return 0 if ep[0] + 1 < len(ctx["writes"]) else 1
+
+    b.AddSyscallNode("open", Sys.OPEN, open_args, open_save)
+    b.AddBranchingNode("any", head)
+    b.AddSyscallNode("pwrite", Sys.PWRITE, wargs, wsave)
+    b.AddBranchingNode("more", more)
+    b.AddSyscallNode("fsync", Sys.FSYNC, sync_args, sync_save)
+    b.AddSyscallNode("close", Sys.CLOSE, close_args)
+    b.SetStart("open")
+    b.SyscallSetNext("open", "any")
+    b.BranchAppendChild("any", "pwrite")
+    b.BranchAppendChild("any", "fsync")
+    b.SyscallSetNext("pwrite", "more")
+    b.BranchAppendChild("more", "pwrite", loopback=True)
+    b.BranchAppendChild("more", "fsync")
+    b.SyscallSetNext("fsync", "close")
+    b.SyscallSetNext("close", None)
+    return b.Build()
+
+
 def build_copy_extents_graph(name: str = "copy_extents") -> ForeactionGraph:
     """ctx: {"pairs": [(src_fd, dst_fd, size, offset)]}; each iteration is a
     Link'ed pread->pwrite — the write consumes the read's internal buffer
@@ -200,6 +274,7 @@ PATTERNS: Dict[str, Callable[[], ForeactionGraph]] = {
     "open_list": build_open_list_graph,
     "pread_extents": build_pread_extents_graph,
     "pwrite_extents": build_pwrite_extents_graph,
+    "write_file": build_write_file_graph,
     "copy_extents": build_copy_extents_graph,
 }
 

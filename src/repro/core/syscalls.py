@@ -1,13 +1,25 @@
 """Typed syscall descriptors and I/O request records (paper §3.2).
 
-A syscall node is *pure* if it is read-only — its only side effect is
-possibly bringing data into the OS page cache (pread, fstat, getdents,
-read-only open).  Non-pure syscalls (pwrite, creating opens, close, fsync)
-leave permanent side effects and may only be pre-issued when guaranteed to
-happen (no weak edge on the path from the frontier — paper §3.3).
+Every syscall node falls into one of three *effect classes* (the paper's
+§3.3 pure/non-pure split, refined so that write chains become speculable):
 
-Cross-references: docs/ARCHITECTURE.md ("Syscall layer"); *pure syscall* and
-*pre-issue* are defined in docs/GLOSSARY.md.
+* **pure** — read-only; the only side effect is possibly bringing data into
+  the OS page cache (pread, fstat, getdents, read-only open).  Always safe
+  to pre-issue, even across weak edges.
+* **undoable** — leaves persistent state that a staging layer can revert:
+  pwrite (old bytes can be logged and replayed) and truncating-create opens
+  (the file can land in a staged name and be renamed into place later).
+  Pre-issuable across weak edges *when the session runs a staging
+  transaction* (:mod:`repro.store.staging`); otherwise only when guaranteed.
+* **barrier** — unrecoverable or ordering-bearing side effects: fsync,
+  close, and opens of pre-existing files in write modes ("rw"/"a", whose
+  prior contents a file-granularity stage cannot preserve).  Never
+  pre-issued across a weak edge; serving one at the frontier is the
+  *publish barrier* that commits the staged files behind it.
+
+Cross-references: docs/ARCHITECTURE.md ("Syscall layer", "Undoable write
+speculation"); *pure syscall*, *undoable syscall* and *publish barrier* are
+defined in docs/GLOSSARY.md.
 """
 
 from __future__ import annotations
@@ -15,7 +27,7 @@ from __future__ import annotations
 import threading
 from dataclasses import dataclass, field
 from enum import Enum
-from typing import Any, Optional, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 
 class Sys(Enum):
@@ -32,14 +44,38 @@ class Sys(Enum):
 PURE: frozenset = frozenset({Sys.PREAD, Sys.FSTATAT, Sys.GETDENTS})
 
 
-def is_pure(sc: Sys, args: Tuple[Any, ...]) -> bool:
-    """open(path, 'r') allocates an fd but leaves no persistent state and is
-    cancellable via close; creating/truncating opens are non-pure."""
+class Effect(Enum):
+    """Three-way side-effect classification of a (syscall, args) pair."""
+
+    PURE = "pure"
+    UNDOABLE = "undoable"
+    BARRIER = "barrier"
+
+
+def effect_of(sc: Sys, args: Tuple[Any, ...]) -> Effect:
+    """Classify a concrete call.
+
+    open(path, 'r') allocates an fd but leaves no persistent state and is
+    cancellable via close — pure.  open(path, 'w') truncating-creates: the
+    file can be staged under a temporary name and renamed into place at
+    publish — undoable.  open with 'rw'/'a' mutates a file that may already
+    exist, which file-granularity staging cannot revert — barrier.
+    """
     if sc in PURE:
-        return True
+        return Effect.PURE
     if sc is Sys.OPEN:
-        return len(args) < 2 or args[1] == "r"
-    return False
+        if len(args) < 2 or args[1] == "r":
+            return Effect.PURE
+        if args[1] == "w":
+            return Effect.UNDOABLE
+        return Effect.BARRIER
+    if sc is Sys.PWRITE:
+        return Effect.UNDOABLE
+    return Effect.BARRIER  # close, fsync
+
+
+def is_pure(sc: Sys, args: Tuple[Any, ...]) -> bool:
+    return effect_of(sc, args) is Effect.PURE
 
 
 class FromRequest:
@@ -90,6 +126,19 @@ def execute(device, sc: Sys, args: Tuple[Any, ...]):
     raise ValueError(f"unknown syscall {sc}")
 
 
+def perform(device, req: "IORequest"):
+    """Execute one request against a device, honouring its staged runner.
+
+    Every execution site (worker pools, the sync backend's deferred
+    execution, the shared backend's inline demand fallback) must go through
+    here — calling ``execute`` directly would bypass staging and land a
+    speculative write in the committed namespace.
+    """
+    if req.runner is not None:
+        return req.runner(device)
+    return execute(device, req.sc, req.args)
+
+
 class ReqState(Enum):
     PREPARED = 0  # in the submission queue, not yet visible to the 'kernel'
     SUBMITTED = 1  # picked up by the io_workqueue
@@ -109,6 +158,19 @@ class IORequest:
     args: Tuple[Any, ...]
     link: bool = False
     tag: Any = None  # (node id, epoch) — used by the engine to find it again
+    #: staged execution override: when set, workers call ``runner(device)``
+    #: instead of ``execute(device, sc, args)`` — the staging layer uses it
+    #: to redirect a speculative create to its staged name or to capture an
+    #: overwrite's undo bytes before the write lands
+    runner: Optional[Callable[[Any], Any]] = None
+    #: the StageRecord this request belongs to, if its side effect is staged
+    #: (undo/publish bookkeeping lives in repro.store.staging)
+    stage: Any = None
+    #: for CLOSE requests: the staged-create record this close is the
+    #: publish barrier of.  Resolved at pre-issue time, while the fd is
+    #: provably still open — resolving at harvest would race with OS
+    #: fd-number reuse once the worker-executed close freed the number.
+    barrier_for: Any = None
     #: dispatch priority (io_uring's IOSQE ioprio analogue): worker pools
     #: run higher values first; shared-backend views stamp their tenant's
     #: priority class here, demand promotions outrank all speculation

@@ -42,6 +42,9 @@ def main() -> None:
     ap.add_argument("--shards", type=int, default=4)
     ap.add_argument("--records-per-shard", type=int, default=256)
     ap.add_argument("--no-restore", action="store_true")
+    ap.add_argument("--serial-ckpt", action="store_true",
+                    help="disable write-behind checkpointing (save blocks "
+                         "the training thread; the bench_write baseline)")
     ap.add_argument("--kill-at", type=int, default=0,
                     help="simulate a node failure at this step")
     args = ap.parse_args()
@@ -70,7 +73,8 @@ def main() -> None:
     opt = AdamWConfig(lr=args.lr, warmup_steps=max(2, args.steps // 20),
                       total_steps=args.steps)
     tcfg = TrainerConfig(steps=args.steps, ckpt_every=args.ckpt_every,
-                         log_every=10, restore=not args.no_restore)
+                         log_every=10, restore=not args.no_restore,
+                         write_behind=not args.serial_ckpt)
     trainer = Trainer(model, opt, loader, ckpt, make_host_mesh(), tcfg)
 
     if args.kill_at:
@@ -84,10 +88,13 @@ def main() -> None:
         loader.load = killing_load
 
     out = trainer.fit()
+    mode = "serial" if args.serial_ckpt else "write-behind"
     print(f"[train] done: step {out['final_step']}  "
           f"final loss {out['losses'][-1]:.4f}  "
           f"mean step {1e3 * (out['mean_step_s'] or 0):.0f}ms  "
-          f"stragglers {out['stragglers']}")
+          f"stragglers {out['stragglers']}  "
+          f"ckpt[{mode}] {out['ckpt_saves']} saves, "
+          f"{out['ckpt_wait_s']:.2f}s stalled")
     loader.close()
     fa.shutdown()
 

@@ -3,8 +3,14 @@
 * deterministic resumability: the data order is a pure function of
   (seed, epoch, step), so restoring {params, opt, epoch, step} from the
   newest committed checkpoint reproduces the exact remaining schedule;
-* async checkpointing through the foreactor-backed CheckpointManager
-  (guaranteed-write graphs), overlapped with device compute;
+* write-behind checkpointing through the foreactor-backed
+  CheckpointManager: the save is one speculated write graph (staged
+  creates, pre-issued extent writes, commit marker published last) running
+  on a background thread, so checkpoint I/O overlaps step compute and the
+  trainer only blocks when a save is still in flight at the next
+  checkpoint boundary (``ckpt_wait_s`` in the fit() summary measures
+  exactly that residual stall — ``write_behind=False`` degrades to
+  synchronous saves for comparison);
 * straggler watch: a per-step wall-time EMA; steps slower than
   ``straggler_factor x`` EMA are recorded (and, on a real cluster, would
   feed the coordinator's slow-host eviction);
@@ -41,6 +47,10 @@ class TrainerConfig:
     seed: int = 0
     straggler_factor: float = 3.0
     restore: bool = True
+    #: overlap checkpoint saves with step compute (save_async); False runs
+    #: every save synchronously on the training thread (the serial baseline
+    #: benchmarks/bench_write.py measures against)
+    write_behind: bool = True
 
 
 @dataclass
@@ -65,6 +75,8 @@ class Trainer:
         self.batch_extras = batch_extras
         self.events: List[StepEvent] = []
         self.stragglers: List[int] = []
+        self.ckpt_wait_s = 0.0  # training-thread time lost to checkpoint I/O
+        self.ckpt_saves = 0
 
     # -- step construction -------------------------------------------------
     def _jit_step(self):
@@ -125,8 +137,16 @@ class Trainer:
                     if self.ckpt is not None and self.tcfg.ckpt_every \
                             and global_step % self.tcfg.ckpt_every == 0:
                         e2, s2 = divmod(global_step, spe)
-                        self.ckpt.save_async(global_step, state,
-                                             extra={"epoch": e2, "step": global_step})
+                        extra = {"epoch": e2, "step": global_step}
+                        t0 = time.perf_counter()
+                        if self.tcfg.write_behind:
+                            # blocks only while a previous save is still in
+                            # flight; the write graph runs behind compute
+                            self.ckpt.save_async(global_step, state, extra=extra)
+                        else:
+                            self.ckpt.save(global_step, state, extra=extra)
+                        self.ckpt_wait_s += time.perf_counter() - t0
+                        self.ckpt_saves += 1
             except BaseException:
                 if self.ckpt is not None:
                     try:  # emergency checkpoint of the last good state
@@ -139,14 +159,19 @@ class Trainer:
                         print(f"[trainer] emergency save failed: {e2!r}")
                 raise
             if self.ckpt is not None:
+                t0 = time.perf_counter()
                 self.ckpt.wait_pending()
                 self.ckpt.save(global_step, state,
                                extra={"epoch": epoch, "step": global_step})
+                self.ckpt_wait_s += time.perf_counter() - t0
+                self.ckpt_saves += 1
             return {
                 "state": state,
                 "losses": losses,
                 "final_step": global_step,
                 "stragglers": self.stragglers,
+                "ckpt_wait_s": self.ckpt_wait_s,
+                "ckpt_saves": self.ckpt_saves,
                 "mean_step_s": float(np.mean([ev.seconds for ev in self.events[1:]]))
                 if len(self.events) > 1 else None,
             }

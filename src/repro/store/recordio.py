@@ -14,8 +14,9 @@ from __future__ import annotations
 import struct
 from typing import Iterator, List, Optional
 
-from repro.core.api import io
+from repro.core.api import Foreactor, io
 from repro.core.device import Device
+from repro.core.patterns import build_write_file_graph
 
 MAGIC = b"RIO1"
 HEADER = 16
@@ -73,10 +74,42 @@ class RecordShardReader:
         io.close(self.device, self.fd)
 
 
-def write_shard(device: Device, path: str, records: List[bytes]) -> None:
+def write_shard(device: Device, path: str, records: List[bytes],
+                fa: Optional[Foreactor] = None) -> None:
+    """Write one complete shard file.
+
+    Without ``fa`` this is the original serial path (header, appends,
+    header rewrite, fsync, close).  With a Foreactor it becomes one
+    ``write_file`` foreaction chain: the create is staged (undoable), the
+    final header and every record pre-issue as guaranteed writes, fsync and
+    close ride behind as harvest barriers, and the file publishes onto
+    ``path`` at the close — a crashed or aborted writer leaves no partial
+    shard in the committed namespace.  Final bytes are identical either
+    way (the speculative path just writes the true record count once
+    instead of rewriting the header at close).
+    """
     if not records:
         raise ValueError("empty shard")
-    w = RecordShardWriter(device, path, len(records[0]))
+    record_size = len(records[0])
+    if fa is None:
+        w = RecordShardWriter(device, path, record_size)
+        for r in records:
+            w.append(r)
+        w.close()
+        return
     for r in records:
-        w.append(r)
-    w.close()
+        if len(r) != record_size:
+            raise ValueError(f"record must be exactly {record_size} bytes")
+    writes = [(_HDR.pack(MAGIC, record_size, len(records)), 0)]
+    writes += [(r, HEADER + i * record_size) for i, r in enumerate(records)]
+    fa.register("write_file", build_write_file_graph)
+
+    @fa.wrap("write_file", lambda: {"path": path, "writes": writes})
+    def _write_all():
+        fd = io.open(device, path, "w")
+        for data, off in writes:
+            io.pwrite(device, fd, data, off)
+        io.fsync(device, fd)
+        io.close(device, fd)
+
+    _write_all()

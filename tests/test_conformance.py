@@ -11,6 +11,13 @@ invariant::
 
 i.e. every pre-issued request is accounted exactly once: harvested by the
 frontier, cancelled before execution, or drained to completion and wasted.
+
+Write-bearing programs additionally prove the undoable-write extension
+(repro.store.staging): random mixes of overwrites, staged creates and reads
+behind weak edges commit byte-identical namespaces to sync execution at
+every depth, and abort/fault paths leave the committed namespace exactly as
+they found it — speculated *and* demanded writes roll back, staged files
+vanish without residue.
 """
 
 import random
@@ -20,6 +27,7 @@ from _hypothesis_support import HAS_HYPOTHESIS, given, settings, st
 
 from repro.core import (Foreactor, GraphBuilder, MemDevice, ShardedDevice,
                         Sys, io)
+from repro.core.graph import FromNode
 from repro.core.patterns import (build_copy_extents_graph,
                                  build_pwrite_extents_graph)
 
@@ -219,6 +227,186 @@ def test_copy_program_conformance(cfg, depth):
     _name, kind, kwargs = cfg
     content, stats = run_copy_program(make_device(kind), kwargs, depth)
     assert content == file_bytes(0)
+    assert_ledger_invariant(stats)
+
+
+# -- write-bearing random programs (undoable-write conformance) ---------------
+# Ops: ("pread", ro_file, size, off)          — read-only files, never written
+#      ("pwrite", rw_file, token, slot)       — overwrite slot*8 of a rw file
+#      ("open", cid) ... ("wnew", cid, token, slot) ... ("close", cid)
+#      — a staged create macro: open /c/new{cid} w, chunk writes, close.
+# Every edge is weak: the program may exit (or abort) after any op, so every
+# write pre-issue goes through the staging transaction.
+
+N_RO = 5  # files 0..4 are read-only in write programs
+N_RW = N_FILES - N_RO  # files 5..9 take overwrites
+
+
+def _tok(t: int) -> bytes:
+    return bytes(((t * 13 + j) % 251) for j in range(8))
+
+
+def random_write_program(rng: random.Random, length: int):
+    ops = []
+    slots = [(f, s) for f in range(N_RO, N_FILES)
+             for s in range(FILE_SIZE // 8)]
+    rng.shuffle(slots)  # each (file, slot) written at most once: no races
+    cid = 0
+    while len(ops) < length:
+        r = rng.random()
+        if r < 0.35:
+            off = rng.randrange(0, FILE_SIZE - 8)
+            ops.append(("pread", rng.randrange(N_RO),
+                        rng.randrange(1, FILE_SIZE - off), off))
+        elif r < 0.75 and slots:
+            f, s = slots.pop()
+            ops.append(("pwrite", f, rng.randrange(1000), s))
+        else:
+            n = rng.randint(1, 3)
+            ops.append(("open", cid))
+            for k in range(n):
+                ops.append(("wnew", cid, rng.randrange(1000), k))
+            ops.append(("close", cid))
+            cid += 1
+    exit_at = rng.randint(1, len(ops))
+    return ops, exit_at
+
+
+def build_write_program_graph(name: str, ops):
+    b = GraphBuilder(name)
+    prev = None
+    for idx, op in enumerate(ops):
+        node = f"s{idx}"
+        if op[0] == "pread":
+            def args(ctx, ep, op=op):
+                return ((ctx["fds"][op[1]], op[2], op[3]), False)
+            b.AddSyscallNode(node, Sys.PREAD, args)
+        elif op[0] == "pwrite":
+            def args(ctx, ep, op=op):
+                return ((ctx["fds"][op[1]], _tok(op[2]), op[3] * 8), False)
+            b.AddSyscallNode(node, Sys.PWRITE, args)
+        elif op[0] == "open":
+            def args(ctx, ep, op=op):
+                return ((f"/c/new{op[1]}", "w"), False)
+
+            def save(ctx, ep, rc, op=op):
+                ctx.setdefault("new_fds", {})[op[1]] = rc
+            b.AddSyscallNode(f"open{op[1]}", Sys.OPEN, args, save)
+            node = f"open{op[1]}"
+        elif op[0] == "wnew":
+            def args(ctx, ep, op=op):
+                fds = ctx.get("new_fds", {})
+                fd = fds.get(op[1], FromNode(f"open{op[1]}"))
+                return ((fd, _tok(op[2]), op[3] * 8), False)
+            b.AddSyscallNode(node, Sys.PWRITE, args)
+        else:  # close
+            def args(ctx, ep, op=op):
+                fds = ctx.get("new_fds", {})
+                if op[1] not in fds:
+                    return None
+                return ((fds[op[1]],), False)
+            b.AddSyscallNode(node, Sys.CLOSE, args)
+        if prev is not None:
+            b.SyscallSetNext(prev, node, weak=True)
+        prev = node
+    b.SyscallSetNext(prev, None, weak=True)
+    return b.Build()
+
+
+def namespace_snapshot(dev) -> dict:
+    """Committed bytes of every file under /c, via plain device ops."""
+    out = {}
+    for name in dev.getdents("/c"):
+        path = f"/c/{name}"
+        size = dev.fstatat(path).st_size
+        fd = dev.open(path, "r")
+        out[name] = dev.pread(fd, size, 0)
+        dev.close(fd)
+    return out
+
+
+def run_write_bearing_program(dev, ops, exit_at, fa_kwargs, depth,
+                              abort: bool = False):
+    fa = Foreactor(device=dev, depth=depth, **fa_kwargs)
+    fa.register("wprog", lambda: build_write_program_graph("wprog", ops))
+    fds = [dev.open(f"/c/f{i}", "r" if i < N_RO else "rw")
+           for i in range(N_FILES)]
+    results = []
+
+    @fa.wrap("wprog", lambda: {"fds": fds})
+    def prog():
+        new_fds = {}
+        for op in ops[:exit_at]:
+            if op[0] == "pread":
+                results.append(io.pread(dev, fds[op[1]], op[2], op[3]))
+            elif op[0] == "pwrite":
+                io.pwrite(dev, fds[op[1]], _tok(op[2]), op[3] * 8)
+            elif op[0] == "open":
+                new_fds[op[1]] = io.open(dev, f"/c/new{op[1]}", "w")
+            elif op[0] == "wnew":
+                io.pwrite(dev, new_fds[op[1]], _tok(op[2]), op[3] * 8)
+            else:
+                io.close(dev, new_fds.pop(op[1]))
+        if abort:
+            raise RuntimeError("injected abort")
+
+    try:
+        prog()
+    except RuntimeError:
+        assert abort
+    finally:
+        stats = fa.total_stats
+        fa.shutdown()
+    for fd in fds:
+        dev.close(fd)
+    return results, namespace_snapshot(dev), stats
+
+
+_wrng = random.Random(20260731)
+WRITE_PROGRAMS = [random_write_program(_wrng, n) for n in (6, 10, 14, 18)]
+WRITE_PROGRAMS[1] = (WRITE_PROGRAMS[1][0], len(WRITE_PROGRAMS[1][0]))  # full run
+
+
+@pytest.mark.parametrize("depth", [1, 8, "adaptive"])
+@pytest.mark.parametrize("cfg", CONFIGS, ids=[c[0] for c in CONFIGS])
+@pytest.mark.parametrize("prog_idx", range(len(WRITE_PROGRAMS)))
+def test_write_bearing_program_conformance(cfg, depth, prog_idx):
+    """Committed namespace + read results byte-identical to sync at every
+    backend × depth, including weak-edge staged writes."""
+    _name, kind, kwargs = cfg
+    ops, exit_at = WRITE_PROGRAMS[prog_idx]
+    ref_res, ref_ns, ref_stats = run_write_bearing_program(
+        make_device(kind), ops, exit_at, dict(backend="sync"), 0)
+    res, ns, stats = run_write_bearing_program(
+        make_device(kind), ops, exit_at, kwargs, depth)
+    assert res == ref_res
+    assert ns == ref_ns
+    assert_ledger_invariant(stats)
+    assert_ledger_invariant(ref_stats)
+
+
+def _abortable_prefix(ops) -> int:
+    """Longest prefix containing no close (no publish barrier crossed):
+    aborting inside it must leave the namespace untouched."""
+    for i, op in enumerate(ops):
+        if op[0] == "close":
+            return max(1, i)
+    return len(ops)
+
+
+@pytest.mark.parametrize("depth", [0, 1, 8, "adaptive"])
+@pytest.mark.parametrize("cfg", CONFIGS, ids=[c[0] for c in CONFIGS])
+def test_abort_never_mutates_committed_namespace(cfg, depth):
+    """Fault path: a session that raises before any publish barrier rolls
+    back every write — demanded or speculative — on every backend."""
+    _name, kind, kwargs = cfg
+    ops, _ = WRITE_PROGRAMS[3]
+    exit_at = _abortable_prefix(ops)
+    dev = make_device(kind)
+    before = namespace_snapshot(dev)
+    _res, after, stats = run_write_bearing_program(
+        dev, ops, exit_at, kwargs, depth, abort=True)
+    assert after == before
     assert_ledger_invariant(stats)
 
 

@@ -87,6 +87,31 @@ def test_external_synchrony_stat_loop(backend):
 
 
 def test_weak_edge_blocks_nonpure():
+    """The paper's §3.3 rule, with staging off: a non-pure syscall behind a
+    weak edge is never pre-issued."""
+    dev = make_dev(2)
+    rfd = dev.open("/d/f0", "r")
+    wfd = dev.open("/w.out", "w")
+    fa = Foreactor(device=dev, backend="io_uring", depth=8, staging=False)
+    fa.register("weak_write", weak_write_graph)
+
+    @fa.wrap("weak_write", lambda: {"rfd": rfd, "wfd": wfd})
+    def f_early_exit():
+        io.pread(dev, rfd, 8, 0)
+        return "early"  # never issues the pwrite
+
+    f_early_exit()
+    # the pwrite was NOT pre-issued: /w.out must still be empty
+    assert dev.fstatat("/w.out").st_size == 0
+    assert fa.total_stats.pre_issued == 0  # nothing beyond the weak edge
+    fa.shutdown()
+
+
+def test_weak_edge_write_speculates_with_staging():
+    """With staging on (the default), the same weak-edge pwrite IS
+    pre-issued — as an undoable staged overwrite — and rolled back when the
+    early exit abandons it: identical committed state, one step more
+    overlap available."""
     dev = make_dev(2)
     rfd = dev.open("/d/f0", "r")
     wfd = dev.open("/w.out", "w")
@@ -99,9 +124,9 @@ def test_weak_edge_blocks_nonpure():
         return "early"  # never issues the pwrite
 
     f_early_exit()
-    # the pwrite was NOT pre-issued: /w.out must still be empty
+    # speculated, then undone: the committed namespace shows no trace
     assert dev.fstatat("/w.out").st_size == 0
-    assert fa.total_stats.pre_issued == 0  # nothing beyond the weak edge
+    assert fa.total_stats.pre_issued == 1  # the staged pwrite, beyond weak
     fa.shutdown()
 
 

@@ -1,0 +1,503 @@
+"""Undoable write-path speculation: staging extents, undo log, publish
+barriers (repro.store.staging), and the write-graph consumers built on them
+(checkpoint save graph, speculative record-shard writer, save_async
+join-or-raise semantics)."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.checkpoint.manager import CheckpointError
+from repro.core import (Effect, Foreactor, GraphBuilder, MemDevice, OSDevice,
+                        ShardedDevice, SimulatedDevice, Sys, effect_of, io)
+from repro.store.recordio import RecordShardReader, write_shard
+from repro.store.staging import STAGE_TAG, StagingTxn, staged_name
+
+
+# -- effect classification ----------------------------------------------------
+
+def test_effect_classes():
+    assert effect_of(Sys.PREAD, (3, 8, 0)) is Effect.PURE
+    assert effect_of(Sys.OPEN, ("/x", "r")) is Effect.PURE
+    assert effect_of(Sys.OPEN, ("/x", "w")) is Effect.UNDOABLE
+    assert effect_of(Sys.OPEN, ("/x", "rw")) is Effect.BARRIER
+    assert effect_of(Sys.OPEN, ("/x", "a")) is Effect.BARRIER
+    assert effect_of(Sys.PWRITE, (3, b"z", 0)) is Effect.UNDOABLE
+    assert effect_of(Sys.FSYNC, (3,)) is Effect.BARRIER
+    assert effect_of(Sys.CLOSE, (3,)) is Effect.BARRIER
+
+
+# -- device namespace operations ----------------------------------------------
+
+def _roundtrip(dev, prefix=""):
+    fd = dev.open(f"{prefix}/a/x", "w")
+    dev.pwrite(fd, b"hello world", 0)
+    # rename while the fd is open: writes keep landing in the new name
+    dev.rename(f"{prefix}/a/x", f"{prefix}/a/y")
+    dev.pwrite(fd, b"HELLO", 0)
+    dev.truncate(fd, 8)
+    dev.close(fd)
+    rfd = dev.open(f"{prefix}/a/y", "r")
+    got = dev.pread(rfd, 64, 0)
+    dev.close(rfd)
+    assert got == b"HELLO wo"
+    dev.unlink(f"{prefix}/a/y")
+    with pytest.raises(FileNotFoundError):
+        dev.fstatat(f"{prefix}/a/y")
+
+
+def test_memdevice_staging_ops():
+    assert MemDevice().supports_staging()
+    _roundtrip(MemDevice())
+
+
+def test_osdevice_staging_ops(tmp_path):
+    assert OSDevice().supports_staging()
+    _roundtrip(OSDevice(), prefix=str(tmp_path))
+
+
+def test_simulated_device_staging_ops():
+    dev = SimulatedDevice(MemDevice())
+    assert dev.supports_staging()
+    _roundtrip(dev)
+
+
+def test_sharded_device_staging_ops():
+    dev = ShardedDevice([MemDevice() for _ in range(3)])
+    assert dev.supports_staging()
+    # same-shard rename (explicit prefix): atomic fast path
+    fd = dev.open("shard1:/s/x", "w")
+    dev.pwrite(fd, b"abc", 0)
+    dev.close(fd)
+    dev.rename("shard1:/s/x", "shard1:/s/y")
+    rfd = dev.open("shard1:/s/y", "r")
+    assert dev.pread(rfd, 3, 0) == b"abc"
+    dev.close(rfd)
+    # cross-shard rename: copy fallback, source removed
+    dev.rename("shard1:/s/y", "shard2:/s/z")
+    rfd = dev.open("shard2:/s/z", "r")
+    assert dev.pread(rfd, 3, 0) == b"abc"
+    dev.close(rfd)
+    with pytest.raises(FileNotFoundError):
+        dev.fstatat("shard1:/s/y")
+
+
+def test_staged_name_colocates_on_shard():
+    dev = ShardedDevice([MemDevice() for _ in range(4)])
+    for path in ("/ck/shard_0001.bin", "shard2:/ck/shard_0002.bin", "/m.json"):
+        sn = staged_name(dev, path, "t0", 0)
+        assert dev.resolve(sn)[0] == dev.resolve(path)[0]
+        assert STAGE_TAG in sn
+
+
+# -- StagingTxn unit behaviour -------------------------------------------------
+
+def test_txn_create_publish_and_rollback():
+    dev = MemDevice()
+    txn = StagingTxn(dev)
+    runner, rec = txn.stage_create("/out/a.bin", "w")
+    fd = runner(dev)
+    dev.pwrite(fd, b"payload", 0)
+    # invisible at the final path until published
+    with pytest.raises(FileNotFoundError):
+        dev.fstatat("/out/a.bin")
+    txn.on_demand(rec)
+    dev.close(fd)
+    txn.on_close(fd)  # publish barrier
+    assert dev.fstatat("/out/a.bin").st_size == 7
+    # a second create that is never demanded rolls back at finalize
+    runner2, rec2 = txn.stage_create("/out/b.bin", "w")
+    fd2 = runner2(dev)
+    dev.pwrite(fd2, b"junk", 0)
+    txn.finalize(ok=True)
+    with pytest.raises(FileNotFoundError):
+        dev.fstatat("/out/b.bin")
+    assert not dev.getdents("/out") or dev.getdents("/out") == ["a.bin"]
+
+
+def test_txn_overwrite_rollback_restores_bytes_and_length():
+    dev = MemDevice()
+    fd = dev.open("/f.bin", "w")
+    dev.pwrite(fd, b"0123456789", 0)
+    txn = StagingTxn(dev)
+    runner, rec = txn.stage_overwrite((fd, b"XXXXXXXX", 6))  # extends to 14
+    runner(dev)
+    assert dev.pread(fd, 14, 0) == b"012345XXXXXXXX"
+    txn.finalize(ok=False)
+    # old bytes replayed, extension truncated away
+    assert dev.fstatat("/f.bin").st_size == 10
+    assert dev.pread(fd, 10, 0) == b"0123456789"
+
+
+def test_txn_abort_unwinds_all_creates():
+    dev = MemDevice()
+    txn = StagingTxn(dev)
+    fds = []
+    for i in range(3):
+        runner, rec = txn.stage_create(f"/d/f{i}", "w")
+        fd = runner(dev)
+        dev.pwrite(fd, b"x" * 8, 0)
+        txn.on_demand(rec)
+        fds.append(fd)
+    txn.finalize(ok=False)  # even demanded creates roll back on abort
+    assert dev.getdents("/d") == []
+    assert dev._files == {}
+    assert txn.snapshot()["undone"] == 3
+
+
+def test_publish_close_is_identity_checked():
+    """OS fd-number reuse: publishing one record's close barrier must never
+    pop or publish a newer staged create that recycled the same fd."""
+    dev = MemDevice()
+    txn = StagingTxn(dev)
+    r1, rec1 = txn.stage_create("/d/a", "w")
+    fd1 = r1(dev)
+    txn.on_demand(rec1)
+    dev.close(fd1)
+    # simulate the OS recycling fd1 for a second staged create
+    r2, rec2 = txn.stage_create("/d/b", "w")
+    fd2 = r2(dev)
+    with txn._lock:
+        del txn._staged_fds[fd2]
+        rec2.fd = fd1
+        txn._staged_fds[fd1] = rec2
+    txn.publish_close(rec1)  # rec1 resolved by identity at pre-issue time
+    assert rec1.published
+    assert not rec2.published
+    assert txn.record_for_fd(fd1) is rec2  # the newer mapping survives
+
+
+def test_rollback_continues_past_a_failing_undo():
+    """One failing undo must not abandon the rest of the rollback, and on
+    the abort path the failure surfaces as a warning (never replacing the
+    application's original exception)."""
+    import warnings as _warnings
+
+    dev = MemDevice()
+    txn = StagingTxn(dev)
+    fd = dev.open("/f", "w")
+    dev.pwrite(fd, b"0123456789", 0)
+    ro, rec_o = txn.stage_overwrite((fd, b"XXXX", 0))
+    ro(dev)
+    rc, rec_c = txn.stage_create("/d/c", "w")
+    fdc = rc(dev)
+    dev.pwrite(fdc, b"z", 0)
+    dev.close(fd)  # the overwrite's undo target fd is now invalid
+    with _warnings.catch_warnings(record=True) as caught:
+        _warnings.simplefilter("always")
+        txn.finalize(ok=False)
+    assert rec_c.undone  # the later create still rolled back
+    with pytest.raises(FileNotFoundError):
+        dev.fstatat("/d/c")
+    assert txn.rollback_errors  # the failure was recorded ...
+    assert any(issubclass(w.category, RuntimeWarning) for w in caught)
+
+
+# -- engine integration --------------------------------------------------------
+
+def _write_chain_graph(name, n, weak=True):
+    """n pwrite nodes to ctx fd, every edge weak (exit possible anywhere)."""
+    b = GraphBuilder(name)
+    prev = None
+    for i in range(n):
+        def args(ctx, ep, i=i):
+            return ((ctx["fd"], ctx["chunks"][i], i * 8), False)
+        b.AddSyscallNode(f"w{i}", Sys.PWRITE, args)
+        if prev is not None:
+            b.SyscallSetNext(prev, f"w{i}", weak=weak)
+        prev = f"w{i}"
+    b.SyscallSetNext(prev, None, weak=weak)
+    return b.Build()
+
+
+def test_early_exit_rolls_back_speculated_writes():
+    """Weak-edge writes pre-issue (staged) and the un-demanded suffix is
+    rolled back: committed bytes match what a serial run produced."""
+    dev = MemDevice()
+    fd = dev.open("/t.bin", "w")
+    dev.pwrite(fd, b"." * 64, 0)
+    chunks = [bytes([65 + i]) * 8 for i in range(8)]
+    fa = Foreactor(device=dev, backend="io_uring", depth=8)
+    fa.register("wchain", lambda: _write_chain_graph("wchain", 8))
+
+    @fa.wrap("wchain", lambda: {"fd": fd, "chunks": chunks})
+    def partial():
+        for i in range(3):  # exits early: writes 3..7 are speculation only
+            io.pwrite(dev, fd, chunks[i], i * 8)
+
+    partial()
+    fa.shutdown()
+    got = dev.pread(fd, 64, 0)
+    assert got == b"".join(chunks[:3]) + b"." * 40
+    assert fa.total_stats.pre_issued > 0
+
+
+def test_abort_rolls_back_demanded_writes_too():
+    """A raising session is a failed transaction: even writes the function
+    already issued are unwound — the committed namespace is untouched."""
+    dev = MemDevice()
+    fd = dev.open("/t.bin", "w")
+    dev.pwrite(fd, b"." * 64, 0)
+    chunks = [bytes([65 + i]) * 8 for i in range(8)]
+    fa = Foreactor(device=dev, backend="io_uring", depth=4)
+    fa.register("wchain", lambda: _write_chain_graph("wchain", 8))
+
+    @fa.wrap("wchain", lambda: {"fd": fd, "chunks": chunks})
+    def crashing():
+        for i in range(4):
+            io.pwrite(dev, fd, chunks[i], i * 8)
+        raise RuntimeError("boom")
+
+    with pytest.raises(RuntimeError):
+        crashing()
+    fa.shutdown()
+    assert dev.pread(fd, 64, 0) == b"." * 64
+
+
+def test_staged_create_publishes_at_close():
+    """An in-graph creating open lands in a staging extent; the file enters
+    the committed namespace exactly at the close barrier."""
+    dev = MemDevice()
+    b = GraphBuilder("create_write")
+
+    def open_args(ctx, ep):
+        return (("/pub/out.bin", "w"), False)
+
+    def open_save(ctx, ep, rc):
+        ctx["fd"] = rc
+        # mid-session: the final path must not exist yet (still staged)
+        try:
+            dev.fstatat("/pub/out.bin")
+            ctx["visible_early"] = True
+        except FileNotFoundError:
+            ctx["visible_early"] = False
+
+    def w_args(ctx, ep):
+        if "fd" not in ctx:
+            return None
+        return ((ctx["fd"], b"DATA", 0), False)
+
+    def w_save(ctx, ep, rc):
+        ctx["w_done"] = True
+
+    def c_args(ctx, ep):
+        if not ctx.get("w_done"):
+            return None
+        return ((ctx["fd"],), False)
+
+    b.AddSyscallNode("open", Sys.OPEN, open_args, open_save)
+    b.AddSyscallNode("w", Sys.PWRITE, w_args, w_save)
+    b.AddSyscallNode("close", Sys.CLOSE, c_args)
+    b.SyscallSetNext("open", "w")
+    b.SyscallSetNext("w", "close")
+    b.SyscallSetNext("close", None)
+    g = b.Build()
+
+    fa = Foreactor(device=dev, backend="io_uring", depth=4)
+    fa.register("create_write", lambda: g)
+    ctx = {}
+
+    @fa.wrap("create_write", lambda: ctx)
+    def run():
+        fd = io.open(dev, "/pub/out.bin", "w")
+        io.pwrite(dev, fd, b"DATA", 0)
+        io.close(dev, fd)
+
+    run()
+    fa.shutdown()
+    assert ctx["visible_early"] is False
+    rfd = dev.open("/pub/out.bin", "r")
+    assert dev.pread(rfd, 4, 0) == b"DATA"
+    dev.close(rfd)
+    # no staging residue anywhere in the directory
+    assert all(STAGE_TAG not in n for n in dev.getdents("/pub"))
+
+
+def test_staging_disabled_preserves_paper_rule():
+    """Foreactor(staging=False): undoable nodes behind weak edges are not
+    pre-issued (original §3.3 behaviour)."""
+    dev = MemDevice()
+    fd = dev.open("/t.bin", "w")
+    dev.pwrite(fd, b"." * 64, 0)
+    chunks = [bytes([65 + i]) * 8 for i in range(8)]
+    fa = Foreactor(device=dev, backend="io_uring", depth=8, staging=False)
+    fa.register("wchain", lambda: _write_chain_graph("wchain", 8))
+
+    @fa.wrap("wchain", lambda: {"fd": fd, "chunks": chunks})
+    def partial():
+        for i in range(3):
+            io.pwrite(dev, fd, chunks[i], i * 8)
+
+    partial()
+    fa.shutdown()
+    assert fa.total_stats.pre_issued == 0
+    assert dev.pread(dev.open("/t.bin", "r"), 64, 0) == \
+        b"".join(chunks[:3]) + b"." * 40
+
+
+# -- checkpoint save graph ----------------------------------------------------
+
+def _tree():
+    return {"w": np.arange(4096, dtype=np.float32),
+            "b": np.arange(256, dtype=np.float32)}
+
+
+@pytest.mark.parametrize("kind", ["flat", "sharded"])
+def test_ckpt_save_graph_roundtrip(kind):
+    dev = ShardedDevice([MemDevice() for _ in range(3)]) if kind == "sharded" \
+        else MemDevice()
+    fa = Foreactor(device=dev, depth=64)
+    mgr = CheckpointManager(dev, "/ck", fa=fa, num_shards=4,
+                            chunk_bytes=1024, keep=3)
+    tree = _tree()
+    mgr.save(7, tree, extra={"epoch": 1})
+    assert fa.total_stats.pre_issued > 0  # the save speculated
+    assert mgr.committed_steps() == [7]
+    flat, extra = mgr.restore(7)
+    assert extra == {"epoch": 1}
+    assert np.array_equal(flat["['w']"], tree["w"])
+    assert np.array_equal(flat["['b']"], tree["b"])
+    fa.shutdown()
+
+
+def test_ckpt_save_bytes_identical_to_serial():
+    """The speculated write graph commits byte-identical shard files,
+    manifest and marker to the sync (serial) execution of the same save."""
+    def run(backend, depth):
+        dev = MemDevice()
+        fa = Foreactor(device=dev, backend=backend, depth=depth)
+        mgr = CheckpointManager(dev, "/ck", fa=fa, num_shards=4,
+                                chunk_bytes=512, keep=3)
+        mgr.save(3, _tree())
+        fa.shutdown()
+        return {p: bytes(buf) for p, buf in dev._files.items()}
+
+    serial = run("sync", 0)
+    spec = run("io_uring", 64)
+    assert serial == spec
+
+
+def test_ckpt_save_abort_leaves_no_trace():
+    """A save that dies mid-graph must not leave a committed step NOR any
+    partial file in the step directory."""
+    dev = MemDevice()
+    fa = Foreactor(device=dev, depth=64)
+    mgr = CheckpointManager(dev, "/ck", fa=fa, num_shards=4,
+                            chunk_bytes=512, keep=3)
+    tree = _tree()
+    mgr.save(1, tree)  # a good step to fall back to
+
+    boom = {"n": 0}
+    orig_fsync = type(dev).fsync
+
+    def failing_fsync(self, fd):
+        boom["n"] += 1
+        if boom["n"] > 2:
+            raise OSError("EIO: injected")
+        return orig_fsync(self, fd)
+
+    type(dev).fsync = failing_fsync
+    try:
+        with pytest.raises((OSError, RuntimeError)):
+            mgr.save(2, tree)
+    finally:
+        type(dev).fsync = orig_fsync
+    assert mgr.committed_steps() == [1]
+    # nothing of step 2 in the committed namespace: no marker, no manifest,
+    # no staged residue
+    leftover = [p for p in dev._files if "step_0000000002" in p]
+    assert leftover == [], leftover
+    # and step 1 still restores
+    assert mgr.restore_latest() is not None
+    fa.shutdown()
+
+
+# -- save_async join-or-raise (regression) ------------------------------------
+
+def test_save_async_joins_inflight_thread():
+    """A second save_async while the first is in flight must join it, not
+    overwrite/orphan its thread."""
+    dev = MemDevice()
+    fa = Foreactor(device=dev, depth=32)
+    mgr = CheckpointManager(dev, "/ck", fa=fa, num_shards=2,
+                            chunk_bytes=512, keep=5)
+    gate = threading.Event()
+    orig_save = mgr.save
+    order = []
+
+    def slow_save(step, tree, extra=None):
+        order.append(("start", step))
+        if step == 10:
+            gate.wait(timeout=5)
+        orig_save(step, tree, extra)
+        order.append(("end", step))
+
+    mgr.save = slow_save
+    tree = _tree()
+    mgr.save_async(10, tree)
+    t = threading.Thread(target=lambda: (time.sleep(0.05), gate.set()))
+    t.start()
+    mgr.save_async(20, tree)  # must block until save 10 finished
+    t.join()
+    mgr.wait_pending()
+    fa.shutdown()
+    assert order.index(("end", 10)) < order.index(("start", 20))
+    assert sorted(mgr.committed_steps()) == [10, 20]
+
+
+def test_save_async_surfaces_prior_error():
+    """If the in-flight save failed, the *next* save_async raises its error
+    instead of silently dropping it."""
+    dev = MemDevice()
+    fa = Foreactor(device=dev, depth=32)
+    mgr = CheckpointManager(dev, "/ck", fa=fa, num_shards=2,
+                            chunk_bytes=512, keep=5)
+
+    def bad_save(step, tree, extra=None):
+        raise OSError("ENOSPC: injected")
+
+    good_save = mgr.save
+    mgr.save = bad_save
+    mgr.save_async(10, _tree())
+    mgr.save = good_save
+    with pytest.raises(CheckpointError, match="ENOSPC"):
+        mgr.save_async(20, _tree())
+    # the manager is usable again afterwards
+    mgr.save_async(30, _tree())
+    mgr.wait_pending()
+    fa.shutdown()
+    assert mgr.committed_steps() == [30]
+
+
+# -- speculative record-shard writer -------------------------------------------
+
+def test_write_shard_speculative_matches_serial():
+    records = [bytes([i]) * 32 for i in range(20)]
+    dev_a, dev_b = MemDevice(), MemDevice()
+    write_shard(dev_a, "/data/s.rio", records)  # serial
+    fa = Foreactor(device=dev_b, backend="io_uring", depth=32)
+    write_shard(dev_b, "/data/s.rio", records, fa=fa)  # one write_file graph
+    assert fa.total_stats.pre_issued > 0
+    fa.shutdown()
+    assert bytes(dev_a._files["/data/s.rio"]) == bytes(dev_b._files["/data/s.rio"])
+    r = RecordShardReader(dev_b, "/data/s.rio")
+    assert list(r) == records
+    r.close()
+
+
+def test_write_shard_speculative_abort_leaves_no_file():
+    dev = MemDevice()
+    fa = Foreactor(device=dev, backend="io_uring", depth=32)
+    records = [bytes([i]) * 32 for i in range(20)]
+    orig = type(dev).fsync
+    type(dev).fsync = lambda self, fd: (_ for _ in ()).throw(OSError("EIO"))
+    try:
+        with pytest.raises(OSError):
+            write_shard(dev, "/data/s.rio", records, fa=fa)
+    finally:
+        type(dev).fsync = orig
+    fa.shutdown()
+    assert dev._files == {}, list(dev._files)

@@ -16,6 +16,20 @@ FAST = DeviceProfile(channels=16, base_latency=8e-4, metadata_latency=6e-4,
                      crossing_cost=3e-6)
 
 
+def best_of(fn, repeats=3):
+    """Best-of-N wall time: a single-shot measurement on a loaded CI
+    container conflates OS scheduler noise (and cold worker-pool setup)
+    with the effect under test; the min filters it, exactly like
+    ``benchmarks.common.timeit_min``."""
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
 def test_speculation_speeds_up_stat_loop():
     """Fig. 6(a) direction: du with pre-issuing beats serial du, and the
     result is identical."""
@@ -29,8 +43,8 @@ def test_speculation_speeds_up_stat_loop():
     plugins.register_all(fa)
     wrapped = fa.wrap("du", plugins.capture_du)(du_dir)
 
-    t0 = time.perf_counter(); expect = du_dir(dev, "/d"); t_sync = time.perf_counter() - t0
-    t0 = time.perf_counter(); got = wrapped(dev, "/d"); t_fa = time.perf_counter() - t0
+    expect, t_sync = best_of(lambda: du_dir(dev, "/d"))
+    got, t_fa = best_of(lambda: wrapped(dev, "/d"))
     assert got == expect
     assert t_fa < t_sync * 0.55, (t_fa, t_sync)  # paper reports up to 50%
     fa.shutdown()
@@ -58,14 +72,16 @@ def test_speculation_speeds_up_lsm_get():
     get = fa.wrap("lsm_get", plugins.capture_lsm_get)(lambda l, k: l.get(k))
     keys = [int(k) for k in rng.choice(1500, 40)]
 
-    t0 = time.perf_counter()
-    for k in keys:
-        assert lsm_sim.get(k) == ref[k]
-    t_sync = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    for k in keys:
-        assert get(lsm_sim, k) == ref[k]
-    t_fa = time.perf_counter() - t0
+    def run_sync():
+        for k in keys:
+            assert lsm_sim.get(k) == ref[k]
+
+    def run_fa():
+        for k in keys:
+            assert get(lsm_sim, k) == ref[k]
+
+    _, t_sync = best_of(run_sync, repeats=2)
+    _, t_fa = best_of(run_fa, repeats=2)
     assert t_fa < t_sync, (t_fa, t_sync)
     fa.shutdown()
 

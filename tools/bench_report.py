@@ -1,0 +1,225 @@
+#!/usr/bin/env python3
+"""Render docs/BENCHMARKS.md from benchmarks/results/*.json.
+
+The performance-trajectory doc is *generated*, never hand-copied: every
+table is a deterministic function of the committed result files, so the doc
+cannot drift from the numbers.  Regenerate after re-running a benchmark::
+
+    python tools/bench_report.py            # rewrite docs/BENCHMARKS.md
+    python tools/bench_report.py --check    # CI: fail if the doc is stale
+
+Each known result file (sharding, adaptive, serve, write) has a renderer;
+unknown result files are listed so they are never silently dropped.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS = os.path.join(REPO, "benchmarks", "results")
+DOC = os.path.join(REPO, "docs", "BENCHMARKS.md")
+
+HEADER = """\
+# Benchmark trajectory
+
+Performance results across this repository's PR sequence, rendered from the
+committed result files in `benchmarks/results/` by `tools/bench_report.py`
+(CI runs `tools/bench_report.py --check`, so this document cannot drift from
+the numbers).  Every benchmark runs on `SimulatedDevice` (deterministic
+Fig.-1 cost model) inside a CI container; see each `benchmarks/bench_*.py`
+section header for the workload details and the exact device profile.
+
+Regenerate with:
+
+```sh
+PYTHONPATH=src python -m benchmarks.bench_<name>   # refresh one result file
+python tools/bench_report.py                       # re-render this document
+```
+"""
+
+
+def _load(name: str) -> Optional[Dict]:
+    path = os.path.join(RESULTS, f"{name}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def _table(headers: List[str], rows: List[List[str]]) -> List[str]:
+    out = ["| " + " | ".join(headers) + " |",
+           "|" + "|".join("---" for _ in headers) + "|"]
+    out += ["| " + " | ".join(r) + " |" for r in rows]
+    return out
+
+
+def _ms(seconds: float) -> str:
+    return f"{seconds * 1e3:.1f}"
+
+
+def render_sharding(d: Dict) -> List[str]:
+    out = ["## Multi-device sharding (`benchmarks/bench_sharding.py`)", ""]
+    out.append("Aggregate bandwidth (MB/s) vs device count: one queue pair "
+               "per sub-device (`multi_queue`) against one global queue pair "
+               "(`io_uring`) and the serial baseline (`sync`).")
+    for section in ("restore", "pipeline"):
+        sec = d[section]
+        counts = [str(n) for n in sec["config"]["device_counts"]]
+        rows = []
+        for backend in ("sync", "io_uring", "multi_queue"):
+            rows.append([f"`{backend}`"] +
+                        [f"{sec[backend][n]['bandwidth_mb_s']:.2f}"
+                         for n in counts])
+        out += ["", f"### {section}", ""]
+        out += _table(["backend \\ devices"] + counts, rows)
+        out += ["",
+                f"Multi-queue speedup at 4 devices: "
+                f"**{sec['speedup_multi_queue_4dev']:.2f}x** over 1 device."]
+    return out
+
+
+def render_adaptive(d: Dict) -> List[str]:
+    out = ["## Adaptive speculation depth (`benchmarks/bench_adaptive.py`)",
+           "",
+           "Wall seconds per workload: fixed depths vs the "
+           "`DepthController`; adaptive must match the best fixed depth "
+           "without knowing it in advance."]
+    depths = [str(x) for x in d["config"]["fixed_depths"]]
+    rows = []
+    for wl in ("stat_batch", "scan_deep", "search_early_exit"):
+        s = d["summary"][wl]
+        rows.append([f"`{wl}`"] +
+                    [_ms(d[wl][x]["seconds"]) for x in depths] +
+                    [_ms(d[wl]["adaptive"]["seconds"]),
+                     str(s["best_fixed_depth"]),
+                     f"{s['worst_vs_adaptive']:.1f}x"])
+    out += [""]
+    out += _table(["workload \\ depth (ms)"] + depths +
+                  ["adaptive", "best fixed", "vs worst"], rows)
+    return out
+
+
+def render_serve(d: Dict) -> List[str]:
+    s = d["summary"]
+    out = ["## Multi-tenant serving (`benchmarks/bench_serve.py`)", "",
+           "Closed-loop clients on one shared backend (`shared=True`, slot "
+           "scheduler) vs per-thread isolated queue pairs vs sync."]
+    counts = sorted(d["sweep"], key=int)
+    rows = []
+    for mode in ("sync", "isolated", "shared"):
+        row = [f"`{mode}`"]
+        for n in counts:
+            cell = d["sweep"][n][mode]
+            p99 = cell["classes"]["high"]["p99_ms"]
+            row.append(f"{cell['throughput_ops']:.0f} ops/s, "
+                       f"p99 {p99:.1f} ms")
+        rows.append(row)
+    out += [""]
+    out += _table(["mode \\ clients"] + counts, rows)
+    out += ["",
+            f"At {s['clients']} clients: shared p99 is "
+            f"**{s['shared_p99_speedup']:.2f}x** better than sync, "
+            f"throughput within "
+            f"{(1 - s['shared_tput_vs_isolated']) * 100:.0f}% of isolated; "
+            f"high-priority p99 moves "
+            f"{s['high_pri_p99_delta'] * 100:+.0f}% under low-priority "
+            f"restore load."]
+    return out
+
+
+def render_write(d: Dict) -> List[str]:
+    save = d["save"]
+    out = ["## Write-path speculation (`benchmarks/bench_write.py`)", "",
+           "Undoable writes (staging extents + undo log + publish "
+           "barriers) let the engine pre-issue the whole checkpoint-save "
+           "chain; `serial` is the pre-staging write path (sync backend)."]
+    counts = [str(n) for n in save["config"]["shard_counts"]]
+    rows = []
+    for mode in save["config"]["modes"]:
+        rows.append([f"`{mode}`"] +
+                    [_ms(save[mode][n]["seconds"]) for n in counts])
+    out += ["", "### Checkpoint save (ms per save)", ""]
+    out += _table(["mode \\ shards"] + counts, rows)
+    out += ["",
+            f"Best speculated save at 4 shards: "
+            f"**{save['speedup_4shards']:.2f}x** faster than the serial "
+            f"write path (acceptance gate: >= 1.5x)."]
+    rs = d["record_shard"]
+    out += ["", "### Record-shard write (`write_shard`)", ""]
+    out += _table(["path", "seconds", "MB/s"], [
+        ["serial append loop", f"{rs['serial']['seconds']:.3f}",
+         f"{rs['serial']['mb_per_s']:.1f}"],
+        ["`write_file` graph", f"{rs['spec']['seconds']:.3f}",
+         f"{rs['spec']['mb_per_s']:.1f}"],
+    ])
+    out += ["", f"Speedup: **{rs['speedup']:.2f}x**."]
+    wb = d["write_behind"]
+    out += ["", "### Write-behind checkpointing", ""]
+    out += _table(["mode", "wall (s)", "train-thread stall (s)"], [
+        ["serial saves", f"{wb['serial']['wall_seconds']:.2f}",
+         f"{wb['serial']['stall_seconds']:.2f}"],
+        ["write-behind", f"{wb['write_behind']['wall_seconds']:.2f}",
+         f"{wb['write_behind']['stall_seconds']:.2f}"],
+    ])
+    out += ["",
+            f"Overlapping the speculated save graph with step compute cuts "
+            f"the training-thread stall to "
+            f"{wb['stall_ratio'] * 100:.0f}% of the serial path's."]
+    return out
+
+
+RENDERERS = [
+    ("sharding", render_sharding),
+    ("adaptive", render_adaptive),
+    ("serve", render_serve),
+    ("write", render_write),
+]
+
+
+def generate() -> str:
+    parts = [HEADER]
+    known = {name for name, _ in RENDERERS}
+    for name, renderer in RENDERERS:
+        d = _load(name)
+        if d is None:
+            parts.append(f"## {name}\n\n*(no committed results — run "
+                         f"`python -m benchmarks.bench_{name}`)*")
+            continue
+        parts.append("\n".join(renderer(d)))
+    extras = sorted(
+        f[:-5] for f in os.listdir(RESULTS)
+        if f.endswith(".json") and f[:-5] not in known
+    ) if os.path.isdir(RESULTS) else []
+    if extras:
+        parts.append("## Other result files\n\n" +
+                     "\n".join(f"* `benchmarks/results/{e}.json` (no "
+                               f"renderer yet)" for e in extras))
+    return "\n\n".join(parts) + "\n"
+
+
+def main(argv: List[str]) -> int:
+    text = generate()
+    if "--check" in argv:
+        if not os.path.exists(DOC):
+            print(f"{DOC}: missing — run python tools/bench_report.py")
+            return 1
+        with open(DOC) as f:
+            on_disk = f.read()
+        if on_disk != text:
+            print("docs/BENCHMARKS.md is stale: regenerate with "
+                  "`python tools/bench_report.py`")
+            return 1
+        print("ok: docs/BENCHMARKS.md matches benchmarks/results/*.json")
+        return 0
+    with open(DOC, "w") as f:
+        f.write(text)
+    print(f"wrote {DOC}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -5,8 +5,12 @@ embeds a ``dot`` graph that no buildable graph renders.
 Two checks per markdown file:
 
 1. **Path/module references** — path-like references (``src/...``,
-   ``tests/...``, ...) and dotted module names (``repro.core.engine``)
-   must exist in the working tree.
+   ``tests/...``, ...) must exist in the working tree, and dotted
+   references (``repro.core.engine``, ``repro.core.engine.SpecSession``,
+   ``repro.store.staging.StagingTxn.finalize``) must resolve against the
+   *importable* tree: the longest filesystem prefix is imported and the
+   remaining components are walked with ``getattr`` — a renamed class or
+   deleted method dangles even though its module file survives.
 2. **Fenced ``dot`` blocks** — every ```` ```dot ```` block must parse
    against the ``to_dot()`` line grammar *and* byte-for-byte match the
    ``to_dot()`` output of a buildable graph (the hand-written plugin
@@ -45,7 +49,8 @@ DOT_LINE_RES = [
 #: paths docs may legitimately reference before they exist at check time
 GENERATED = {"benchmarks/results/sharding.json",
              "benchmarks/results/adaptive.json",
-             "benchmarks/results/serve.json"}
+             "benchmarks/results/serve.json",
+             "benchmarks/results/write.json"}
 
 
 def _buildable_dots() -> dict:
@@ -95,16 +100,40 @@ def check_dot_blocks(path: str, get_dots) -> list:
     return problems
 
 
-def module_exists(dotted: str) -> bool:
-    parts = dotted.split(".")
-    # Trailing CapitalCase components are class/constant attributes
-    # (repro.core.device.ShardedDevice); strip those. A lowercase tail is a
-    # module name and must resolve — otherwise a deleted module would pass as
-    # long as its parent package survives.
-    while len(parts) > 1 and not parts[-1][:1].islower():
-        parts = parts[:-1]
+def _fs_exists(parts) -> bool:
     base = os.path.join(REPO, "src", *parts)
     return os.path.isfile(base + ".py") or os.path.isdir(base)
+
+
+def module_exists(dotted: str) -> bool:
+    """Resolve ``repro[.module]*[.Symbol[.attr]*]`` against the importable
+    tree: find the longest prefix that is a module/package on disk, import
+    it, then getattr-walk the remainder.  ``repro.core.engine.SpecSession``
+    dangles if the class is renamed; ``repro.core.api.io.pwrite`` dangles if
+    the method is dropped — not just when whole files disappear."""
+    parts = dotted.split(".")
+    k = len(parts)
+    while k > 1 and not _fs_exists(parts[:k]):
+        k -= 1
+    if not _fs_exists(parts[:k]):
+        return False
+    if k == len(parts):
+        return True
+    import importlib
+
+    src = os.path.join(REPO, "src")
+    if src not in sys.path:
+        sys.path.insert(0, src)
+    try:
+        obj = importlib.import_module(".".join(parts[:k]))
+    except Exception as e:  # import failure = the reference cannot resolve
+        print(f"  (import {'.'.join(parts[:k])} failed: {e!r})")
+        return False
+    for attr in parts[k:]:
+        if not hasattr(obj, attr):
+            return False
+        obj = getattr(obj, attr)
+    return True
 
 
 def check(path: str) -> list:
