@@ -89,3 +89,12 @@ def bench_backends(n: int = 60000, degree: int = 510) -> List[Row]:
 
 def run() -> List[Row]:
     return bench_scan_load() + bench_backends()
+
+
+if __name__ == "__main__":
+    # standalone entry point, same CSV shape as benchmarks.run
+    from .common import fmt
+
+    print("name,us_per_call,derived")
+    for line in fmt(run()):
+        print(line, flush=True)

@@ -1,25 +1,72 @@
 """Paper Fig. 10: latency/overhead factor breakdown of a speculated Get,
-plus the framework-plane benchmarks (checkpoint restore, data pipeline)."""
+the framework-plane benchmarks (checkpoint restore, data pipeline), and the
+engine-overhead microbenchmarks that gate the compiled-plan refactor:
+
+* **Peek algorithm** — Algorithm 1's interpretation cost per intercepted
+  syscall, isolated on the sync backend (no workers, no simulated latency,
+  no GIL contention: ``peek_seconds`` is the pure walk + request-build +
+  submit-bookkeeping cost).  Three authoring styles: the lsm_get plugin
+  graph (branch + weak loop), a mined-style all-weak 24-node chain, and the
+  strong-edge extent loop.  The committed pre-refactor baseline
+  (:data:`PRE_REFACTOR_BASELINE`, measured at the object-walker commit with
+  this exact harness) is what the acceptance gate compares against.
+* **Result copy** — end-to-end result delivery through the I/O plane with
+  the registered buffer pool on vs off: N preads submitted in one batch,
+  drained, materialized.  Pool off is the classic allocate-per-request
+  path; pool on leases registered buffers (``pread_into``) and pays one
+  bounded memcpy at ``take_result``.
+
+``python -m benchmarks.bench_overhead`` writes
+``benchmarks/results/overhead.json`` (rendered into docs/BENCHMARKS.md by
+``tools/bench_report.py``).  ``--dry-run`` runs only the fast
+microbenchmarks; with ``--check`` it compares the fresh measurement against
+the committed results and exits nonzero on a peek-overhead regression
+(soft threshold — CI variance is real; the perf-smoke job adds the hard
+timeout).
+"""
 
 from __future__ import annotations
 
+import json
+import os
+import sys
 import time
-from typing import List
+from typing import Dict, List
 
 import numpy as np
 
-from repro.checkpoint import CheckpointManager
-from repro.core import Foreactor, MemDevice
-from repro.data import DataConfig, ShardedTokenDataset, TokenBatchLoader, write_synthetic_dataset
+from repro.core import Foreactor, GraphBuilder, MemDevice, QueuePairBackend, Sys, io
+from repro.core.patterns import build_pread_extents_graph
+from repro.core.syscalls import IORequest
 from repro.store import plugins
-
-from .bench_lsm import build_db
-from .common import Row, sim, timeit
 from repro.store.lsm import LSMTree
 
+from .common import Row, sim, timeit
 
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), "results",
+                            "overhead.json")
+
+#: Peek-algorithm overhead of the pre-refactor object-graph walker,
+#: measured at commit 10329d0 (the last commit before the compiled-plan
+#: refactor) with exactly the ``peek_*`` harness below (sync backend,
+#: MemDevice, depth 16, best of 5).  Committed so the acceptance gate —
+#: plan interpreter >= 2x cheaper per speculated Get — and the CI
+#: perf-smoke job always have a fixed denominator.
+PRE_REFACTOR_BASELINE: Dict[str, float] = {
+    "lsm_get_us_per_get": 237.88,
+    "lsm_get_us_per_intercept": 43.37,
+    "weak_chain_us_per_intercept": 31.10,
+    "extent_loop_us_per_intercept": 18.24,
+}
+
+
+# ---------------------------------------------------------------------------
+# Fig. 10 breakdown + framework plane (simulated device, end to end)
+# ---------------------------------------------------------------------------
 def bench_get_breakdown(n_ops: int = 60) -> List[Row]:
     """Fig. 10: where time goes inside speculated Gets (engine stats)."""
+    from .bench_lsm import build_db
+
     inner, ref, db_bytes = build_db(n_keys=2000, record=1024)
     dev = sim(inner, cache_bytes=db_bytes // 10)
     fa = Foreactor(device=dev, backend="io_uring", depth=16)
@@ -47,6 +94,8 @@ def bench_get_breakdown(n_ops: int = 60) -> List[Row]:
 
 def bench_checkpoint(n_mb: int = 24) -> List[Row]:
     """Framework plane: parallel checkpoint save/restore vs serial."""
+    from repro.checkpoint import CheckpointManager
+
     rng = np.random.default_rng(0)
     tree = {f"layer{i}": rng.normal(size=(n_mb * 1024 * 1024 // 4 // 8,))
             .astype(np.float32) for i in range(8)}
@@ -69,6 +118,9 @@ def bench_checkpoint(n_mb: int = 24) -> List[Row]:
 
 def bench_pipeline(steps: int = 8) -> List[Row]:
     """Framework plane: batch-load latency with/without speculation."""
+    from repro.data import (DataConfig, ShardedTokenDataset, TokenBatchLoader,
+                            write_synthetic_dataset)
+
     rows: List[Row] = []
     cfg = DataConfig(seq_len=512, batch_size=32, seed=0)
     inner = MemDevice()
@@ -90,5 +142,268 @@ def bench_pipeline(steps: int = 8) -> List[Row]:
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Peek-algorithm microbenchmarks (sync backend: pure Algorithm-1 cost)
+# ---------------------------------------------------------------------------
+def peek_lsm_get(n_ops: int = 400, depth: int = 16) -> Dict[str, float]:
+    """The paper's Get workload: branchy plugin graph, weak early-exit loop."""
+    from .bench_lsm import build_db
+
+    inner, _ref, _db = build_db(n_keys=2000, record=1024)
+    fa = Foreactor(device=inner, backend="sync", depth=depth)
+    plugins.register_all(fa)
+    lsm = LSMTree.open_existing(inner, "/db")
+    get = fa.wrap("lsm_get", plugins.capture_lsm_get)(lambda l, k: l.get(k))
+    keys = np.random.default_rng(0).integers(0, 2000, n_ops)
+    for k in keys[:20]:
+        get(lsm, int(k))  # warmup: build + compile cached, pool warmed
+    s0 = fa.total_stats.peek_seconds
+    i0 = fa.total_stats.intercepted
+    for k in keys:
+        get(lsm, int(k))
+    s = fa.total_stats
+    out = {
+        "lsm_get_us_per_get": (s.peek_seconds - s0) / n_ops * 1e6,
+        "lsm_get_us_per_intercept":
+            (s.peek_seconds - s0) / (s.intercepted - i0) * 1e6,
+    }
+    lsm.close()
+    fa.shutdown()
+    return out
+
+
+def _build_chain(name: str, n_steps: int, size: int):
+    b = GraphBuilder(name)
+    prev = None
+    for i in range(n_steps):
+        b.AddSyscallNode(f"s{i}", Sys.PREAD,
+                         lambda ctx, ep, i=i: ((ctx["fd"], size, 0), False))
+        if prev is not None:
+            b.SyscallSetNext(prev, f"s{i}", weak=True)
+        prev = f"s{i}"
+    b.SyscallSetNext(prev, None, weak=True)
+    return b.Build()
+
+
+def peek_weak_chain(n_calls: int = 150, n_steps: int = 24, size: int = 256,
+                    depth: int = 16) -> Dict[str, float]:
+    """Mined-style all-weak chain: the authoring style that defeated the
+    old walker's sliding window (it re-walked the whole window per call)."""
+    dev = MemDevice()
+    fd = dev.open("/w/f", "w")
+    dev.pwrite(fd, bytes(size), 0)
+    dev.close(fd)
+    fa = Foreactor(device=dev, backend="sync", depth=depth)
+    fa.register("chain", lambda: _build_chain("chain", n_steps, size))
+    rfd = dev.open("/w/f", "r")
+
+    @fa.wrap("chain", lambda: {"fd": rfd})
+    def prog():
+        for _ in range(n_steps):
+            io.pread(dev, rfd, size, 0)
+
+    for _ in range(10):
+        prog()
+    s0, i0 = fa.total_stats.peek_seconds, fa.total_stats.intercepted
+    for _ in range(n_calls):
+        prog()
+    s = fa.total_stats
+    out = {"weak_chain_us_per_intercept":
+           (s.peek_seconds - s0) / (s.intercepted - i0) * 1e6}
+    fa.shutdown()
+    return out
+
+
+def peek_extent_loop(n_calls: int = 150, n_extents: int = 64,
+                     size: int = 256, depth: int = 16) -> Dict[str, float]:
+    """Strong-edge pread loop (restore shape): already amortized O(1) under
+    the sliding window; measures the interpreter's constant factor."""
+    dev = MemDevice()
+    fd = dev.open("/e/data", "w")
+    dev.pwrite(fd, bytes(n_extents * size), 0)
+    dev.close(fd)
+    fa = Foreactor(device=dev, backend="sync", depth=depth)
+    fa.register("extents", lambda: build_pread_extents_graph("extents"))
+    rfd = dev.open("/e/data", "r")
+    extents = [(rfd, size, i * size) for i in range(n_extents)]
+
+    @fa.wrap("extents", lambda: {"extents": extents})
+    def prog():
+        for (f, s_, off) in extents:
+            io.pread(dev, f, s_, off)
+
+    for _ in range(10):
+        prog()
+    s0, i0 = fa.total_stats.peek_seconds, fa.total_stats.intercepted
+    for _ in range(n_calls):
+        prog()
+    s = fa.total_stats
+    out = {"extent_loop_us_per_intercept":
+           (s.peek_seconds - s0) / (s.intercepted - i0) * 1e6}
+    fa.shutdown()
+    return out
+
+
+def measure_peek(repeats: int = 5) -> Dict[str, float]:
+    """Best-of-N for each workload (min sheds CI scheduler noise)."""
+    out: Dict[str, float] = {}
+    for fn in (peek_lsm_get, peek_weak_chain, peek_extent_loop):
+        runs = [fn() for _ in range(repeats)]
+        best = min(runs, key=lambda r: next(iter(r.values())))
+        out.update(best)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Result-copy microbenchmark (registered buffer pool on vs off)
+# ---------------------------------------------------------------------------
+def measure_result_copy(n: int = 512, size: int = 64 * 1024,
+                        workers: int = 4, repeats: int = 5) -> Dict:
+    """End-to-end result delivery through the plane: submit N preads in one
+    batch, drain, materialize every result.  Pool off allocates a fresh
+    result per request (bytearray slice + bytes pair on MemDevice); pool on
+    fills recycled registered buffers and pays one memcpy at take."""
+    out: Dict = {"config": {"n": n, "size_bytes": size, "workers": workers,
+                            "repeats": repeats}}
+    for pool_on in (False, True):
+        dev = MemDevice()
+        fd = dev.open("/big", "w")
+        dev.pwrite(fd, b"\xab" * (n * size), 0)
+        dev.close(fd)
+        be = QueuePairBackend(dev, workers=workers)
+        if not pool_on:
+            be.pool = None
+        rfd = dev.open("/big", "r")
+        best = float("inf")
+        for _ in range(repeats):
+            reqs = [IORequest(sc=Sys.PREAD, args=(rfd, size, i * size))
+                    for i in range(n)]
+            t0 = time.perf_counter()
+            be.submit(reqs)
+            be.drain()
+            delivered = [r.take_result() for r in reqs]
+            best = min(best, time.perf_counter() - t0)
+            assert all(len(d) == size for d in delivered)
+            for r in reqs:
+                if r.lease is not None:
+                    r.lease.release()
+        key = "pool_on" if pool_on else "pool_off"
+        out[key] = {"us_per_op": best / n * 1e6}
+        if pool_on and be.pool is not None:
+            out[key].update({"hit_rate": round(be.pool.hit_rate, 3),
+                             "registered_mb":
+                                 be.pool.registered_bytes / (1 << 20)})
+        be.shutdown()
+    out["speedup"] = out["pool_off"]["us_per_op"] / out["pool_on"]["us_per_op"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Structured results + the CI gate
+# ---------------------------------------------------------------------------
+def collect(dry_run: bool = False) -> Dict:
+    peek = measure_peek(repeats=3 if dry_run else 5)
+    copy = measure_result_copy(n=128 if dry_run else 512,
+                               repeats=3 if dry_run else 5)
+    base = PRE_REFACTOR_BASELINE
+    result = {
+        "config": {
+            "methodology": "sync-backend isolated peek (pure Algorithm-1 "
+                           "cost), MemDevice, depth 16, best-of-N; "
+                           "result delivery via QueuePairBackend",
+            "baseline_commit": "10329d0 (pre-refactor object walker)",
+            "dry_run": dry_run,
+        },
+        "peek": {
+            "baseline": dict(base),
+            "plan": peek,
+            "speedup_lsm_get_per_get":
+                base["lsm_get_us_per_get"] / peek["lsm_get_us_per_get"],
+            "speedup_weak_chain":
+                base["weak_chain_us_per_intercept"]
+                / peek["weak_chain_us_per_intercept"],
+            "speedup_extent_loop":
+                base["extent_loop_us_per_intercept"]
+                / peek["extent_loop_us_per_intercept"],
+        },
+        "result_copy": copy,
+    }
+    return result
+
+
+def check(fresh: Dict, committed: Dict) -> List[str]:
+    """Perf-smoke gate: the fresh dry-run measurement must not regress
+    against the committed results.  Soft thresholds (CI containers are
+    noisy; the job's hard timeout catches pathological hangs):
+
+    * peek per speculated Get must stay >= 1.5x under the pre-refactor
+      baseline (the acceptance criterion was 2x at measurement time);
+    * each peek workload must stay within 3x of its committed value;
+    * pooled result delivery must not be slower than unpooled.
+    """
+    errs = []
+    base = committed["peek"]["baseline"]
+    plan = committed["peek"]["plan"]
+    got = fresh["peek"]["plan"]
+    if got["lsm_get_us_per_get"] > base["lsm_get_us_per_get"] / 1.5:
+        errs.append(
+            f"peek regressed: {got['lsm_get_us_per_get']:.1f} us/get vs "
+            f"pre-refactor baseline {base['lsm_get_us_per_get']:.1f} "
+            "(must stay >= 1.5x under it)")
+    for key in got:
+        if key in plan and got[key] > plan[key] * 3:
+            errs.append(f"peek {key}: {got[key]:.1f} us vs committed "
+                        f"{plan[key]:.1f} us (>3x slack)")
+    if fresh["result_copy"]["speedup"] < 1.0:
+        errs.append(
+            f"buffer pool no longer wins result delivery: speedup "
+            f"{fresh['result_copy']['speedup']:.2f}x < 1.0x")
+    return errs
+
+
 def run() -> List[Row]:
-    return bench_get_breakdown() + bench_checkpoint() + bench_pipeline()
+    """run.py section: Fig. 10 + framework plane + overhead microbenches
+    (also refreshes benchmarks/results/overhead.json)."""
+    result = collect()
+    with open(RESULTS_PATH, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+    rows = bench_get_breakdown() + bench_checkpoint() + bench_pipeline()
+    p = result["peek"]
+    rows += [
+        ("peek_lsm_get_plan", p["plan"]["lsm_get_us_per_get"],
+         f"vs baseline {p['baseline']['lsm_get_us_per_get']:.1f}us: "
+         f"{p['speedup_lsm_get_per_get']:.2f}x"),
+        ("peek_weak_chain_plan", p["plan"]["weak_chain_us_per_intercept"],
+         f"{p['speedup_weak_chain']:.2f}x vs walker"),
+        ("peek_extent_loop_plan", p["plan"]["extent_loop_us_per_intercept"],
+         f"{p['speedup_extent_loop']:.2f}x vs walker"),
+        ("result_copy_pool_off", result["result_copy"]["pool_off"]["us_per_op"],
+         "alloc-per-request"),
+        ("result_copy_pool_on", result["result_copy"]["pool_on"]["us_per_op"],
+         f"registered buffers, {result['result_copy']['speedup']:.2f}x"),
+    ]
+    return rows
+
+
+def main(argv: List[str]) -> int:
+    dry = "--dry-run" in argv
+    fresh = collect(dry_run=dry)
+    if "--check" in argv:
+        with open(RESULTS_PATH) as f:
+            committed = json.load(f)
+        errs = check(fresh, committed)
+        for e in errs:
+            print(f"FAIL: {e}", file=sys.stderr)
+        print(json.dumps(fresh["peek"]["plan"], indent=2))
+        print("perf-smoke:", "FAIL" if errs else "ok")
+        return 1 if errs else 0
+    if not dry:
+        with open(RESULTS_PATH, "w") as f:
+            json.dump(fresh, f, indent=2, sort_keys=True)
+        print(f"wrote {RESULTS_PATH}")
+    print(json.dumps(fresh, indent=2, sort_keys=True))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

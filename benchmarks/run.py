@@ -6,7 +6,11 @@ Prints ``name,us_per_call,derived`` CSV.  Sections:
 * Fig. 7 + Table 1 — B+-tree Scan/Load + backend swap (bench_bptree)
 * Fig. 8/9 — LSM Get: memory ratio, record size, tails, clients, op mix,
   skew                                          (bench_lsm)
-* Fig. 10 — overhead breakdown + framework-plane I/O (bench_overhead)
+* Fig. 10 — overhead breakdown + framework-plane I/O + the peek-algorithm
+  and result-copy microbenchmarks gating the compiled-plan refactor
+  (bench_overhead; structured results land in
+  benchmarks/results/overhead.json, and ``python -m
+  benchmarks.bench_overhead --dry-run --check`` is the CI perf-smoke gate)
 * Sharding — multi-device restore/pipeline scaling      (bench_sharding;
   structured results also land in benchmarks/results/sharding.json)
 * Adaptive — fixed depth sweep vs the adaptive controller (bench_adaptive;

@@ -51,6 +51,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.graph import (BranchNode, Edge, ForeactionGraph, FromNode,
                               GraphBuilder, SyscallNode)
+from repro.core.plan import END, compile_plan
 from repro.core.syscalls import Sys
 from repro.core.trace import Trace, TraceEvent
 
@@ -1032,53 +1033,52 @@ def mine_traces(
 def replay_trace(graph: ForeactionGraph, ctx: Dict[str, Any], trace: Trace) -> None:
     """Replay ``trace`` serially against ``graph`` with inputs ``ctx``;
     raises :class:`ReplayMismatch` unless every event matches exactly and
-    the trace ends at End or across a weak edge."""
+    the trace ends at End or across a weak edge.
+
+    The replay walks the graph's *compiled plan* (:mod:`repro.core.plan`) —
+    the same lowered representation the engine interprets — so the validator
+    proves soundness of exactly the artifact that will speculate, and a
+    lowering bug can never pass validation on the object graph while
+    misbehaving at run time.  Compilation is cached, so replaying N traces
+    lowers the graph once."""
+    plan = compile_plan(graph)
     ctx = dict(ctx)
     ctx.pop("__mined__", None)
     ctx.pop("__mined_n__", None)
-    epochs = graph.initial_epochs()
-    node: Any = graph.start.dst
-    weak_crossed = graph.start.weak
+    epochs = plan.initial_epochs()
+    nid = plan.start_dst
+    weak_crossed = plan.start_weak
     results: Dict[Tuple[str, Tuple[int, ...]], Any] = {}
 
-    def _follow(edge: Edge, ep: Tuple[int, ...]) -> Tuple[Any, Tuple[int, ...], bool]:
-        if edge.loop_id is not None:
-            lst = list(ep)
-            lst[edge.loop_id] += 1
-            ep = tuple(lst)
-        return edge.dst, ep, edge.weak
-
     for ev in trace:
-        # resolve branch chain at the frontier
-        while isinstance(node, BranchNode):
-            idx = node.choose(ctx, epochs)
-            if idx is None:
-                raise ReplayMismatch(
-                    f"event {ev.seq}: branch {node.name!r} undecidable at the "
-                    "frontier (count provenance not ready during serial replay)"
-                )
-            node, epochs, w = _follow(node.children[idx], epochs)
-            weak_crossed = weak_crossed or w
-        if node is None:
+        # resolve branch records at the frontier
+        res = plan.resolve_branches(nid, epochs, ctx, weak_crossed)
+        if res is None:
+            raise ReplayMismatch(
+                f"event {ev.seq}: branch undecidable at the frontier "
+                "(count provenance not ready during serial replay)"
+            )
+        nid, epochs, weak_crossed = res
+        if nid == END:
             raise ReplayMismatch(
                 f"event {ev.seq}: graph reached End with {ev.sc} still pending"
             )
-        assert isinstance(node, SyscallNode)
-        if node.sc is not ev.sc:
+        name = plan.names[nid]
+        if plan.sc[nid] is not ev.sc:
             raise ReplayMismatch(
-                f"event {ev.seq}: graph expects {node.sc} at {node.name!r}, "
+                f"event {ev.seq}: graph expects {plan.sc[nid]} at {name!r}, "
                 f"trace has {ev.sc}"
             )
-        out = node.compute_args(ctx, epochs)
+        out = plan.compute[nid](ctx, epochs)
         if out is None:
             raise ReplayMismatch(
-                f"event {ev.seq}: {node.name!r} args not computable at the "
+                f"event {ev.seq}: {name!r} args not computable at the "
                 "frontier during serial replay"
             )
         args, _link = out
         if len(args) != len(ev.args):
             raise ReplayMismatch(
-                f"event {ev.seq}: {node.name!r} arity {len(args)} != trace "
+                f"event {ev.seq}: {name!r} arity {len(args)} != trace "
                 f"arity {len(ev.args)}"
             )
         for i, (a, b2) in enumerate(zip(args, ev.args)):
@@ -1086,26 +1086,24 @@ def replay_trace(graph: ForeactionGraph, ctx: Dict[str, Any], trace: Trace) -> N
                 a = results.get((a.name, epochs), NOT_READY)
             if a is NOT_READY or a != b2:
                 raise ReplayMismatch(
-                    f"event {ev.seq}: {node.name!r} arg {i} computes "
+                    f"event {ev.seq}: {name!r} arg {i} computes "
                     f"{a!r}, trace recorded {b2!r}"
                 )
-        results[(node.name, epochs)] = ev.result
-        if node.save_result is not None:
-            node.save_result(ctx, epochs, ev.result)
-        node, epochs, w = _follow(node.out, epochs)
-        weak_crossed = w  # reset per step: only the tail matters for the end
+        results[(name, epochs)] = ev.result
+        if plan.save[nid] is not None:
+            plan.save[nid](ctx, epochs, ev.result)
+        nid, epochs, weak_crossed = plan.follow_out(nid, epochs)
+        # weak resets per step: only the tail matters for the end state
     # trace consumed: must be able to reach End, or have exited over weak
-    while isinstance(node, BranchNode):
-        idx = node.choose(ctx, epochs)
-        if idx is None:
-            raise ReplayMismatch(
-                "end of trace: branch undecidable, cannot prove completion"
-            )
-        node, epochs, w = _follow(node.children[idx], epochs)
-        weak_crossed = weak_crossed or w
-    if node is not None and not weak_crossed:
+    res = plan.resolve_branches(nid, epochs, ctx, weak_crossed)
+    if res is None:
         raise ReplayMismatch(
-            f"trace ended at {node.name!r} mid-graph with no weak edge "
+            "end of trace: branch undecidable, cannot prove completion"
+        )
+    nid, epochs, weak_crossed = res
+    if nid != END and not weak_crossed:
+        raise ReplayMismatch(
+            f"trace ended at {plan.names[nid]!r} mid-graph with no weak edge "
             "permitting early exit"
         )
 

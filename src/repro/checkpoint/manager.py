@@ -371,13 +371,15 @@ class CheckpointManager:
                 data = manifest_cache["data"] = json.dumps(manifest).encode()
             return data
 
-        # register is an idempotent builder assignment; the built graph is
-        # cached by name, so re-registering the same shape costs nothing
+        # register is an idempotent builder assignment; the built graph and
+        # its compiled plan are cached by name/(graph, depth-mode), so every
+        # save after the first of a given shape costs two dict probes
         graph_name = f"ckpt_save_s{self.num_shards}_e{len(extents)}"
         self.fa.register(
             graph_name,
             lambda S=self.num_shards, E=len(extents), n=graph_name:
                 build_save_graph(S, E, n))
+        self.fa.plan(graph_name)
 
         def capture():
             return {

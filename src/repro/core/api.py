@@ -41,6 +41,7 @@ from .backends import (Backend, SharedBackend, SlotScheduler, SyncBackend,
 from .device import Device, OSDevice
 from .engine import DepthController, SessionStats, SpecSession
 from .graph import ForeactionGraph
+from .plan import GraphPlan, compile_plan
 from .syscalls import Sys
 from .trace import Trace, TraceRecorder
 
@@ -122,6 +123,19 @@ class Foreactor:
             if name not in self._graphs:
                 self._graphs[name] = self._graph_builders[name]()
             return self._graphs[name]
+
+    def _depth_mode(self, depth) -> str:
+        return "adaptive" if depth == "adaptive" else "fixed"
+
+    def plan(self, name: str, depth: Optional[Union[int, str]] = None) -> GraphPlan:
+        """The compiled :class:`GraphPlan` for a registered graph — built
+        (and the graph itself, if still lazy) on first use, then cached per
+        ``(graph, depth-mode)`` so every activation pays one dict probe.
+        Consumers with latency-critical first calls (checkpoint saves,
+        serving warm-up) call this eagerly to move compilation off the
+        measured path."""
+        depth = self.depth if depth is None else depth
+        return compile_plan(self.graph(name), self._depth_mode(depth))
 
     def _make_backend(self) -> Backend:
         """Per-thread backend reuse: like the paper, each application thread
@@ -217,6 +231,8 @@ class Foreactor:
             controller=controller,
             tenant=tenant,
             staging=self.staging,
+            plan=self.plan(graph_name,
+                           "adaptive" if controller is not None else depth),
         )
         _session_stack().append(sess)
         return sess

@@ -1,48 +1,45 @@
-"""Asynchronous syscall backends (paper §2.3, §5.4).
+"""The unified I/O plane (paper §2.3, §5.4): one reactor, pluggable lanes.
 
-``QueuePairBackend`` reproduces io_uring's semantics: a submission queue
-filled without kernel involvement, a single boundary crossing per submitted
-batch (``io_uring_enter``), an in-process ``io_workqueue`` worker pool that
-may execute entries in parallel, request *linking* to force ordered
-execution of chains, and completion harvesting that costs no crossing.
+Every backend in this module is one class — :class:`IOPlane` — configured
+with *submission lanes*.  A lane is a queue pair: an ``io_workqueue`` worker
+pool plus the crossing policy that models how entries reach it (one
+``io_uring_enter`` per submitted batch, or one ordinary syscall per request
+for the user-level thread pool).  The plane owns the submission queue, the
+submitted-request ledger (one lock, acquired once per ``submit``), the
+chain partitioner, and a :class:`repro.core.buffers.BufferPool` of
+registered buffers leased to PREAD requests at dispatch.
 
-``ThreadPoolBackend`` is the paper's user-level thread-pool alternative:
-identical engine-facing semantics, but each request costs its own boundary
-crossing (it is an ordinary blocking syscall on some thread).
+The historical five backends are lane configurations of that one reactor:
 
-``SyncBackend`` degenerates to synchronous in-place execution and is the
-no-speculation baseline.
+* ``SyncBackend`` — zero lanes: nothing runs early, demand executes inline
+  at ``wait`` (the no-speculation baseline; also the conformance oracle, so
+  it takes no buffer pool and keeps the classic allocate-per-request path).
+* ``QueuePairBackend`` — one batched lane (io_uring analogue: one boundary
+  crossing per submitted batch, harvest costs none).
+* ``ThreadPoolBackend`` — one per-request lane (each entry pays its own
+  crossing: an ordinary blocking syscall on some thread).
+* ``MultiQueueBackend`` — one batched lane per sub-device of a
+  :class:`repro.core.device.ShardedDevice`; chains route whole by their
+  head's target shard and each touched lane pays one crossing.
+* ``SharedBackend`` + ``SlotScheduler`` — the multi-tenant layer, riding on
+  top of any async plane unchanged in semantics: many concurrent sessions
+  lease submission slots from one plane, with weighted-fair shares,
+  priority classes, and pressure eviction of speculative-only requests.
 
-``MultiQueueBackend`` is the sharded extension: one queue pair + worker pool
-per sub-device of a :class:`repro.core.device.ShardedDevice`.  ``prepare``
-stays a single engine-facing submission queue, but ``submit_all`` partitions
-the batch by target device (link chains stay whole, routed by their head) and
-pays one boundary crossing *per sub-device touched* — N parallel
-``io_uring_enter`` calls instead of one global queue, so independent requests
-ride independent execution resources and aggregate bandwidth scales with
-device count.
-
-``SharedBackend`` + ``SlotScheduler`` are the multi-tenant extension: many
-concurrent sessions lease submission slots from *one* underlying queue pair
-(or multi-queue) instead of each owning a private one.  The scheduler
-arbitrates whose speculation occupies the queue — weighted-fair shares
-across tenants, priority classes, and pressure-triggered eviction of
-speculative-only (not-yet-demanded) requests — so demand I/O is never
-starved behind another tenant's speculation.
-
-Cross-references: docs/ARCHITECTURE.md ("Backends", "Sharded multi-device
-substrate", "Shared-backend scheduling") maps this module to paper
-§2.3/§5.4; see docs/GLOSSARY.md for *queue-pair crossing*, *link flag*,
-*tenant*, and *slot lease*.
+Cross-references: docs/ARCHITECTURE.md ("Plan compilation & the unified I/O
+plane", "Sharded multi-device substrate", "Shared-backend scheduling") maps
+this module to paper §2.3/§5.4; see docs/GLOSSARY.md for *submission lane*,
+*queue-pair crossing*, *registered buffer*, *tenant*, and *slot lease*.
 """
 
 from __future__ import annotations
 
-import queue
 import threading
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from .buffers import BufferPool
 from .device import Device, ShardedDevice
+from .lanes import SubmissionLane
 from .syscalls import IORequest, ReqState, Sys, perform
 
 
@@ -51,7 +48,7 @@ class Backend:
 
     name = "abstract"
     #: requests this backend can usefully run at once (worker count, summed
-    #: across queue pairs); 0 = no async execution.  The adaptive depth
+    #: across lanes); 0 = no async execution.  The adaptive depth
     #: controller stops growing once occupancy reaches this.
     capacity = 0
 
@@ -68,6 +65,15 @@ class Backend:
     def submit_all(self) -> int:
         """Make prepared requests eligible to run; returns #submitted."""
         raise NotImplementedError
+
+    def submit(self, batch: List[IORequest]) -> int:
+        """Submit a pre-formed batch in one call — the plan interpreter's
+        fast path: the engine accumulates its peeked requests locally and
+        hands them over with a single lock acquisition instead of one
+        ``prepare`` crossing per request."""
+        for req in batch:
+            self.prepare(req)
+        return self.submit_all()
 
     def wait(self, req: IORequest):
         raise NotImplementedError
@@ -96,126 +102,6 @@ class Backend:
         pass
 
 
-class SyncBackend(Backend):
-    """No speculation: requests execute at wait()."""
-
-    name = "sync"
-
-    def __init__(self, device: Device):
-        super().__init__(device)
-        self._prepared: List[IORequest] = []
-
-    def prepare(self, req: IORequest) -> None:
-        self._prepared.append(req)
-
-    def submit_all(self) -> int:
-        # sync backend never runs anything early, but the prepared entries
-        # stay on the ledger so cancel_remaining() can mark the never-
-        # demanded ones cancelled — otherwise they end the session neither
-        # completed nor cancelled and the SessionStats ledger invariant
-        # (pre_issued == served_async + cancelled + wasted_completions)
-        # would not hold on this backend.
-        return 0
-
-    def wait(self, req: IORequest):
-        self.device.charge_crossing()
-        req.finish(perform(self.device, req))
-        return req.wait_result()
-
-    def cancel_remaining(self) -> int:
-        n = 0
-        for req in self._prepared:
-            if req.cancel():
-                n += 1
-        self._prepared.clear()
-        return n
-
-    def drain(self) -> None:
-        pass
-
-
-class _WorkerPool:
-    """Shared worker-pool machinery (the 'io_workqueue').
-
-    The queue is priority-ordered (FIFO within a priority level via the
-    sequence counter): a multi-tenant backend stamps requests with their
-    tenant's priority class, so a hot tenant's chains never wait behind a
-    cold tenant's queued speculation.  Single-tenant backends leave every
-    request at priority 0 — plain FIFO, as before.
-    """
-
-    _SHUTDOWN_PRIORITY = -(1 << 30)  # drains after all real work
-
-    def __init__(self, device: Device, workers: int):
-        self.device = device
-        self._q: "queue.PriorityQueue" = queue.PriorityQueue()
-        self._seq = 0
-        self._inflight = 0
-        self._lock = threading.Lock()
-        self._idle = threading.Condition(self._lock)
-        self._threads = [
-            threading.Thread(target=self._run, name=f"io_workqueue-{i}", daemon=True)
-            for i in range(workers)
-        ]
-        for t in self._threads:
-            t.start()
-        self._shutdown = False
-
-    def push_chain(self, chain: List[IORequest]) -> None:
-        with self._lock:
-            self._inflight += 1
-            seq = self._seq
-            self._seq += 1
-        self._q.put((-chain[0].priority, seq, chain))
-
-    def _push_sentinel(self) -> None:
-        with self._lock:
-            seq = self._seq
-            self._seq += 1
-        self._q.put((-self._SHUTDOWN_PRIORITY, seq, None))
-
-    def _run(self) -> None:
-        while True:
-            _prio, _seq, chain = self._q.get()
-            if chain is None:
-                return
-            try:
-                for req in chain:
-                    # atomically claim the request; a failed claim means it
-                    # was cancelled (early exit / scheduler eviction) or
-                    # served inline by a demand promotion — executing it here
-                    # would double a side effect.
-                    if not req.claim():
-                        continue
-                    try:
-                        req.finish(perform(self.device, req))
-                    except BaseException as e:  # propagate to the waiter
-                        req.finish(error=e)
-                        # a failed link head breaks the chain (io_uring semantics)
-                        for rest in chain[chain.index(req) + 1 :]:
-                            rest.cancel()
-                        break
-            finally:
-                with self._lock:
-                    self._inflight -= 1
-                    if self._inflight == 0:
-                        self._idle.notify_all()
-
-    def drain(self) -> None:
-        with self._lock:
-            while self._inflight > 0:
-                self._idle.wait()
-
-    def shutdown(self) -> None:
-        if self._shutdown:
-            return
-        self._shutdown = True
-        for _ in self._threads:
-            self._push_sentinel()
-        for t in self._threads:
-            t.join(timeout=5)
-
-
 def _chains(batch: List[IORequest]) -> List[List[IORequest]]:
     """Group a submitted batch into link chains (io_uring IOSQE_IO_LINK): a
     req with link=True executes before its successor, on the same worker."""
@@ -231,65 +117,91 @@ def _chains(batch: List[IORequest]) -> List[List[IORequest]]:
     return chains
 
 
-class _AsyncBackend(Backend):
-    """Shared SQ/CQ machinery of the async backends: a submission queue, the
-    submitted-request ledger, and event-based completion harvesting.
-    Subclasses define ``_dispatch`` (crossing accounting + routing chains to
-    their worker pools) and own their pool lifecycle."""
+class IOPlane(Backend):
+    """The unified reactor behind every backend name.
 
-    def __init__(self, device: Device):
+    One submission queue + submitted-request ledger behind a single lock
+    (``submit`` acquires it once per batch — the paper's "one
+    io_uring_enter per batch" submission-cost model, now also true of the
+    Python-side locking), N :class:`SubmissionLane`\\ s, a chain router, and
+    a registered :class:`BufferPool` leased to PREAD entries at dispatch.
+
+    With zero lanes the plane degenerates to the synchronous baseline:
+    nothing runs early, ``wait`` executes the request inline at demand time
+    (and the ledger still lets ``cancel_remaining`` account every prepared
+    entry, keeping the SessionStats invariant
+    ``pre_issued == served_async + cancelled + wasted_completions``).
+    """
+
+    name = "io_plane"
+
+    def __init__(self, device: Device, lanes: Sequence[SubmissionLane] = (),
+                 router: Optional[Callable[[IORequest], int]] = None,
+                 pool: Optional[BufferPool] = None):
         super().__init__(device)
+        self.lanes: List[SubmissionLane] = list(lanes)
+        if len(self.lanes) > 1 and router is None:
+            raise ValueError(
+                "a multi-lane IOPlane needs a router (chains would all land "
+                "on lane 0 while capacity reports every lane's workers)")
+        self._router = router
+        self.pool = pool
+        self.capacity = sum(lane.workers for lane in self.lanes)
         self._sq: List[IORequest] = []
         self._submitted: List[IORequest] = []
         # guards both queues: inflight()/drain() rebuild the _submitted ledger
-        # and submit_all() swaps _sq — unguarded, concurrent sessions sharing
-        # this backend lose ledger entries (requests that then never get
+        # and submit() swaps _sq — unguarded, concurrent sessions sharing
+        # this plane lose ledger entries (requests that then never get
         # cancelled or drained).
-        self._ledger_lock = threading.Lock()
+        self._lock = threading.Lock()
 
+    # -- engine surface ----------------------------------------------------
     def inflight(self) -> int:
         # prune completed entries while counting, keeping the ledger short
-        with self._ledger_lock:
+        with self._lock:
             self._submitted = [r for r in self._submitted if not r.done.is_set()]
             return len(self._submitted)
 
     def prepare(self, req: IORequest) -> None:
-        with self._ledger_lock:
+        with self._lock:
             self._sq.append(req)
 
-    def _dispatch(self, batch: List[IORequest]) -> None:
-        raise NotImplementedError
-
-    def _pools(self) -> List[_WorkerPool]:
-        raise NotImplementedError
-
     def submit_all(self) -> int:
-        with self._ledger_lock:
+        with self._lock:
             if not self._sq:
                 return 0
             batch, self._sq = self._sq, []
-        self._dispatch(batch)
-        with self._ledger_lock:
-            self._submitted.extend(batch)
-        return len(batch)
+        return self.submit(batch)
 
-    def submit_batch(self, batch: List[IORequest]) -> int:
-        """Dispatch a pre-formed batch, bypassing this backend's own
-        submission queue.  :class:`SharedBackend` views stage their entries
-        privately and submit through here, so concurrent tenants can never
-        interleave entries into each other's link chains."""
+    def submit(self, batch: List[IORequest]) -> int:
         if not batch:
             return 0
+        if not self.lanes:
+            # synchronous plane: entries only reach the ledger (they run at
+            # wait); returns 0 — nothing was made eligible to run early
+            with self._lock:
+                self._submitted.extend(batch)
+            return 0
         self._dispatch(batch)
-        with self._ledger_lock:
+        with self._lock:
             self._submitted.extend(batch)
         return len(batch)
 
+    # SharedBackend views stage their entries privately and submit through
+    # here, so concurrent tenants can never interleave entries into each
+    # other's link chains.
+    submit_batch = submit
+
     def wait(self, req: IORequest):
+        if not self.lanes:
+            # the no-speculation baseline: demand I/O runs inline, paying
+            # its own boundary crossing
+            self.device.charge_crossing()
+            req.finish(perform(self.device, req))
         return req.wait_result()
 
     def cancel_remaining(self) -> int:
-        with self._ledger_lock:
+        with self._lock:
             pending, self._sq = self._sq, []
             submitted = list(self._submitted)
         n = 0
@@ -302,70 +214,102 @@ class _AsyncBackend(Backend):
         return n
 
     def drain(self) -> None:
-        for pool in self._pools():
-            pool.drain()
-        with self._ledger_lock:
+        for lane in self.lanes:
+            lane.drain()
+        with self._lock:
             self._submitted = [r for r in self._submitted if not r.done.is_set()]
 
     def shutdown(self) -> None:
-        for pool in self._pools():
-            pool.shutdown()
+        for lane in self.lanes:
+            lane.shutdown()
+
+    # -- dispatch ----------------------------------------------------------
+    def _lease_buffers(self, batch: List[IORequest]) -> None:
+        """Attach registered-buffer leases to PREAD entries (READ_FIXED):
+        the worker will fill recycled memory instead of allocating a result
+        per request.  Pool exhaustion or odd shapes (staged runners,
+        deferred size arguments) silently fall back to the classic path."""
+        pool = self.pool
+        if pool is None:
+            return
+        for req in batch:
+            if req.sc is Sys.PREAD and req.runner is None \
+                    and req.lease is None and isinstance(req.args[1], int):
+                req.lease = pool.lease(req.args[1])
+
+    def _dispatch(self, batch: List[IORequest]) -> None:
+        self._lease_buffers(batch)
+        chains = _chains(batch)
+        if len(self.lanes) == 1 or self._router is None:
+            lane = self.lanes[0]
+            lane.charge(len(batch))
+            lane.push_batch(chains)
+            return
+        # multi-lane: whole chains route by their head (io_uring link
+        # ordering survives), each touched lane pays one crossing and
+        # receives its share of the batch in one ring fill
+        routed: Dict[int, List[List[IORequest]]] = {}
+        for chain in chains:
+            routed.setdefault(self._router(chain[0]), []).append(chain)
+        for li in sorted(routed):
+            lane_chains = routed[li]
+            self.lanes[li].charge(sum(len(c) for c in lane_chains))
+            self.lanes[li].push_batch(lane_chains)
 
 
-class QueuePairBackend(_AsyncBackend):
-    """io_uring analogue: SQ/CQ queue pair + in-process io_workqueue.
+# ---------------------------------------------------------------------------
+# Lane configurations: the historical backend names, one reactor underneath
+# ---------------------------------------------------------------------------
+class SyncBackend(IOPlane):
+    """No speculation: zero lanes, requests execute at wait().
 
-    prepare() fills SQ entries with no crossings; submit_all() costs exactly
-    one boundary crossing for the whole batch; completions are harvested by
-    waiting on the request's event (CQ poll — no crossing).
+    Deliberately takes no buffer pool: this is the conformance oracle and
+    keeps the classic allocate-per-request result path.
+    """
+
+    name = "sync"
+
+    def __init__(self, device: Device):
+        super().__init__(device, lanes=())
+
+
+class QueuePairBackend(IOPlane):
+    """io_uring analogue: one batched lane (SQ/CQ pair + io_workqueue).
+
+    prepare()/submit() fill SQ entries with no crossings; dispatch costs
+    exactly one boundary crossing for the whole batch; completions are
+    harvested by waiting on the request's event (CQ poll — no crossing).
     """
 
     name = "io_uring"
 
     def __init__(self, device: Device, workers: int = 16):
-        super().__init__(device)
-        self.capacity = workers
-        self._pool = _WorkerPool(device, workers)
-
-    def _pools(self) -> List[_WorkerPool]:
-        return [self._pool]
-
-    def _dispatch(self, batch: List[IORequest]) -> None:
-        self.device.charge_crossing()  # the single io_uring_enter()
-        for chain in _chains(batch):
-            self._pool.push_chain(chain)
+        super().__init__(device, lanes=(SubmissionLane(device, workers),),
+                         pool=BufferPool())
 
 
-class ThreadPoolBackend(_AsyncBackend):
+class ThreadPoolBackend(IOPlane):
     """User-level thread pool: same semantics, one crossing per request."""
 
     name = "user_threads"
 
     def __init__(self, device: Device, workers: int = 16):
-        super().__init__(device)
-        self.capacity = workers
-        self._pool = _WorkerPool(device, workers)
-
-    def _pools(self) -> List[_WorkerPool]:
-        return [self._pool]
-
-    def _dispatch(self, batch: List[IORequest]) -> None:
-        for req in batch:
-            self.device.charge_crossing()  # every request is its own syscall
-        for chain in _chains(batch):
-            self._pool.push_chain(chain)
+        super().__init__(
+            device,
+            lanes=(SubmissionLane(device, workers, per_request=True),),
+            pool=BufferPool(),
+        )
 
 
-class MultiQueueBackend(_AsyncBackend):
-    """Per-device queue pairs over a :class:`ShardedDevice`.
+class MultiQueueBackend(IOPlane):
+    """Per-device lanes over a :class:`ShardedDevice`.
 
     The engine sees the usual single prepare/submit/wait surface; internally
-    each sub-device owns a queue pair and an io_workqueue sized ``workers``
-    (total concurrency = ``num_devices * workers``).  ``submit_all``
-    partitions the batch by the target shard of each link chain's head —
-    chains never split across queues, preserving io_uring link ordering —
-    and charges one crossing on every sub-device that received entries
-    (one ``io_uring_enter`` per touched queue pair).
+    each sub-device owns a lane sized ``workers`` (total concurrency =
+    ``num_devices * workers``).  Chains route by the target shard of their
+    head — never splitting across lanes — and every touched lane charges one
+    crossing on its sub-device (one ``io_uring_enter`` per touched queue
+    pair) plus the aggregate view.
     """
 
     name = "multi_queue"
@@ -376,33 +320,26 @@ class MultiQueueBackend(_AsyncBackend):
                 "MultiQueueBackend requires a ShardedDevice "
                 f"(got {type(device).__name__}); use 'io_uring' for flat devices"
             )
-        super().__init__(device)
         # workers execute against the sharded device (vfd/namespace routing
-        # happens there); the partition decides *which* pool runs a chain and
+        # happens there); the router decides *which* lane runs a chain and
         # which sub-device pays the crossing.
-        self.capacity = workers * len(device.devices)
-        self._queue_pools = [_WorkerPool(device, workers) for _ in device.devices]
+        super().__init__(
+            device,
+            lanes=[
+                SubmissionLane(device, workers, crossing_device=sub,
+                               aggregate=device.stats)
+                for sub in device.devices
+            ],
+            router=self._route_head,
+            pool=BufferPool(),
+        )
 
-    def _pools(self) -> List[_WorkerPool]:
-        return self._queue_pools
-
-    def _dispatch(self, batch: List[IORequest]) -> None:
+    def _route_head(self, head: IORequest) -> int:
         dev: ShardedDevice = self.device  # type: ignore[assignment]
-        routed: List[tuple] = []
-        touched: set = set()
-        for chain in _chains(batch):
-            head = chain[0]
-            try:
-                qi = dev.route(head.sc, head.args)
-            except OSError:
-                qi = 0  # unknown fd (e.g. closed early): any queue can fail it
-            routed.append((qi, chain))
-            touched.add(qi)
-        for qi in sorted(touched):
-            dev.devices[qi].charge_crossing()  # one enter() per queue pair
-            dev.stats.crossing()  # keep the aggregate view consistent
-        for qi, chain in routed:
-            self._queue_pools[qi].push_chain(chain)
+        try:
+            return dev.route(head.sc, head.args)
+        except OSError:
+            return 0  # unknown fd (e.g. closed early): any lane can fail it
 
 
 # ---------------------------------------------------------------------------
@@ -618,7 +555,7 @@ class SharedBackend(Backend):
     name = "shared"
     is_view = True
 
-    def __init__(self, inner: _AsyncBackend, scheduler: SlotScheduler,
+    def __init__(self, inner: IOPlane, scheduler: SlotScheduler,
                  tenant: str, weight: float = 1.0, priority=1):
         super().__init__(inner.device)
         self.inner = inner
@@ -662,6 +599,18 @@ class SharedBackend(Backend):
             batch, self._sq = self._sq, []
             if batch:
                 self._deferred.extend(_chains(batch))
+        return self._flush_deferred()
+
+    def submit(self, batch: List[IORequest]) -> int:
+        """The engine's single-call batch path: stamp the tenant's priority
+        class, stage the chains, offer them to the scheduler — one lock
+        acquisition, same admission semantics as prepare()+submit_all()."""
+        if not batch:
+            return 0
+        for req in batch:
+            req.priority = self.priority
+        with self._lock:
+            self._deferred.extend(_chains(batch))
         return self._flush_deferred()
 
     def _flush_deferred(self) -> int:

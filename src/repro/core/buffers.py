@@ -1,0 +1,162 @@
+"""Registered buffer pool for the I/O plane (paper Fig. 10 "result copy").
+
+io_uring lets an application *register* a fixed set of buffers with the
+kernel once (``io_uring_register(IORING_REGISTER_BUFFERS)``) and then issue
+``IORING_OP_READ_FIXED`` against them, so the hot path never allocates a
+per-request buffer.  This module is that idea for the
+:class:`repro.core.backends.IOPlane`: a size-classed pool of pre-allocated
+``bytearray`` buffers that are *leased* to ``IORequest``s at submission time,
+filled by the worker via :meth:`repro.core.device.Device.pread_into` (no
+per-request allocation on the device side), and returned to the pool when the
+session finishes.
+
+Why it pays off in this runtime: the unpooled read path allocates twice per
+pread (the device slices its backing store into a fresh ``bytearray``, then
+wraps it in ``bytes``), and speculative reads that the function never demands
+(cancelled / wasted completions — the paper's early-exit overhead) pay that
+allocation for nothing.  A leased read does one copy into a recycled buffer;
+a *wasted* leased read allocates nothing at all, and a harvested one pays
+exactly one materialize copy (``IORequest.take_result``) — the paper's
+result-copy, now bounded and measured.
+
+Lease lifecycle (enforced by the plane + engine, not by this module):
+
+1. ``pool.lease(size)`` at submission — ``None`` when the pool is at
+   capacity, in which case the request simply runs unleased (the classic
+   allocate-per-request path; registered buffers are a fixed budget, exactly
+   like io_uring's).
+2. The worker fills ``lease.mv`` and records the byte count via
+   ``lease.filled(n)``.
+3. Consumers (the frontier harvest, ``FromRequest.resolve``) call
+   ``IORequest.take_result`` which materializes ``bytes`` at most once.
+4. ``lease.release()`` at session teardown, strictly after the backend
+   drain — no worker can still be writing into the buffer, and every
+   consumer holds materialized ``bytes``, never the buffer itself.
+
+Cross-references: docs/ARCHITECTURE.md ("Plan compilation & the unified I/O
+plane"); *registered buffer* and *buffer lease* are defined in
+docs/GLOSSARY.md.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional
+
+#: size classes: powers of two from 512 B to 4 MiB.  Requests above the top
+#: class run unleased (huge reads are rare and amortize their allocation).
+_MIN_CLASS = 9  # 2**9 = 512
+_MAX_CLASS = 22  # 2**22 = 4 MiB
+
+
+def size_class(size: int) -> Optional[int]:
+    """The smallest power-of-two class holding ``size`` bytes, or None if
+    the size is out of the registered range."""
+    if size <= 0 or size > (1 << _MAX_CLASS):
+        return None
+    c = _MIN_CLASS
+    while (1 << c) < size:
+        c += 1
+    return c
+
+
+class BufferLease:
+    """One registered buffer, on loan from the pool to one ``IORequest``."""
+
+    __slots__ = ("pool", "cls", "buf", "mv", "nbytes", "_released")
+
+    def __init__(self, pool: "BufferPool", cls: int, buf: bytearray):
+        self.pool = pool
+        self.cls = cls
+        self.buf = buf
+        self.mv = memoryview(buf)
+        self.nbytes = 0
+        self._released = False
+
+    def filled(self, n: int) -> None:
+        """Record how many bytes the device wrote (short reads included)."""
+        self.nbytes = n
+
+    def to_bytes(self) -> bytes:
+        """Materialize the filled prefix — the result copy of paper Fig. 10,
+        exactly one bounded memcpy out of the registered buffer."""
+        return bytes(self.mv[: self.nbytes])
+
+    def release(self) -> None:
+        """Return the buffer to the pool.  Idempotent; callers must ensure
+        no consumer still reads ``mv`` (the engine releases only after the
+        backend drain, when every consumer holds materialized bytes)."""
+        if self._released:
+            return
+        self._released = True
+        self.pool._give_back(self)
+
+    def __len__(self) -> int:
+        return self.nbytes
+
+
+class BufferPool:
+    """Size-classed pool of pre-allocated, recycled I/O buffers.
+
+    ``capacity_bytes`` bounds the total registered memory (leased + idle),
+    like io_uring's fixed registration: when the budget is exhausted,
+    :meth:`lease` returns ``None`` and the request falls back to the
+    allocate-per-request path instead of blocking.  Thread-safe; stats are
+    exposed to benchmarks (``bench_overhead``) and tests.
+    """
+
+    def __init__(self, capacity_bytes: int = 64 << 20):
+        self.capacity_bytes = capacity_bytes
+        self._free: Dict[int, List[bytearray]] = {}
+        self._lock = threading.Lock()
+        #: total bytes currently registered (idle + leased)
+        self.registered_bytes = 0
+        # observability
+        self.leases = 0
+        self.recycle_hits = 0
+        self.grows = 0
+        self.declined = 0
+        self.released = 0
+
+    def lease(self, size: int) -> Optional[BufferLease]:
+        cls = size_class(size)
+        if cls is None:
+            with self._lock:
+                self.declined += 1
+            return None
+        with self._lock:
+            free = self._free.get(cls)
+            if free:
+                buf = free.pop()
+                self.recycle_hits += 1
+            else:
+                if self.registered_bytes + (1 << cls) > self.capacity_bytes:
+                    self.declined += 1
+                    return None
+                buf = bytearray(1 << cls)
+                self.registered_bytes += 1 << cls
+                self.grows += 1
+            self.leases += 1
+        return BufferLease(self, cls, buf)
+
+    def _give_back(self, lease: BufferLease) -> None:
+        with self._lock:
+            self.released += 1
+            self._free.setdefault(lease.cls, []).append(lease.buf)
+
+    @property
+    def hit_rate(self) -> float:
+        return self.recycle_hits / self.leases if self.leases else 0.0
+
+    def snapshot(self) -> Dict[str, float]:
+        with self._lock:
+            return {
+                "registered_bytes": self.registered_bytes,
+                "leases": self.leases,
+                "recycle_hits": self.recycle_hits,
+                "hit_rate": self.recycle_hits / self.leases if self.leases
+                else 0.0,
+                "grows": self.grows,
+                "declined": self.declined,
+                "released": self.released,
+            }

@@ -17,13 +17,29 @@ graph.  Every intercepted I/O call:
 On function exit, remaining speculative requests are cancelled and the
 backend drained (the cancellation overhead of paper Fig. 10).
 
-The engine is backend-agnostic: a batch submitted through
-:class:`repro.core.backends.MultiQueueBackend` fans out across the queue
-pairs of a sharded device with no change here — routing is a backend/device
-concern, Algorithm 1 only ever sees prepare/submit/wait.
+The session never walks the authoring-layer object graph: it interprets the
+graph's *compiled plan* (:mod:`repro.core.plan`) — flat node records indexed
+by integer id — with integer cursors, and it accumulates the peeked batch
+locally, handing it to the backend in one ``submit`` call.  Two consequences
+the old object walker could not offer:
 
-Cross-references: docs/ARCHITECTURE.md ("Pre-issuing engine") maps this
-module to paper §5.2; *frontier*, *epoch vector*, *pre-issue* and friends are
+* peek cost no longer scales with graph-authoring style — the sliding peek
+  window survives weak edges as long as the window's prefix stays fully
+  issued (an all-pure mined chain re-walks nothing), falling back to the
+  paper's exact from-the-frontier walk only when a non-pure node was
+  actually deferred by a conservatively stale weak flag, which keeps the
+  pre-issue schedule identical to the original algorithm;
+* the submission path costs one lock acquisition per batch instead of one
+  per request (the Python mirror of "one io_uring_enter per batch").
+
+The engine is backend-agnostic: a batch submitted through
+:class:`repro.core.backends.MultiQueueBackend` fans out across the lanes of
+a sharded device with no change here — routing is an I/O-plane/device
+concern, Algorithm 1 only ever sees submit/wait.
+
+Cross-references: docs/ARCHITECTURE.md ("Pre-issuing engine", "Plan
+compilation & the unified I/O plane") maps this module to paper §5.2;
+*frontier*, *epoch vector*, *pre-issue*, *graph plan* and friends are
 defined in docs/GLOSSARY.md.
 """
 
@@ -32,11 +48,12 @@ from __future__ import annotations
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 from .backends import Backend
 from .device import Device
-from .graph import BranchNode, Edge, ForeactionGraph, FromNode, SyscallNode
+from .graph import ForeactionGraph, FromNode
+from .plan import END, KIND_BRANCH, KIND_SYSCALL, GraphPlan, compile_plan
 from .syscalls import (Effect, FromRequest, IORequest, ReqState, Sys,
                        effect_of, execute)
 
@@ -162,15 +179,6 @@ class DepthController:
 
 
 @dataclass
-class Cursor:
-    """A dynamic position in the graph: node (or None == End) + epoch vector."""
-
-    node: Optional[object]  # SyscallNode | BranchNode | None
-    epochs: Tuple[int, ...]
-    weak_crossed: bool = False  # a weak edge was crossed getting here (peek only)
-
-
-@dataclass
 class NodeState:
     issued: bool = False
     req: Optional[IORequest] = None
@@ -182,7 +190,7 @@ class SessionStats:
     intercepted: int = 0
     untracked: int = 0
     pre_issued: int = 0
-    submits: int = 0  # non-empty submit_all() batches (queue-pair crossings)
+    submits: int = 0  # non-empty submitted batches (queue-pair crossings)
     served_async: int = 0
     served_sync: int = 0
     cancelled: int = 0
@@ -207,7 +215,14 @@ class GraphMismatch(RuntimeError):
 
 
 class SpecSession:
-    """One activation of a registered function on one thread."""
+    """One activation of a registered function on one thread.
+
+    The session interprets the graph's compiled :class:`GraphPlan`: cursors
+    are ``(node id, epoch vector)`` integer/tuple pairs, per-node dynamic
+    state is keyed by them, and Algorithm 1's peek walks the plan's flat
+    arrays.  The authoring-layer graph object is kept only for
+    introspection (``sess.graph``).
+    """
 
     def __init__(
         self,
@@ -220,8 +235,11 @@ class SpecSession:
         controller: Optional[DepthController] = None,
         tenant: Optional[str] = None,
         staging: bool = False,
+        plan: Optional[GraphPlan] = None,
     ):
         self.graph = graph
+        self.plan = plan if plan is not None else compile_plan(
+            graph, "adaptive" if controller is not None else "fixed")
         self.ctx = ctx
         self.backend = backend
         self.device = device
@@ -235,13 +253,22 @@ class SpecSession:
         self.strict = strict
         self.stats = SessionStats()
         self._t0 = time.perf_counter()
-        self._state: Dict[Tuple[str, Tuple[int, ...]], NodeState] = {}
-        self._cursor = Cursor(node=graph.start.dst, epochs=graph.initial_epochs(),
-                              weak_crossed=graph.start.weak)
-        # sliding peek window: resume point past the contiguous issued prefix,
-        # and its distance (in syscall nodes) from the current frontier
-        self._peek: Optional[Cursor] = None
+        #: dynamic node state, keyed by (node id, epoch vector)
+        self._state: Dict[Tuple[int, Tuple[int, ...]], NodeState] = {}
+        #: the frontier cursor, possibly resting on a branch record
+        self._cur: Tuple[int, Tuple[int, ...]] = (
+            self.plan.start_dst, self.plan.initial_epochs())
+        #: the branch-resolved syscall record intercept() is serving now
+        #: (peek skips it: pre-issuing it would buy no overlap)
+        self._frontier: Tuple[int, Tuple[int, ...]] = (END, ())
+        # sliding peek window: resume point past the contiguous issued
+        # prefix as (node id, epochs, conservative weak flag), and its
+        # distance (in syscall records) from the current frontier
+        self._peek: Optional[Tuple[int, Tuple[int, ...], bool]] = None
         self._peek_dist = 0
+        #: peeked requests a mid-walk stub error kept from being submitted;
+        #: finish() cancels them so the ledger invariant still holds
+        self._orphans: List[IORequest] = []
         self._finished = False
         # undoable write speculation: when enabled, every tracked UNDOABLE
         # syscall — pre-issued or frontier-served — runs inside one staging
@@ -275,113 +302,150 @@ class SpecSession:
         lease = self.backend.spec_budget()
         return d if lease is None else min(d, lease)
 
-    # -- cursor movement ---------------------------------------------------
-    @staticmethod
-    def _follow(edge: Edge, epochs: Tuple[int, ...], weak: bool) -> Cursor:
-        if edge.loop_id is not None:
-            lst = list(epochs)
-            lst[edge.loop_id] += 1
-            epochs = tuple(lst)
-        return Cursor(node=edge.dst, epochs=epochs, weak_crossed=weak or edge.weak)
-
-    def _resolve_branches(self, cur: Cursor) -> Optional[Cursor]:
-        """Follow branch nodes whose Choice is ready; None if a choice is
-        not ready (peek must stop there)."""
-        while isinstance(cur.node, BranchNode):
-            idx = cur.node.choose(self.ctx, cur.epochs)
-            if idx is None:
-                return None
-            edge = cur.node.children[idx]
-            cur = self._follow(edge, cur.epochs, cur.weak_crossed)
-        return cur
-
-    def _node_state(self, node: SyscallNode, epochs: Tuple[int, ...]) -> NodeState:
-        key = (node.name, epochs)
-        st = self._state.get(key)
-        if st is None:
-            st = NodeState()
-            self._state[key] = st
-        return st
-
-    # -- Algorithm 1 --------------------------------------------------------
+    # -- Algorithm 1, over the compiled plan ---------------------------------
     def _peek_and_preissue(self) -> None:
-        """Peek up to ``depth`` nodes beyond the frontier; prepare the safe
-        ones; submit the batch (one crossing on the queue-pair backend).
+        """Peek up to ``depth`` records beyond the frontier; prepare the
+        safe ones; hand the batch to the backend in one ``submit`` call
+        (one lock acquisition, one crossing on the queue-pair lane).
 
-        The peek window *slides*: once every node between the frontier and
-        the resume cursor is issued, the next peek continues from the cursor
-        instead of re-walking the whole window — amortized O(1) per
-        intercept on strong-edge loops (long extent lists would otherwise
-        pay an O(depth) walk per call).  A node that was not ready keeps the
-        resume cursor behind it so it is retried; a weak-crossed cursor is
-        discarded because the frontier passing the weak edge can unblock
-        non-pure nodes behind it (recompute from the frontier, the paper's
-        original walk)."""
+        The peek window *slides*: once every record between the frontier
+        and the resume cursor is issued, the next peek continues from the
+        cursor instead of re-walking the whole window — amortized O(1) per
+        intercept regardless of authoring style, weak edges included (the
+        cursor's stored weak flag is conservative relative to the advanced
+        frontier, which can never unsoundly issue a non-pure record).  Only
+        when that conservatism actually deferred one — ``_walk_window``
+        reports it — does the peek fall back to the paper's exact walk from
+        the frontier, so the pre-issue schedule is identical to the
+        original object walker's."""
         t0 = time.perf_counter()
-        frontier = self._cursor
-        assert isinstance(frontier.node, SyscallNode)
-        if self._peek is not None and not self._peek.weak_crossed:
-            cur, dist = self._peek, self._peek_dist
-        else:
-            # n = frontier.next (weak flag of the frontier's own out edge counts)
-            cur, dist = self._follow(frontier.node.out, frontier.epochs, False), 0
-        prefix = True  # still walking the contiguous issued prefix
-        prepared_any = False
-        # snapshot once per peek: on a shared backend the depth property
-        # consults the scheduler (a global lock) for the tenant's lease —
-        # per-node re-evaluation would serialize every peeking thread on it
-        depth = self.depth
+        batch: List[IORequest] = []
+        ok = False
         try:
-            while dist < depth and cur.node is not None:
-                cur2 = self._resolve_branches(cur)
-                if cur2 is None:  # branch decision not ready: stop peeking
-                    break
-                cur = cur2
-                if cur.node is None:  # reached End
-                    break
-                node: SyscallNode = cur.node
-                st = self._node_state(node, cur.epochs)
-                if node is frontier.node and cur.epochs == frontier.epochs:
-                    # the resume cursor caught up with the frontier: intercept()
-                    # is serving this node right now — pre-issuing it here would
-                    # buy no overlap and cost an extra crossing + worker handoff
-                    pass
-                elif not st.issued:
-                    out = node.compute_args(self.ctx, cur.epochs)
-                    if out is not None:
-                        args, link = out
-                        args = self._bind_deferred(args, cur.epochs)
-                        if args is not None:
-                            req = self._make_request(node, args, link,
-                                                     cur.epochs,
-                                                     cur.weak_crossed)
-                            if req is not None:
-                                self.backend.prepare(req)
-                                st.issued = True
-                                st.req = req
-                                self.stats.pre_issued += 1
-                                prepared_any = True
-                    if not st.issued:
-                        prefix = False  # retry this node on the next peek
-                cur = self._follow(node.out, cur.epochs, cur.weak_crossed)
-                dist += 1
-                if prefix:
-                    self._peek, self._peek_dist = cur, dist
-            # only a completed walk submits: if a stub raised mid-batch the
-            # prepared entries stay in the submission queue, where finish()
-            # cancels them before they ever execute — a non-pure request is
-            # only "guaranteed to happen" while the function keeps running.
-            if prepared_any:
-                if self.backend.submit_all():
-                    self.stats.submits += 1
+            # re-offer entries a mid-walk stub error stranded earlier: the
+            # function kept running (it issued this very intercept), so they
+            # are "guaranteed to happen" again — the object walker left them
+            # in the backend SQ for the next flush for the same reason, and
+            # without this a frontier demanding one would wait forever on a
+            # request no worker ever received.
+            if self._orphans:
+                batch.extend(self._orphans)
+                self._orphans.clear()
+            depth = self.depth
+            resume = self._peek
+            if resume is not None:
+                if self._walk_window(resume[0], resume[1], resume[2],
+                                     self._peek_dist, depth, batch):
+                    # stale-weak fallback: exact re-walk from the frontier
+                    self._peek = None
+                    fnid, fep = self._frontier
+                    nid, ep, weak = self.plan.follow_out(fnid, fep)
+                    self._walk_window(nid, ep, weak, 0, depth, batch)
+            else:
+                fnid, fep = self._frontier
+                nid, ep, weak = self.plan.follow_out(fnid, fep)
+                self._walk_window(nid, ep, weak, 0, depth, batch)
+            ok = True
         finally:
+            if batch:
+                if ok:
+                    # only a completed walk submits: if a stub raised
+                    # mid-batch the accumulated entries are quarantined and
+                    # finish() cancels them before they ever execute — a
+                    # non-pure request is only "guaranteed to happen" while
+                    # the function keeps running.
+                    if self.backend.submit(batch):
+                        self.stats.submits += 1
+                else:
+                    self._orphans.extend(batch)
             self.stats.peek_seconds += time.perf_counter() - t0
 
-    def _make_request(self, node: SyscallNode, args, link: bool,
+    def _walk_window(self, nid: int, ep: Tuple[int, ...], weak: bool,
+                     dist: int, depth: int,
+                     batch: List[IORequest]) -> bool:
+        """One pass of the peek window over the plan arrays, appending every
+        safely issuable record to ``batch``.  Returns True iff a non-pure
+        record was deferred *because of* the walk's weak flag — the caller's
+        cue that a conservatively stale resume cursor may have deferred
+        something the exact walk would issue."""
+        p = self.plan
+        kind = p.kind
+        choose = p.choose
+        child_off = p.child_off
+        edge_dst = p.edge_dst
+        edge_weak = p.edge_weak
+        edge_loop = p.edge_loop
+        out_dst = p.out_dst
+        out_weak = p.out_weak
+        out_loop = p.out_loop
+        compute = p.compute
+        state = self._state
+        ctx = self.ctx
+        fnid, fep = self._frontier
+        prefix = True  # still walking the contiguous issued prefix
+        weak_deferral = False
+        while dist < depth and nid != END:
+            # resolve branch records until a syscall record (or End)
+            while nid != END and kind[nid] == KIND_BRANCH:
+                idx = choose[nid](ctx, ep)
+                if idx is None:  # branch decision not ready: stop peeking
+                    return weak_deferral
+                e = child_off[nid] + idx
+                lid = edge_loop[e]
+                if lid >= 0:
+                    ep = ep[:lid] + (ep[lid] + 1,) + ep[lid + 1:]
+                if edge_weak[e]:
+                    weak = True
+                nid = edge_dst[e]
+            if nid == END:
+                return weak_deferral
+            key = (nid, ep)
+            st = state.get(key)
+            if st is None:
+                st = NodeState()
+                state[key] = st
+            if nid == fnid and ep == fep:
+                # the resume cursor caught up with the frontier: intercept()
+                # is serving this record right now — pre-issuing it here
+                # would buy no overlap and cost an extra crossing + worker
+                # handoff
+                pass
+            elif not st.issued:
+                out = compute[nid](ctx, ep)
+                if out is not None:
+                    args, link = out
+                    args = self._bind_deferred(args, ep)
+                    if args is not None:
+                        req = self._make_request(nid, args, link, ep, weak)
+                        if req is not None:
+                            st.issued = True
+                            st.req = req
+                            self.stats.pre_issued += 1
+                            batch.append(req)
+                        elif weak:
+                            # the effect gate said no and the weak flag was
+                            # the reason — possibly conservatively
+                            weak_deferral = True
+                if not st.issued:
+                    prefix = False  # retry this record on the next peek
+            # advance across the syscall record's out edge
+            lid = out_loop[nid]
+            if lid >= 0:
+                ep = ep[:lid] + (ep[lid] + 1,) + ep[lid + 1:]
+            if out_weak[nid]:
+                weak = True
+            nid = out_dst[nid]
+            dist += 1
+            if prefix:
+                self._peek = (nid, ep, weak)
+                self._peek_dist = dist
+        return weak_deferral
+
+    def _make_request(self, nid: int, args, link: bool,
                       epochs: Tuple[int, ...],
                       weak_crossed: bool) -> Optional[IORequest]:
-        """Build the IORequest for a peeked node, or None if the node's
-        effect class forbids pre-issuing here (paper §3.3, extended):
+        """Build the IORequest for a peeked record, or None if its effect
+        class forbids pre-issuing here (paper §3.3, extended):
 
         * PURE — always pre-issuable, unchanged.
         * UNDOABLE — with staging on, always pre-issuable: creates are
@@ -391,17 +455,24 @@ class SpecSession:
           paper's original rule.
         * BARRIER — only when guaranteed; a barrier can never run ahead of
           an exit that might abandon it.
+
+        The effect class is read from the plan when statically known
+        (everything but OPEN) — no per-peek classification call.
         """
-        tag = (node.name, epochs)
-        eff = effect_of(node.sc, args)
+        p = self.plan
+        sc = p.sc[nid]
+        tag = (nid, epochs)
+        eff = p.effect[nid]
+        if eff is None:
+            eff = effect_of(sc, args)
         if eff is Effect.PURE:
-            return IORequest(sc=node.sc, args=args, link=link, tag=tag)
+            return IORequest(sc=sc, args=args, link=link, tag=tag)
         if eff is Effect.UNDOABLE and self._staging_enabled:
             txn = self._txn()
-            if node.sc is Sys.OPEN:
+            if sc is Sys.OPEN:
                 runner, rec = txn.stage_create(
                     args[0], args[1] if len(args) > 1 else "w")
-                return IORequest(sc=node.sc, args=args, link=link, tag=tag,
+                return IORequest(sc=sc, args=args, link=link, tag=tag,
                                  runner=runner, stage=rec)
             # PWRITE into a file this transaction created: on a guaranteed
             # path it needs no undo record (rollback unlinks the file).
@@ -414,13 +485,13 @@ class SpecSession:
             if self._fd_is_staged(txn, args[0]):
                 if weak_crossed:
                     return None
-                return IORequest(sc=node.sc, args=args, link=link, tag=tag)
+                return IORequest(sc=sc, args=args, link=link, tag=tag)
             runner, rec = txn.stage_overwrite(args)
-            return IORequest(sc=node.sc, args=args, link=link, tag=tag,
+            return IORequest(sc=sc, args=args, link=link, tag=tag,
                              runner=runner, stage=rec)
         if not weak_crossed:  # guaranteed: UNDOABLE-unstaged and BARRIER
-            req = IORequest(sc=node.sc, args=args, link=link, tag=tag)
-            if node.sc is Sys.CLOSE:
+            req = IORequest(sc=sc, args=args, link=link, tag=tag)
+            if sc is Sys.CLOSE:
                 # bind the publish barrier to its record NOW, while the fd
                 # is still open; the worker may execute this close (and the
                 # OS recycle the fd number) long before the frontier serves
@@ -452,10 +523,12 @@ class SpecSession:
         same epoch; None if a producer has not been pre-issued (not ready)."""
         if not any(isinstance(a, FromNode) for a in args):
             return args
+        id_of = self.plan.id_of
         bound = []
         for a in args:
             if isinstance(a, FromNode):
-                st = self._state.get((a.name, epochs))
+                pid = id_of.get(a.name)
+                st = self._state.get((pid, epochs)) if pid is not None else None
                 if st is None or st.req is None:
                     return None
                 bound.append(FromRequest(st.req))
@@ -470,26 +543,32 @@ class SpecSession:
         self.stats.intercepted += 1
         # resolve the frontier: real execution has passed any branch points,
         # so their Choice stubs must now be decidable.
-        cur = self._resolve_branches(self._cursor)
-        if cur is None or cur.node is None or not isinstance(cur.node, SyscallNode) \
-                or cur.node.sc is not sc:
+        p = self.plan
+        nid, ep = self._cur
+        res = p.resolve_branches(nid, ep, self.ctx, False)
+        if res is None or res[0] == END or p.sc[res[0]] is not sc:
             # Syscall not described by the graph (e.g. the omitted rare
             # `open` branch in the paper's LSM graph): pass through.
-            if self.strict and cur is not None and cur.node is not None \
-                    and isinstance(cur.node, SyscallNode) and cur.node.sc is not sc:
+            if self.strict and res is not None and res[0] != END \
+                    and p.sc[res[0]] is not sc:
                 raise GraphMismatch(
-                    f"graph {self.graph.name!r}: expected {cur.node.sc} at node "
-                    f"{cur.node.name!r}, application issued {sc}"
+                    f"graph {self.plan.name!r}: expected {p.sc[res[0]]} at "
+                    f"node {p.names[res[0]]!r}, application issued {sc}"
                 )
             return self._exec_untracked(sc, args)
-        self._cursor = Cursor(node=cur.node, epochs=cur.epochs, weak_crossed=False)
-        frontier: SyscallNode = cur.node
+        fnid, fep = res[0], res[1]
+        self._cur = (fnid, fep)
+        self._frontier = (fnid, fep)
 
         # 1-2. peek + batch submit (overlaps with serving the frontier below)
         self._peek_and_preissue()
 
         # 3. serve the frontier
-        st = self._node_state(frontier, cur.epochs)
+        key = (fnid, fep)
+        st = self._state.get(key)
+        if st is None:
+            st = NodeState()
+            self._state[key] = st
         # resolve a close's publish-barrier record BEFORE serving: for a
         # pre-issued close it was bound at pre-issue; for a sync serve the
         # fd is still open right now.  After the close executes, the OS may
@@ -503,7 +582,7 @@ class SpecSession:
                 close_rec = self.staging.record_for_fd(args[0])
         if st.issued and st.req is not None and st.req.state is not ReqState.CANCELLED:
             t0 = time.perf_counter()
-            result = self.backend.wait(st.req)
+            self.backend.wait(st.req)
             blocked = time.perf_counter() - t0
             self.stats.wait_seconds += blocked
             self.stats.served_async += 1
@@ -512,11 +591,11 @@ class SpecSession:
                 # the frontier reached a staged side effect: real execution
                 # now depends on it — eligible for publish at its barrier
                 self.staging.on_demand(st.req.stage)
-            # copy the internal buffer back to the caller (paper Fig. 10
-            # 'result copy' overhead) — bytes results are memcpy'd.
+            # materialize the result out of the internal buffer (paper
+            # Fig. 10 'result copy') — for a leased read this is the one
+            # bounded memcpy out of the registered buffer.
             t0 = time.perf_counter()
-            if isinstance(result, bytes):
-                result = bytes(result)
+            result = st.req.take_result()
             self.stats.harvest_seconds += time.perf_counter() - t0
         else:
             t0 = time.perf_counter()
@@ -535,12 +614,16 @@ class SpecSession:
             self.staging.publish_close(close_rec)
         if self.controller is not None:
             self.controller.on_serve(blocked, served_async, self.backend)
-        if frontier.save_result is not None and not st.harvested:
-            frontier.save_result(self.ctx, cur.epochs, result)
+        save = p.save[fnid]
+        if save is not None and not st.harvested:
+            save(self.ctx, fep, result)
         st.harvested = True
 
         # 4. advance the frontier (the peek window's origin moves with it)
-        self._cursor = self._follow(frontier.out, cur.epochs, False)
+        lid = p.out_loop[fnid]
+        if lid >= 0:
+            fep = fep[:lid] + (fep[lid] + 1,) + fep[lid + 1:]
+        self._cur = (p.out_dst[fnid], fep)
         if self._peek_dist > 0:
             self._peek_dist -= 1
         return result
@@ -582,18 +665,26 @@ class SpecSession:
         """Cancel in-flight speculation and account for wasted work.
 
         Exception-safe and idempotent: even when ``intercept`` raised
-        mid-batch (a stub error between ``prepare`` and ``submit_all``, a
+        mid-batch (a stub error between the walk and ``submit``, a
         strict-mode :class:`GraphMismatch`, a failed request surfacing at
         ``wait``), every pre-issued-but-unharvested request is cancelled or
         drained exactly once — nothing may keep running into the next
         activation that reuses this backend, and nothing may be counted
         twice.  If cancellation itself raises, the drain and the wasted-work
-        accounting still run before the error propagates.
+        accounting still run before the error propagates.  Registered-buffer
+        leases are released back to the pool strictly after the drain, when
+        no worker can still be filling them and every consumer holds
+        materialized bytes.
         """
         if self._finished:
             return self.stats
         self._finished = True
         try:
+            # quarantined batch from a mid-walk stub error: these never
+            # reached the backend, so cancel them here (they are in the
+            # node-state ledger and must be accounted exactly once)
+            for req in self._orphans:
+                req.cancel()
             self.backend.cancel_remaining()
         finally:
             try:
@@ -614,6 +705,10 @@ class SpecSession:
                         self.stats.cancelled += 1
                     elif st.req.state is ReqState.COMPLETED and not st.harvested:
                         self.stats.wasted_completions += 1
+                    if st.req.lease is not None:
+                        # post-drain: no worker is filling it, harvested
+                        # results were materialized — recycle the buffer
+                        st.req.lease.release()
                 try:
                     # settle the write transaction strictly after the drain:
                     # no staged runner can still be executing.  Success

@@ -279,6 +279,16 @@ PATTERNS: Dict[str, Callable[[], ForeactionGraph]] = {
 }
 
 
-def register_patterns(fa) -> None:
+def register_patterns(fa, precompile: bool = False) -> None:
+    """Register the reusable patterns on a Foreactor.
+
+    ``precompile=True`` additionally builds each graph and compiles its
+    :class:`repro.core.plan.GraphPlan` now, so the first wrapped call pays
+    a cache probe instead of build+lower — consumers with latency-sensitive
+    first calls (the serving loop, the data pipeline's first batch) opt in;
+    everyone else keeps the paper's lazy build-on-first-activation."""
     for name, builder in PATTERNS.items():
         fa.register(name, builder)
+    if precompile:
+        for name in PATTERNS:
+            fa.plan(name)

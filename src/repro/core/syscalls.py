@@ -99,7 +99,9 @@ class FromRequest:
             raise self.req.error
         if self.req.result is None and self.req.state.name == "CANCELLED":
             raise RuntimeError("deferred argument's producer was cancelled")
-        return self.req.result
+        # materialize (never hand out the registered buffer itself: the
+        # lease is recycled at session teardown and a raw view would dangle)
+        return self.req.take_result()
 
 
 def resolve_args(args: Tuple[Any, ...]) -> Tuple[Any, ...]:
@@ -127,15 +129,28 @@ def execute(device, sc: Sys, args: Tuple[Any, ...]):
 
 
 def perform(device, req: "IORequest"):
-    """Execute one request against a device, honouring its staged runner.
+    """Execute one request against a device, honouring its staged runner
+    and its registered-buffer lease.
 
     Every execution site (worker pools, the sync backend's deferred
     execution, the shared backend's inline demand fallback) must go through
     here — calling ``execute`` directly would bypass staging and land a
     speculative write in the committed namespace.
+
+    A leased PREAD reads *into* its registered buffer
+    (:meth:`repro.core.device.Device.pread_into`): no per-request result
+    allocation on the device side, and a speculated read the function never
+    demands costs zero allocations.  The request's result is the lease;
+    consumers materialize bytes through :meth:`IORequest.take_result`.
     """
     if req.runner is not None:
         return req.runner(device)
+    lease = req.lease
+    if lease is not None and req.sc is Sys.PREAD:
+        fd, size, offset = resolve_args(req.args)
+        n = device.pread_into(fd, lease.mv[:size], offset)
+        lease.filled(n)
+        return lease
     return execute(device, req.sc, req.args)
 
 
@@ -175,6 +190,10 @@ class IORequest:
     #: run higher values first; shared-backend views stamp their tenant's
     #: priority class here, demand promotions outrank all speculation
     priority: int = 0
+    #: registered-buffer lease (repro.core.buffers), attached by the I/O
+    #: plane at dispatch time for PREAD requests; the worker fills it, and
+    #: the engine releases it back to the pool at session teardown
+    lease: Any = None
     state: ReqState = ReqState.PREPARED
     result: Any = None
     error: Optional[BaseException] = None
@@ -209,6 +228,19 @@ class IORequest:
                 self.done.set()
                 return True
             return False
+
+    def take_result(self):
+        """The request's result with any registered-buffer lease
+        materialized to ``bytes`` (paper Fig. 10's result copy — exactly one
+        bounded memcpy, cached so repeated consumers share the object).
+        Safe under the benign race of two consumers materializing at once:
+        both copies are identical and either assignment wins."""
+        r = self.result
+        lease = self.lease
+        if lease is not None and r is lease:
+            r = lease.to_bytes()
+            self.result = r
+        return r
 
     def wait_result(self):
         self.done.wait()

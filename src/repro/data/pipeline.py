@@ -105,7 +105,8 @@ class TokenBatchLoader:
         self.ds = dataset
         self.cfg = cfg
         self.fa = fa if fa is not None else Foreactor(device=dataset.device, depth=32)
-        register_patterns(self.fa)
+        # precompile: the first batch load is on the training critical path
+        register_patterns(self.fa, precompile=True)
         self.prefetch = prefetch
         self.steps_per_epoch = self.ds.total // cfg.batch_size
         self._perm_cache: Dict[int, np.ndarray] = {}

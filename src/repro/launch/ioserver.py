@@ -141,9 +141,12 @@ def make_foreactor(mode: str, dev, depth=SERVE_DEPTH) -> Foreactor:
                        shared_slots=SHARED_SLOTS)
     else:
         raise ValueError(f"unknown mode {mode!r}")
-    plugins.register_all(fa)
+    # warm the plan cache before the first client request: first-request
+    # latency should pay a dict probe, not a graph build + lowering
+    plugins.register_all(fa, precompile=True)
     fa.register("restore_scan",
                 lambda: build_pread_extents_graph("restore_scan"))
+    fa.plan("restore_scan")
     return fa
 
 

@@ -300,13 +300,22 @@ def capture_lsm_get(lsm, key: int) -> Dict[str, Any]:
     return {"cands": lsm.candidates(key), "key": key}
 
 
-def register_all(fa) -> None:
-    """Register every case-study graph on a Foreactor instance."""
+def register_all(fa, precompile: bool = False) -> None:
+    """Register every case-study graph on a Foreactor instance.
+
+    ``precompile=True`` builds each graph and compiles its
+    :class:`repro.core.plan.GraphPlan` immediately (cached per graph), so a
+    serving process warms the plan cache before the first request instead
+    of lowering on the request path."""
+    names = ("du", "cp", "bptree_scan", "bptree_load", "lsm_get")
     fa.register("du", build_du_graph)
     fa.register("cp", build_cp_graph)
     fa.register("bptree_scan", build_bptree_scan_graph)
     fa.register("bptree_load", build_bptree_load_graph)
     fa.register("lsm_get", build_lsm_get_graph)
+    if precompile:
+        for name in names:
+            fa.plan(name)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,159 @@
+"""Registered buffer pool: size classes, lease lifecycle, recycling, and
+end-to-end integration with the I/O plane (leased reads are byte-identical
+to the classic allocate-per-request path, leases are recycled at session
+teardown, and wasted speculative reads recycle without ever materializing).
+"""
+
+import pytest
+
+from repro.core import (BufferPool, Foreactor, GraphBuilder, MemDevice,
+                        QueuePairBackend, Sys, io)
+from repro.core.buffers import size_class
+from repro.core.syscalls import IORequest, perform
+
+
+# -- unit: size classes and lease lifecycle -----------------------------------
+
+def test_size_class_boundaries():
+    assert size_class(1) == 9          # everything tiny rides the 512 B class
+    assert size_class(512) == 9
+    assert size_class(513) == 10
+    assert size_class(1 << 22) == 22   # top class: 4 MiB
+    assert size_class((1 << 22) + 1) is None
+    assert size_class(0) is None
+
+
+def test_lease_recycles_through_the_pool():
+    pool = BufferPool()
+    a = pool.lease(1000)
+    assert len(a.buf) == 1024
+    a.mv[:4] = b"abcd"
+    a.filled(4)
+    assert a.to_bytes() == b"abcd"
+    a.release()
+    a.release()  # idempotent
+    b = pool.lease(600)  # same class: must reuse the returned buffer
+    assert b.buf is a.buf
+    snap = pool.snapshot()
+    assert snap["leases"] == 2
+    assert snap["recycle_hits"] == 1
+    assert snap["grows"] == 1
+    assert snap["released"] == 1
+
+
+def test_pool_capacity_declines_instead_of_blocking():
+    pool = BufferPool(capacity_bytes=2048)
+    a = pool.lease(1024)
+    b = pool.lease(1024)
+    assert a is not None and b is not None
+    assert pool.lease(1024) is None  # registered budget exhausted
+    assert pool.snapshot()["declined"] == 1
+    a.release()
+    assert pool.lease(1024) is not None  # freed capacity is reusable
+
+
+def test_leased_pread_short_read_matches_device():
+    dev = MemDevice()
+    fd = dev.open("/f", "w")
+    dev.pwrite(fd, b"0123456789", 0)
+    pool = BufferPool()
+    req = IORequest(sc=Sys.PREAD, args=(fd, 64, 4))
+    req.lease = pool.lease(64)
+    result = perform(dev, req)
+    req.finish(result)
+    assert req.take_result() == b"456789"  # short read: filled prefix only
+    assert req.take_result() is req.take_result()  # materialized once
+
+
+# -- integration: the plane leases, the engine recycles -----------------------
+
+def _chain_graph(n, size):
+    b = GraphBuilder("leases")
+    prev = None
+    for i in range(n):
+        b.AddSyscallNode(f"s{i}", Sys.PREAD,
+                         lambda ctx, ep, i=i: ((ctx["fd"], size, i * size),
+                                               False))
+        if prev is not None:
+            b.SyscallSetNext(prev, f"s{i}", weak=True)
+        prev = f"s{i}"
+    b.SyscallSetNext(prev, None, weak=True)
+    return b.Build()
+
+
+def _run(n=8, size=1024, exit_at=None, calls=1):
+    exit_at = n if exit_at is None else exit_at
+    dev = MemDevice()
+    fd = dev.open("/f", "w")
+    dev.pwrite(fd, bytes(range(256)) * ((n * size) // 256 + 1), 0)
+    dev.close(fd)
+    fa = Foreactor(device=dev, backend="io_uring", depth=n, workers=4)
+    fa.register("leases", lambda: _chain_graph(n, size))
+    rfd = dev.open("/f", "r")
+    results = []
+
+    @fa.wrap("leases", lambda: {"fd": rfd})
+    def prog():
+        for i in range(exit_at):
+            results.append(io.pread(dev, rfd, size, i * size))
+
+    pools = []
+    for _ in range(calls):
+        prog()
+    sess_backend = fa._backend_pool.backend  # per-thread plane
+    pools.append(sess_backend.pool)
+    stats = fa.total_stats
+    fa.shutdown()
+    expected = [bytes(dev._files["/f"][i * size:(i + 1) * size])
+                for i in range(exit_at)] * calls
+    return results, expected, pools[0].snapshot(), stats
+
+
+def test_leased_reads_byte_identical_and_recycled():
+    results, expected, pool, stats = _run()
+    assert results == expected
+    assert all(isinstance(r, bytes) for r in results)
+    assert pool["leases"] >= stats.pre_issued > 0
+    # every lease went back to the pool at session teardown
+    assert pool["released"] == pool["leases"]
+
+
+def test_wasted_speculation_recycles_without_allocating():
+    """Early exit: the speculated tail reads complete (or cancel) unread;
+    their leases recycle and a second session reuses the same registered
+    memory — zero steady-state allocation for wasted reads."""
+    results, expected, pool, stats = _run(n=12, exit_at=3, calls=6)
+    assert results == expected
+    assert stats.cancelled + stats.wasted_completions > 0
+    assert pool["released"] == pool["leases"]
+    # steady state: after the first call warmed the pool, later sessions'
+    # leases are recycle hits, not fresh registrations
+    assert pool["recycle_hits"] > 0
+    assert pool["registered_bytes"] <= 12 * 1024 * 2
+
+
+def test_sync_backend_takes_no_pool():
+    fa = Foreactor(device=MemDevice(), backend="sync")
+    fa.register("leases", lambda: _chain_graph(2, 64))
+    sess = fa.activate("leases", {"fd": 0})
+    try:
+        assert sess.backend.pool is None  # the conformance oracle stays pure
+    finally:
+        fa.deactivate(sess)
+        fa.shutdown()
+
+
+def test_oversized_reads_fall_back_to_classic_path():
+    dev = MemDevice()
+    fd = dev.open("/big", "w")
+    dev.pwrite(fd, b"z" * 16, (5 << 22) - 16)
+    dev.close(fd)
+    backend = QueuePairBackend(dev, workers=2)
+    rfd = dev.open("/big", "r")
+    req = IORequest(sc=Sys.PREAD, args=(rfd, 5 << 22, 0))
+    backend.submit([req])
+    backend.drain()
+    assert req.lease is None  # above the top size class: unleased
+    out = req.take_result()
+    assert len(out) == 5 << 22 and out.endswith(b"z" * 16)
+    backend.shutdown()

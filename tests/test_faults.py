@@ -105,7 +105,7 @@ def test_eio_mid_link_chain_cancels_dependent_exactly_once(backend):
     assert exc.value.errno == errno.EIO
 
     # the dependent pwrite of the failed chain was cancelled, exactly once
-    st = sess._state[("pwrite", (FAIL_AT,))]
+    st = sess._state[(sess.plan.id_of["pwrite"], (FAIL_AT,))]
     assert st.req is not None and st.req.state is ReqState.CANCELLED
     assert not st.harvested
     # and it never touched the device: block FAIL_AT of dst is unwritten

@@ -1,0 +1,308 @@
+"""Plan-compilation suite: lowering correctness, cache identity, and
+schedule conformance of the plan interpreter against the paper's walk.
+
+Three layers of guarantee:
+
+1. **Cache identity** — compiling the same graph twice returns the *same*
+   ``GraphPlan`` object (per (graph, depth-mode)); independent builds of the
+   same authoring code lower to structurally identical plans.
+2. **Lowering equivalence** — a symbolic walk over the plan's flat arrays
+   visits exactly the nodes, epochs and weak flags a walk over the authoring
+   object graph visits, for every reusable pattern and case-study plugin
+   graph.
+3. **Schedule conformance** — the integer-cursor interpreter pre-issues the
+   same requests in the same order as the original object walker
+   (Algorithm 1): for deterministic pure programs the walker's schedule is
+   computable in closed form, and the engine must reproduce it at every
+   depth, early exit or not.  (Byte-level result conformance across all
+   backends × depths — including write-bearing programs — lives in
+   tests/test_conformance.py, which runs the interpreter against the sync
+   oracle.)
+"""
+
+import random
+
+import pytest
+from _hypothesis_support import HAS_HYPOTHESIS, given, settings, st
+
+from repro.core import (Foreactor, GraphBuilder, MemDevice, QueuePairBackend,
+                        Sys, compile_plan, io)
+from repro.core.graph import BranchNode, SyscallNode
+from repro.core.patterns import PATTERNS
+from repro.core.plan import END, KIND_BRANCH, KIND_SYSCALL
+from repro.store import plugins
+
+
+def _all_reference_graphs():
+    graphs = [(name, builder()) for name, builder in PATTERNS.items()]
+    graphs += [
+        ("du", plugins.build_du_graph()),
+        ("cp", plugins.build_cp_graph()),
+        ("bptree_scan", plugins.build_bptree_scan_graph()),
+        ("bptree_load", plugins.build_bptree_load_graph()),
+        ("lsm_get", plugins.build_lsm_get_graph()),
+    ]
+    return graphs
+
+
+# -- cache identity -----------------------------------------------------------
+
+def test_compile_twice_returns_identical_plan():
+    for name, g in _all_reference_graphs():
+        p1 = compile_plan(g)
+        p2 = compile_plan(g)
+        assert p1 is p2, name  # cache hit per callsite
+        assert p1.structure() == p2.structure()
+
+
+def test_cache_keyed_by_depth_mode():
+    g = PATTERNS["pread_extents"]()
+    fixed = compile_plan(g, "fixed")
+    adaptive = compile_plan(g, "adaptive")
+    assert fixed is not adaptive
+    assert fixed.structure() == adaptive.structure()
+    assert compile_plan(g, "fixed") is fixed
+    assert compile_plan(g, "adaptive") is adaptive
+
+
+def test_independent_builds_lower_to_identical_structure():
+    """Two builds of the same authoring code differ as objects but must
+    lower to byte-identical plan structures (stub identities excluded)."""
+    for name, builder in PATTERNS.items():
+        a, b = builder(), builder()
+        assert a is not b
+        assert compile_plan(a).structure() == compile_plan(b).structure(), name
+
+
+def test_foreactor_plan_is_cached_per_graph():
+    fa = Foreactor(device=MemDevice(), backend="sync")
+    fa.register("extents", PATTERNS["pread_extents"])
+    p1 = fa.plan("extents")
+    assert p1 is fa.plan("extents")
+    assert p1 is compile_plan(fa.graph("extents"),
+                              "adaptive" if fa.depth == "adaptive" else "fixed")
+
+
+# -- lowering equivalence -----------------------------------------------------
+
+def _object_walk(graph, ctx, max_steps=200):
+    """Reference walk over the authoring object graph (the original
+    engine's cursor rules): yields (name, sc, epochs, weak-into-node)."""
+    out = []
+    node, epochs, weak = graph.start.dst, graph.initial_epochs(), graph.start.weak
+    steps = 0
+    while steps < max_steps:
+        while isinstance(node, BranchNode):
+            idx = node.choose(ctx, epochs)
+            if idx is None:
+                return out, "stall"
+            e = node.children[idx]
+            if e.loop_id is not None:
+                lst = list(epochs)
+                lst[e.loop_id] += 1
+                epochs = tuple(lst)
+            weak = weak or e.weak
+            node = e.dst
+        if node is None:
+            return out, "end"
+        assert isinstance(node, SyscallNode)
+        out.append((node.name, node.sc, epochs, weak))
+        e = node.out
+        if e.loop_id is not None:
+            lst = list(epochs)
+            lst[e.loop_id] += 1
+            epochs = tuple(lst)
+        weak = e.weak
+        node = e.dst
+        steps += 1
+    return out, "limit"
+
+
+def _plan_walk(plan, ctx, max_steps=200):
+    """The same walk over the compiled plan's flat arrays."""
+    out = []
+    nid, epochs, weak = plan.start_dst, plan.initial_epochs(), plan.start_weak
+    steps = 0
+    while steps < max_steps:
+        res = plan.resolve_branches(nid, epochs, ctx, weak)
+        if res is None:
+            return out, "stall"
+        nid, epochs, weak = res
+        if nid == END:
+            return out, "end"
+        assert plan.kind[nid] == KIND_SYSCALL
+        out.append((plan.names[nid], plan.sc[nid], epochs, weak))
+        nid, epochs, weak = plan.follow_out(nid, epochs)
+        steps += 1
+    return out, "limit"
+
+
+# only the Choice stubs run during a symbolic walk, so each ctx carries the
+# branch-decision inputs (plus whatever they read transitively)
+WALK_CTXS = {
+    "stat_list": {"paths": ["/a", "/b", "/c"]},
+    "open_list": {"paths": ["/a", "/b"]},
+    "pread_extents": {"extents": [(3, 8, 0), (3, 8, 8), (3, 8, 16)]},
+    "pwrite_extents": {"writes": [(3, b"x" * 4, 0), (3, b"y" * 4, 4)]},
+    "write_file": {"path": "/f", "writes": [(b"x" * 4, 0)]},
+    "copy_extents": {"pairs": [(3, 4, 8, 0), (3, 4, 8, 8)]},
+    "du": {"root": "/d", "entries": ["x", "y"]},
+    "cp": {"src": "/s", "dst": "/d", "buf_size": 4096, "size": 8192,
+           "sfd": 3, "dfd": 4},
+    "bptree_scan": {"fd": 3, "page_size": 64, "first_leaf": 0,
+                    "last_leaf": 1},
+    "bptree_load": {"nleaves": 2},
+    "lsm_get": {"cands": [1, 2], "key": 1},
+}
+
+
+@pytest.mark.parametrize("name,graph",
+                         _all_reference_graphs(),
+                         ids=[n for n, _ in _all_reference_graphs()])
+def test_plan_walk_matches_object_walk(name, graph):
+    ctx = dict(WALK_CTXS[name])
+    ref, ref_endstate = _object_walk(graph, dict(ctx))
+    got, got_endstate = _plan_walk(compile_plan(graph), dict(ctx))
+    assert got == ref
+    assert got_endstate == ref_endstate
+
+
+def test_topological_ids_are_dense_and_complete():
+    for name, g in _all_reference_graphs():
+        p = compile_plan(g)
+        assert sorted(p.id_of.values()) == list(range(p.num_nodes)), name
+        assert set(p.id_of) == set(g.syscall_nodes) | set(g.branch_nodes)
+        for nid in range(p.num_nodes):
+            if p.kind[nid] == KIND_BRANCH:
+                assert p.choose[nid] is not None
+            else:
+                assert p.compute[nid] is not None
+
+
+# -- schedule conformance -----------------------------------------------------
+# For an all-pure chain of N nodes with weak edges and an early exit after
+# `exit_at` serves, Algorithm 1's pre-issue schedule is closed-form: the
+# first intercept issues nodes 1..depth (node 0 is the frontier), and each
+# later intercept slides the window by one — overall, nodes 1..min(exit_at-1
+# + depth, N-1) in node order, each exactly once.  The original object
+# walker produced exactly this; the plan interpreter must too.
+
+def _expected_chain_schedule(n_nodes, exit_at, depth):
+    upper = min(exit_at - 1 + depth, n_nodes - 1)
+    return [f"s{i}" for i in range(1, upper + 1)]
+
+
+class _ScheduleSpy:
+    def __init__(self, inner):
+        self.inner = inner
+        self.order = []
+
+    def submit(self, batch):
+        self.order.extend(r.tag for r in batch)
+        return self.inner.submit(batch)
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+
+def _run_chain(n_nodes, exit_at, depth):
+    dev = MemDevice()
+    fd = dev.open("/f", "w")
+    dev.pwrite(fd, bytes(64), 0)
+    dev.close(fd)
+    b = GraphBuilder("chain")
+    prev = None
+    for i in range(n_nodes):
+        b.AddSyscallNode(f"s{i}", Sys.PREAD,
+                         lambda ctx, ep, i=i: ((ctx["fd"], 8, i), False))
+        if prev is not None:
+            b.SyscallSetNext(prev, f"s{i}", weak=True)
+        prev = f"s{i}"
+    b.SyscallSetNext(prev, None, weak=True)
+    graph = b.Build()
+
+    fa = Foreactor(device=dev, backend="io_uring", depth=depth, workers=4)
+    fa.register("chain", lambda: graph)
+    rfd = dev.open("/f", "r")
+
+    spy_holder = {}
+
+    @fa.wrap("chain", lambda: {"fd": rfd})
+    def prog():
+        from repro.core.api import current_session
+        sess = current_session()
+        if not isinstance(sess.backend, _ScheduleSpy):
+            sess.backend = _ScheduleSpy(sess.backend)
+        spy_holder["spy"] = sess.backend
+        for i in range(exit_at):
+            io.pread(dev, rfd, 8, i)
+
+    prog()
+    plan = fa.plan("chain")
+    names = [plan.names[nid] for (nid, _ep) in spy_holder["spy"].order]
+    fa.shutdown()
+    return names
+
+
+@pytest.mark.parametrize("depth", [1, 2, 4, 16])
+@pytest.mark.parametrize("n_nodes,exit_at", [(12, 12), (12, 1), (12, 5),
+                                             (3, 2)])
+def test_interpreter_schedule_matches_walker_closed_form(n_nodes, exit_at,
+                                                         depth):
+    got = _run_chain(n_nodes, exit_at, depth)
+    assert got == _expected_chain_schedule(n_nodes, exit_at, depth)
+
+
+# -- property sweep (hypothesis) ---------------------------------------------
+
+if HAS_HYPOTHESIS:
+    _seed_strategy = st.integers(min_value=0, max_value=2 ** 31)
+else:
+    _seed_strategy = st.integers()
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=_seed_strategy)
+def test_random_chain_graphs_compile_deterministically(seed):
+    """Random chain/branch graphs: two independent builds lower to the same
+    structure, and the cache returns one object per build."""
+    rng = random.Random(seed)
+    length = rng.randint(1, 12)
+    weaks = [rng.random() < 0.5 for _ in range(length)]
+
+    def build():
+        b = GraphBuilder(f"r{seed}")
+        prev = None
+        for i in range(length):
+            b.AddSyscallNode(f"s{i}", Sys.PREAD,
+                             lambda ctx, ep, i=i: ((0, 1, i), False))
+            if prev is not None:
+                b.SyscallSetNext(prev, f"s{i}", weak=weaks[i])
+            prev = f"s{i}"
+        b.SyscallSetNext(prev, None, weak=weaks[0])
+        return b.Build()
+
+    g1, g2 = build(), build()
+    p1, p2 = compile_plan(g1), compile_plan(g2)
+    assert p1 is compile_plan(g1)
+    assert p2 is compile_plan(g2)
+    assert p1 is not p2
+    assert p1.structure() == p2.structure()
+
+
+def test_loop_back_only_reachable_node_compiles():
+    """The validator accepts a do-while shape where the body is reachable
+    only through the loop-back edge; lowering must give it an id too."""
+    b = GraphBuilder("dowhile")
+    b.AddSyscallNode("a", Sys.PREAD, lambda ctx, ep: ((0, 1, 0), False))
+    b.AddBranchingNode("br", lambda ctx, ep: 0 if ep[0] < 2 else 1)
+    b.AddSyscallNode("x", Sys.PREAD, lambda ctx, ep: ((0, 1, 1), False))
+    b.SyscallSetNext("a", "br")
+    b.BranchAppendChild("br", "x", loopback=True)
+    b.BranchAppendChild("br", None)
+    b.SyscallSetNext("x", "br")
+    g = b.Build()  # validator passes: x is reachable via the loop edge
+    p = compile_plan(g)
+    assert set(p.id_of) == {"a", "br", "x"}
+    walk, end = _plan_walk(p, {})
+    assert [w[0] for w in walk] == ["a", "x", "x"] and end == "end"

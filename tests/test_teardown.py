@@ -303,3 +303,57 @@ def test_session_finish_is_idempotent_and_backend_reusable(backend):
     fa.deactivate(sess)
     assert sess.finish() is sess.stats  # idempotent finish
     fa.shutdown()
+
+
+def test_orphaned_batch_resubmits_when_function_survives_stub_error():
+    """A stub raising mid-walk quarantines the already-built batch; if the
+    wrapped function catches the error and keeps running, the next
+    intercept must re-offer those requests — otherwise the frontier
+    demanding one waits forever on a request no worker ever received."""
+    from repro.core import Foreactor, GraphBuilder, MemDevice, Sys, io
+
+    dev = MemDevice()
+    fd = dev.open("/o/f", "w")
+    dev.pwrite(fd, bytes(range(64)), 0)
+    dev.close(fd)
+
+    boom = {"armed": True}
+
+    def args_ok(i):
+        return lambda ctx, ep: ((ctx["fd"], 8, i * 8), False)
+
+    def args_boom(ctx, ep):
+        if boom["armed"]:
+            boom["armed"] = False
+            raise RuntimeError("stub error on first peek")
+        return ((ctx["fd"], 8, 16), False)
+
+    b = GraphBuilder("orphans")
+    b.AddSyscallNode("s0", Sys.PREAD, args_ok(0))
+    b.AddSyscallNode("s1", Sys.PREAD, args_ok(1))
+    b.AddSyscallNode("s2", Sys.PREAD, args_boom)
+    b.SyscallSetNext("s0", "s1")
+    b.SyscallSetNext("s1", "s2")
+    b.SyscallSetNext("s2", None)
+    fa = Foreactor(device=dev, backend="io_uring", depth=4, workers=2)
+    fa.register("orphans", lambda: b.Build())
+    rfd = dev.open("/o/f", "r")
+
+    @fa.wrap("orphans", lambda: {"fd": rfd})
+    def prog():
+        out = []
+        for i in range(3):
+            try:
+                out.append(io.pread(dev, rfd, 8, i * 8))
+            except RuntimeError:
+                # the stub error surfaces through the first intercept; the
+                # function keeps going — s1 was stranded in the quarantine
+                out.append(io.pread(dev, rfd, 8, i * 8))
+        return out
+
+    result = prog()
+    stats = fa.total_stats
+    fa.shutdown()
+    assert result == [bytes(range(i * 8, i * 8 + 8)) for i in range(3)]
+    assert stats.pre_issued == (stats.served_async + stats.cancelled
+                                + stats.wasted_completions)

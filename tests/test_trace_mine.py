@@ -205,7 +205,8 @@ def test_mined_barrier_keeps_close_at_the_frontier():
 
 # -- mined vs hand-written: same pre-issue schedule ---------------------------
 class _SpyBackend:
-    """Delegating backend that logs the pre-issue schedule (prepare order)."""
+    """Delegating backend that logs the pre-issue schedule (submit order —
+    the engine hands the whole peeked batch over in one ``submit`` call)."""
 
     def __init__(self, inner):
         self.inner = inner
@@ -214,6 +215,11 @@ class _SpyBackend:
     def prepare(self, req):
         self.prepared.append((req.sc, _normalize(req.args)))
         self.inner.prepare(req)
+
+    def submit(self, batch):
+        for req in batch:
+            self.prepared.append((req.sc, _normalize(req.args)))
+        return self.inner.submit(batch)
 
     def __getattr__(self, name):
         return getattr(self.inner, name)
