@@ -15,6 +15,11 @@ engine-overhead microbenchmarks that gate the compiled-plan refactor:
   drained, materialized.  Pool off is the classic allocate-per-request
   path; pool on leases registered buffers (``pread_into``) and pays one
   bounded memcpy at ``take_result``.
+* **Completion primitive** — per-IORequest completion constant on the
+  pooled stripe table (:mod:`repro.core.completion`) vs the committed
+  per-request ``threading.Event`` baseline
+  (:data:`EVENT_COMPLETION_BASELINE`, measured at commit cb5d139): the
+  full claim/finish/harvest lifecycle and the cancel/poll teardown path.
 
 ``python -m benchmarks.bench_overhead`` writes
 ``benchmarks/results/overhead.json`` (rendered into docs/BENCHMARKS.md by
@@ -57,6 +62,17 @@ PRE_REFACTOR_BASELINE: Dict[str, float] = {
     "lsm_get_us_per_intercept": 43.37,
     "weak_chain_us_per_intercept": 31.10,
     "extent_loop_us_per_intercept": 18.24,
+}
+
+#: Per-IORequest completion cost of the pre-pool implementation (one
+#: ``threading.Event`` + one claim ``threading.Lock`` allocated per
+#: request), measured at commit cb5d139 with exactly the
+#: ``measure_completion`` harness below (best of 5).  The pooled-completion
+#: acceptance gate: the stripe-table primitive must keep the per-record
+#: constant below these.
+EVENT_COMPLETION_BASELINE: Dict[str, float] = {
+    "lifecycle_us_per_req": 12.72,  # construct + claim + finish + wait_result
+    "cancel_us_per_req": 7.89,      # construct + cancel + poll
 }
 
 
@@ -299,12 +315,49 @@ def measure_result_copy(n: int = 512, size: int = 64 * 1024,
 
 
 # ---------------------------------------------------------------------------
+# Completion-primitive microbenchmark (pooled stripes vs per-request Event)
+# ---------------------------------------------------------------------------
+def measure_completion(n: int = 20000, repeats: int = 5) -> Dict[str, float]:
+    """Per-IORequest completion constant on the pooled stripe table, with
+    the same loops the committed :data:`EVENT_COMPLETION_BASELINE` was
+    measured with on the per-request-Event implementation:
+
+    * **lifecycle** — construct, claim (worker pickup), finish, harvest via
+      ``wait_result`` (the already-completed fast path every pre-issued-
+      and-demanded request takes);
+    * **cancel** — construct, cancel, poll ``is_done`` (the early-exit
+      teardown path every wasted speculative request takes).
+
+    At open-loop scale both run millions of times; the per-record constant
+    is what the pooled primitive exists to shrink."""
+    best_life = best_cancel = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _i in range(n):
+            r = IORequest(sc=Sys.PREAD, args=(0, 16, 0))
+            r.claim()
+            r.finish(b"x")
+            r.wait_result()
+        best_life = min(best_life, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        for _i in range(n):
+            r = IORequest(sc=Sys.PREAD, args=(0, 16, 0))
+            r.cancel()
+            r.is_done()
+        best_cancel = min(best_cancel, time.perf_counter() - t0)
+    return {"lifecycle_us_per_req": best_life / n * 1e6,
+            "cancel_us_per_req": best_cancel / n * 1e6}
+
+
+# ---------------------------------------------------------------------------
 # Structured results + the CI gate
 # ---------------------------------------------------------------------------
 def collect(dry_run: bool = False) -> Dict:
     peek = measure_peek(repeats=3 if dry_run else 5)
     copy = measure_result_copy(n=128 if dry_run else 512,
                                repeats=3 if dry_run else 5)
+    comp = measure_completion(n=5000 if dry_run else 20000,
+                              repeats=3 if dry_run else 5)
     base = PRE_REFACTOR_BASELINE
     result = {
         "config": {
@@ -327,6 +380,16 @@ def collect(dry_run: bool = False) -> Dict:
                 / peek["extent_loop_us_per_intercept"],
         },
         "result_copy": copy,
+        "completion": {
+            "baseline": dict(EVENT_COMPLETION_BASELINE),
+            "pooled": comp,
+            "speedup_lifecycle":
+                EVENT_COMPLETION_BASELINE["lifecycle_us_per_req"]
+                / comp["lifecycle_us_per_req"],
+            "speedup_cancel":
+                EVENT_COMPLETION_BASELINE["cancel_us_per_req"]
+                / comp["cancel_us_per_req"],
+        },
     }
     return result
 
@@ -358,6 +421,16 @@ def check(fresh: Dict, committed: Dict) -> List[str]:
         errs.append(
             f"buffer pool no longer wins result delivery: speedup "
             f"{fresh['result_copy']['speedup']:.2f}x < 1.0x")
+    comp = fresh.get("completion")
+    if comp is not None:
+        base_c = comp["baseline"]
+        got_c = comp["pooled"]
+        for key in ("lifecycle_us_per_req", "cancel_us_per_req"):
+            if got_c[key] > base_c[key]:
+                errs.append(
+                    f"pooled completion regressed past the per-request-"
+                    f"Event baseline: {key} {got_c[key]:.2f} us vs "
+                    f"{base_c[key]:.2f} us")
     return errs
 
 
@@ -381,6 +454,14 @@ def run() -> List[Row]:
          "alloc-per-request"),
         ("result_copy_pool_on", result["result_copy"]["pool_on"]["us_per_op"],
          f"registered buffers, {result['result_copy']['speedup']:.2f}x"),
+        ("completion_lifecycle_pooled",
+         result["completion"]["pooled"]["lifecycle_us_per_req"],
+         f"{result['completion']['speedup_lifecycle']:.2f}x vs "
+         "per-request Event"),
+        ("completion_cancel_pooled",
+         result["completion"]["pooled"]["cancel_us_per_req"],
+         f"{result['completion']['speedup_cancel']:.2f}x vs "
+         "per-request Event"),
     ]
     return rows
 

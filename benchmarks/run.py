@@ -22,6 +22,12 @@ Prints ``name,us_per_call,derived`` CSV.  Sections:
 * Write — undoable write-path speculation: staged checkpoint saves,
   speculative shard writes, write-behind checkpointing vs the serial write
   path (bench_write; results in benchmarks/results/write.json)
+* Open loop — fixed-arrival-rate serving sweep to saturation: throughput
+  vs p99 and peak in-flight sessions (bench_openloop; results in
+  benchmarks/results/openloop.json, table via ``python -m
+  benchmarks.bench_openloop --table``, and ``python -m
+  benchmarks.bench_openloop --dry-run --check`` is the CI openloop-smoke
+  gate)
 
 Roofline tables (§Roofline) are produced separately by
 ``python -m benchmarks.roofline`` from the dry-run reports.
@@ -32,8 +38,9 @@ import time
 
 
 def main() -> None:
-    from . import (bench_adaptive, bench_bptree, bench_lsm, bench_overhead,
-                   bench_serve, bench_sharding, bench_utilities, bench_write)
+    from . import (bench_adaptive, bench_bptree, bench_lsm, bench_openloop,
+                   bench_overhead, bench_serve, bench_sharding,
+                   bench_utilities, bench_write)
     from .common import fmt
 
     sections = [
@@ -45,6 +52,7 @@ def main() -> None:
         ("adaptive_depth", bench_adaptive.run),
         ("serving_multi_tenant", bench_serve.run),
         ("write_speculation", bench_write.run),
+        ("serving_open_loop", bench_openloop.run),
     ]
     print("name,us_per_call,derived")
     for name, fn in sections:

@@ -27,6 +27,7 @@ from .backends import (
 )
 from .lanes import SubmissionLane
 from .buffers import BufferLease, BufferPool
+from .completion import CompletionPool, completion_pool
 from .device import (
     Device, DeviceProfile, MemDevice, NVME_PROFILE, OSDevice, REMOTE_PROFILE,
     ShardedDevice, SimulatedDevice,
@@ -43,6 +44,7 @@ __all__ = [
     "SharedBackend", "SlotScheduler", "SubmissionLane", "SyncBackend",
     "ThreadPoolBackend", "make_backend",
     "BufferLease", "BufferPool",
+    "CompletionPool", "completion_pool",
     "Device", "DeviceProfile", "MemDevice", "NVME_PROFILE", "OSDevice",
     "REMOTE_PROFILE", "ShardedDevice", "SimulatedDevice",
     "DepthController", "GraphMismatch", "SessionStats", "SpecSession",

@@ -159,7 +159,7 @@ class IOPlane(Backend):
     def inflight(self) -> int:
         # prune completed entries while counting, keeping the ledger short
         with self._lock:
-            self._submitted = [r for r in self._submitted if not r.done.is_set()]
+            self._submitted = [r for r in self._submitted if not r.is_done()]
             return len(self._submitted)
 
     def prepare(self, req: IORequest) -> None:
@@ -173,6 +173,12 @@ class IOPlane(Backend):
             batch, self._sq = self._sq, []
         return self.submit(batch)
 
+    #: amortized ledger-compaction threshold: above this many entries,
+    #: submit() drops completed ones in place.  Without it a long-lived
+    #: plane under open-loop load (sessions come and go, nobody calls
+    #: ``inflight``) grows the ledger without bound.
+    _LEDGER_COMPACT = 2048
+
     def submit(self, batch: List[IORequest]) -> int:
         if not batch:
             return 0
@@ -181,10 +187,16 @@ class IOPlane(Backend):
             # wait); returns 0 — nothing was made eligible to run early
             with self._lock:
                 self._submitted.extend(batch)
+                if len(self._submitted) > self._LEDGER_COMPACT:
+                    self._submitted = [r for r in self._submitted
+                                       if not r.is_done()]
             return 0
         self._dispatch(batch)
         with self._lock:
             self._submitted.extend(batch)
+            if len(self._submitted) > self._LEDGER_COMPACT:
+                self._submitted = [r for r in self._submitted
+                                   if not r.is_done()]
         return len(batch)
 
     # SharedBackend views stage their entries privately and submit through
@@ -217,7 +229,7 @@ class IOPlane(Backend):
         for lane in self.lanes:
             lane.drain()
         with self._lock:
-            self._submitted = [r for r in self._submitted if not r.done.is_set()]
+            self._submitted = [r for r in self._submitted if not r.is_done()]
 
     def shutdown(self) -> None:
         for lane in self.lanes:
@@ -235,7 +247,7 @@ class IOPlane(Backend):
         for req in batch:
             if req.sc is Sys.PREAD and req.runner is None \
                     and req.lease is None and isinstance(req.args[1], int):
-                req.lease = pool.lease(req.args[1])
+                req.lease = pool.lease(req.args[1], tenant=req.tenant)
 
     def _dispatch(self, batch: List[IORequest]) -> None:
         self._lease_buffers(batch)
@@ -356,22 +368,34 @@ def resolve_priority(priority) -> int:
 
 
 class _TenantState:
-    """Scheduler-side view of one tenant: its weight/priority and the ledger
-    of speculative requests it currently holds slots for."""
+    """Scheduler-side view of one tenant: its weight/priority, the live
+    speculative-slot count, and the eviction-candidate ledger.
 
-    __slots__ = ("name", "weight", "priority", "views", "spec")
+    ``spec_count`` is the authoritative occupancy (incremented at admission,
+    decremented exactly once per request by the completion callback or by
+    demand conversion); ``spec`` is only the *candidate list* for pressure
+    eviction — it may lag behind (holding already-terminal or demanded
+    entries, which eviction skips by flag) and is compacted amortized, so no
+    path ever scans every tenant's whole ledger."""
+
+    __slots__ = ("name", "weight", "priority", "views", "spec", "spec_count")
 
     def __init__(self, name: str, weight: float, priority: int):
         self.name = name
         self.weight = weight
         self.priority = priority
         self.views: set = set()
-        # (request, owning view) — admitted speculation; demanded entries are
-        # removed, so everything here is fair game for pressure eviction
+        # (request, owning view) — admitted speculation still worth evicting;
+        # stale entries are skipped via req._spec_counted, not by scanning
         self.spec: List[Tuple[IORequest, "SharedBackend"]] = []
+        self.spec_count = 0
 
-    def prune(self) -> None:
-        self.spec = [(r, v) for (r, v) in self.spec if not r.done.is_set()]
+    def compact(self) -> None:
+        """Drop stale candidates once the list is far longer than the live
+        count (amortized O(1) per admission)."""
+        if len(self.spec) > 4 * self.spec_count + 16:
+            self.spec = [(r, v) for (r, v) in self.spec
+                         if getattr(r, "_spec_counted", False)]
 
 
 class SlotScheduler:
@@ -389,12 +413,41 @@ class SlotScheduler:
     least already-paid queue time).  Total speculative occupancy therefore
     never exceeds ``capacity``: a demand request can never wait behind more
     than ``capacity`` speculative ones.
+
+    **Admission is O(chain), independent of tenant count.**  The original
+    implementation pruned every tenant's request ledger and re-summed every
+    tenant's occupancy on each ``admit``/``make_room`` — O(tenants ×
+    requests) per admission, which at open-loop scale (thousands of
+    sessions) turns the scheduler itself into the bottleneck.  Occupancy is
+    now pure counter maintenance: admission increments ``spec_count`` /
+    ``_spec_total``, and every admitted request carries a completion
+    callback (:mod:`repro.core.completion` fires it exactly once, on finish
+    *or* cancel) that decrements them.  The active-weight sum behind the
+    fair share is maintained incrementally at attach/detach.  Two locks,
+    strictly ordered: ``_lock`` (outer — tenant table, candidate ledgers,
+    active weight) and ``_count_lock`` (inner — the occupancy counters the
+    completion callback touches; the callback takes only this one, so a
+    worker finishing a request never contends with a long admission and
+    never deadlocks against ``make_room`` cancelling under ``_lock``).
     """
 
     def __init__(self, capacity: int):
         self.capacity = max(1, int(capacity))
         self._lock = threading.Lock()
+        self._count_lock = threading.Lock()
         self._tenants: Dict[str, _TenantState] = {}
+        #: sum of weights of tenants with >= 1 attached view (under _lock)
+        self._active_weight = 0.0
+        #: authoritative speculative occupancy (under _count_lock)
+        self._spec_total = 0
+        #: tenants with spec_count > 0 — the only ones make_room must look
+        #: at; bounded by capacity, not by tenant count (under _count_lock)
+        self._spec_tenants: set = set()
+        #: tenant names whose last slot freed after their last view detached
+        #: (the callback cannot take _lock, so it queues the reap and the
+        #: next attach/detach/admit sweeps it — the tenant table stays
+        #: bounded by *live* tenants even at 10k sessions)
+        self._reap: List[str] = []
         # observability (tests + bench report)
         self.max_spec_inflight = 0
         self.admitted = 0
@@ -403,14 +456,30 @@ class SlotScheduler:
         self.demand_promotions = 0
 
     # -- tenant lifecycle ---------------------------------------------------
+    def _reap_idle(self) -> None:
+        """Drop tenants whose last slot freed after detach (under _lock)."""
+        with self._count_lock:
+            names, self._reap = self._reap, []
+            for name in names:
+                t = self._tenants.get(name)
+                if t is not None and not t.views and t.spec_count == 0:
+                    self._spec_tenants.discard(t)
+                    del self._tenants[name]
+
     def attach(self, view: "SharedBackend") -> None:
         with self._lock:
+            self._reap_idle()
             t = self._tenants.get(view.tenant)
             if t is None:
                 t = _TenantState(view.tenant, view.weight, view.priority)
                 self._tenants[view.tenant] = t
+                self._active_weight += t.weight
             else:
                 # latest activation's weight/priority wins for the tenant
+                if t.views:
+                    self._active_weight += view.weight - t.weight
+                else:
+                    self._active_weight += view.weight
                 t.weight = view.weight
                 t.priority = view.priority
             t.views.add(view)
@@ -420,26 +489,47 @@ class SlotScheduler:
             t = self._tenants.get(view.tenant)
             if t is None:
                 return
+            had = view in t.views
             t.views.discard(view)
-            t.prune()
-            if not t.views and not t.spec:
-                del self._tenants[view.tenant]
+            if had and not t.views:
+                self._active_weight -= t.weight
+            with self._count_lock:
+                if not t.views and t.spec_count == 0:
+                    self._spec_tenants.discard(t)
+                    del self._tenants[view.tenant]
+            self._reap_idle()
 
     # -- shares -------------------------------------------------------------
-    def _share(self, name: str) -> int:
-        t = self._tenants.get(name)
-        if t is None:
-            return self.capacity
-        active_w = sum(s.weight for s in self._tenants.values() if s.views)
-        active_w = max(active_w, t.weight, 1e-9)
+    def _share_of(self, t: _TenantState) -> int:
+        """Fair share from the incrementally maintained active-weight sum —
+        O(1), requires _lock."""
+        active_w = max(self._active_weight, t.weight, 1e-9)
         return max(1, int(self.capacity * t.weight / active_w))
 
     def fair_share(self, tenant: str) -> int:
         with self._lock:
-            return self._share(tenant)
+            t = self._tenants.get(tenant)
+            if t is None:
+                return self.capacity
+            return self._share_of(t)
 
-    def _total_spec(self) -> int:
-        return sum(len(t.spec) for t in self._tenants.values())
+    # -- completion accounting ---------------------------------------------
+    def _spec_done(self, req: IORequest) -> None:
+        """Completion callback: release the slot this request held.  Fired
+        exactly once per admitted request (finish or cancel, whichever comes
+        first — the completion pool guarantees the swap); requests already
+        converted to demand carry a cleared flag and fall through."""
+        with self._count_lock:
+            if not getattr(req, "_spec_counted", False):
+                return
+            req._spec_counted = False
+            ten: _TenantState = req._spec_tenant
+            ten.spec_count -= 1
+            self._spec_total -= 1
+            if ten.spec_count == 0:
+                self._spec_tenants.discard(ten)
+                if not ten.views:
+                    self._reap.append(ten.name)
 
     # -- admission ----------------------------------------------------------
     def admit(self, view: "SharedBackend",
@@ -450,73 +540,110 @@ class SlotScheduler:
         no slots at all (a tenant is never locked out of speculation
         entirely by a share smaller than its shortest chain)."""
         with self._lock:
-            for t in self._tenants.values():
-                t.prune()
             ten = self._tenants.get(view.tenant)
             if ten is None:  # detached view: nothing speculates anymore
                 return [], chains
-            share = self._share(view.tenant)
-            total = self._total_spec()
+            share = self._share_of(ten)
             admitted: List[List[IORequest]] = []
             deferred: List[List[IORequest]] = []
-            for chain in chains:
-                n = len(chain)
-                fits_share = len(ten.spec) + n <= share or not ten.spec
-                if fits_share and total + n <= self.capacity:
-                    ten.spec.extend((r, view) for r in chain)
-                    total += n
-                    admitted.append(chain)
-                    self.admitted += n
-                else:
-                    deferred.append(chain)
-                    # count each chain's first denial only: deferred chains
-                    # are re-offered on every wait/flush, and counting the
-                    # retries would inflate the metric by orders of magnitude
-                    if not getattr(chain[0], "_defer_counted", False):
-                        chain[0]._defer_counted = True
-                        self.deferred += n
-            self.max_spec_inflight = max(self.max_spec_inflight, total)
+            with self._count_lock:
+                total = self._spec_total
+                cnt = ten.spec_count
+                for chain in chains:
+                    n = len(chain)
+                    fits_share = cnt + n <= share or cnt == 0
+                    if fits_share and total + n <= self.capacity:
+                        cnt += n
+                        total += n
+                        admitted.append(chain)
+                        self.admitted += n
+                    else:
+                        deferred.append(chain)
+                        # count each chain's first denial only: deferred
+                        # chains are re-offered on every wait/flush, and
+                        # counting the retries would inflate the metric by
+                        # orders of magnitude
+                        if not getattr(chain[0], "_defer_counted", False):
+                            chain[0]._defer_counted = True
+                            self.deferred += n
+                if admitted:
+                    ten.spec_count = cnt
+                    self._spec_total = total
+                    self._spec_tenants.add(ten)
+                if total > self.max_spec_inflight:
+                    self.max_spec_inflight = total
+            # hook the slot release before the caller dispatches: these
+            # requests are not yet visible to any worker or canceller (the
+            # candidate append below is what exposes them to eviction, and
+            # we still hold _lock), so plain assignment cannot race the
+            # completion pool's callback swap.
+            for chain in admitted:
+                for r in chain:
+                    r._spec_tenant = ten
+                    r._spec_counted = True
+                    r.completion_cb = self._spec_done
+                    ten.spec.append((r, view))
+            ten.compact()
             return admitted, deferred
 
     # -- demand -------------------------------------------------------------
     def note_demanded(self, view: "SharedBackend", req: IORequest) -> None:
         """A speculative request just became demanded (the frontier reached
         it): it no longer counts against anyone's budget and must never be
-        evicted."""
-        with self._lock:
-            t = self._tenants.get(view.tenant)
-            if t is not None:
-                t.spec = [(r, v) for (r, v) in t.spec if r is not req]
+        evicted.  Clearing the flag both releases the slot now and turns the
+        still-attached completion callback into a no-op (exactly-once)."""
+        with self._count_lock:
+            if not getattr(req, "_spec_counted", False):
+                return
+            req._spec_counted = False
+            ten: _TenantState = req._spec_tenant
+            ten.spec_count -= 1
+            self._spec_total -= 1
+            if ten.spec_count == 0:
+                self._spec_tenants.discard(ten)
 
     def make_room(self, need: int = 1) -> int:
         """Pressure-triggered cancellation: free ``need`` slots for demand
         I/O by cancelling speculative requests that have not started
         executing.  Victim order: priority class ascending, occupancy/share
-        ratio descending, newest request first.  Returns #evicted."""
+        ratio descending, newest request first.  Returns #evicted.
+
+        The no-pressure fast path is one counter read; under pressure only
+        tenants actually holding slots (``_spec_tenants``, bounded by
+        capacity) are examined.  ``req.cancel()`` is issued outside
+        ``_count_lock`` because it fires the slot-release callback, which
+        takes ``_count_lock`` itself."""
+        with self._count_lock:
+            if self._spec_total + need <= self.capacity:
+                return 0
         evicted = 0
         with self._lock:
-            for t in self._tenants.values():
-                t.prune()
-            while self._total_spec() + need > self.capacity:
-                victims = [
-                    t for t in self._tenants.values()
-                    if any(r.state is ReqState.PREPARED for (r, _v) in t.spec)
-                ]
-                if not victims:
-                    break
-                victims.sort(key=lambda t: (
-                    t.priority, -len(t.spec) / self._share(t.name)))
-                t = victims[0]
-                done = False
-                for i in range(len(t.spec) - 1, -1, -1):
-                    req, _view = t.spec[i]
-                    if req.cancel():  # atomic: only if no worker claimed it
-                        t.spec.pop(i)
-                        self.evictions += 1
-                        evicted += 1
-                        done = True
+            while True:
+                with self._count_lock:
+                    if self._spec_total + need <= self.capacity:
                         break
-                if not done:  # racing workers picked everything up
+                    victims = sorted(
+                        self._spec_tenants,
+                        key=lambda t: (t.priority,
+                                       -t.spec_count / self._share_of(t),
+                                       t.name))
+                progressed = False
+                for t in victims:
+                    for i in range(len(t.spec) - 1, -1, -1):
+                        req, _view = t.spec[i]
+                        if not getattr(req, "_spec_counted", False):
+                            continue  # demanded or already terminal: immune
+                        if req.state is not ReqState.PREPARED:
+                            continue  # a worker is already running it
+                        if req.cancel():  # atomic; fires the slot release
+                            t.spec.pop(i)
+                            self.evictions += 1
+                            evicted += 1
+                            progressed = True
+                            break
+                    if progressed:
+                        break
+                if not progressed:  # racing workers picked everything up
                     break
         return evicted
 
@@ -525,11 +652,11 @@ class SlotScheduler:
             self.demand_promotions += 1
 
     def snapshot(self) -> Dict[str, int]:
-        with self._lock:
+        with self._lock, self._count_lock:
             return {
                 "capacity": self.capacity,
                 "tenants": len(self._tenants),
-                "spec_inflight": self._total_spec(),
+                "spec_inflight": self._spec_total,
                 "max_spec_inflight": self.max_spec_inflight,
                 "admitted": self.admitted,
                 "deferred": self.deferred,
@@ -582,7 +709,7 @@ class SharedBackend(Backend):
 
     def inflight(self) -> int:
         with self._lock:
-            self._submitted = [r for r in self._submitted if not r.done.is_set()]
+            self._submitted = [r for r in self._submitted if not r.is_done()]
             return len(self._submitted) + sum(len(c) for c in self._deferred)
 
     #: priority stamp for demand-promoted chains: above every priority
@@ -591,6 +718,7 @@ class SharedBackend(Backend):
 
     def prepare(self, req: IORequest) -> None:
         req.priority = self.priority  # tenant class orders the worker queue
+        req.tenant = self.tenant  # buffer leases charge this tenant's budget
         with self._lock:
             self._sq.append(req)
 
@@ -609,6 +737,7 @@ class SharedBackend(Backend):
             return 0
         for req in batch:
             req.priority = self.priority
+            req.tenant = self.tenant
         with self._lock:
             self._deferred.extend(_chains(batch))
         return self._flush_deferred()
@@ -703,9 +832,9 @@ class SharedBackend(Backend):
         with self._lock:
             submitted = list(self._submitted)
         for req in submitted:
-            req.done.wait()
+            req.wait_done()
         with self._lock:
-            self._submitted = [r for r in self._submitted if not r.done.is_set()]
+            self._submitted = [r for r in self._submitted if not r.is_done()]
 
     def shutdown(self) -> None:
         """Release the lease (the inner backend is owned by the Foreactor

@@ -63,14 +63,16 @@ def size_class(size: int) -> Optional[int]:
 class BufferLease:
     """One registered buffer, on loan from the pool to one ``IORequest``."""
 
-    __slots__ = ("pool", "cls", "buf", "mv", "nbytes", "_released")
+    __slots__ = ("pool", "cls", "buf", "mv", "nbytes", "tenant", "_released")
 
-    def __init__(self, pool: "BufferPool", cls: int, buf: bytearray):
+    def __init__(self, pool: "BufferPool", cls: int, buf: bytearray,
+                 tenant: Optional[str] = None):
         self.pool = pool
         self.cls = cls
         self.buf = buf
         self.mv = memoryview(buf)
         self.nbytes = 0
+        self.tenant = tenant
         self._released = False
 
     def filled(self, n: int) -> None:
@@ -103,46 +105,88 @@ class BufferPool:
     :meth:`lease` returns ``None`` and the request falls back to the
     allocate-per-request path instead of blocking.  Thread-safe; stats are
     exposed to benchmarks (``bench_overhead``) and tests.
+
+    **Per-tenant budgets** (multi-tenant serving): when a lease names a
+    tenant, the class size is charged against that tenant's
+    ``tenant_budget_bytes`` slice of the registered memory and refunded at
+    release.  A tenant at its budget is declined — it falls back to the
+    allocate-per-request path for *its own* reads — without touching the
+    free lists, so one huge-read tenant can never drain the recycled
+    buffers every other tenant's leases ride on.  Untenanted leases
+    (private, single-session backends) are uncharged, as before.
     """
 
-    def __init__(self, capacity_bytes: int = 64 << 20):
+    def __init__(self, capacity_bytes: int = 64 << 20,
+                 tenant_budget_bytes: Optional[int] = None):
         self.capacity_bytes = capacity_bytes
+        #: per-tenant slice of the registered memory; the default (1/8 of
+        #: capacity) lets a handful of hot tenants saturate the pool while
+        #: no single one can claim more than its slice
+        self.tenant_budget_bytes = (capacity_bytes // 8
+                                    if tenant_budget_bytes is None
+                                    else tenant_budget_bytes)
         self._free: Dict[int, List[bytearray]] = {}
         self._lock = threading.Lock()
         #: total bytes currently registered (idle + leased)
         self.registered_bytes = 0
+        #: bytes currently charged to each tenant (leased, not yet refunded)
+        self._charged: Dict[str, int] = {}
         # observability
         self.leases = 0
         self.recycle_hits = 0
         self.grows = 0
         self.declined = 0
+        self.budget_declines = 0
         self.released = 0
 
-    def lease(self, size: int) -> Optional[BufferLease]:
+    def lease(self, size: int,
+              tenant: Optional[str] = None) -> Optional[BufferLease]:
         cls = size_class(size)
         if cls is None:
             with self._lock:
                 self.declined += 1
             return None
+        nbytes = 1 << cls
         with self._lock:
+            if tenant is not None:
+                charged = self._charged.get(tenant, 0)
+                if charged + nbytes > self.tenant_budget_bytes:
+                    # over budget: this tenant allocates classically; the
+                    # free lists stay untouched for everyone else
+                    self.declined += 1
+                    self.budget_declines += 1
+                    return None
             free = self._free.get(cls)
             if free:
                 buf = free.pop()
                 self.recycle_hits += 1
             else:
-                if self.registered_bytes + (1 << cls) > self.capacity_bytes:
+                if self.registered_bytes + nbytes > self.capacity_bytes:
                     self.declined += 1
                     return None
-                buf = bytearray(1 << cls)
-                self.registered_bytes += 1 << cls
+                buf = bytearray(nbytes)
+                self.registered_bytes += nbytes
                 self.grows += 1
+            if tenant is not None:
+                self._charged[tenant] = self._charged.get(tenant, 0) + nbytes
             self.leases += 1
-        return BufferLease(self, cls, buf)
+        return BufferLease(self, cls, buf, tenant)
 
     def _give_back(self, lease: BufferLease) -> None:
         with self._lock:
             self.released += 1
+            if lease.tenant is not None:
+                left = self._charged.get(lease.tenant, 0) - (1 << lease.cls)
+                if left > 0:
+                    self._charged[lease.tenant] = left
+                else:  # fully refunded: drop the entry (bounded tenant map)
+                    self._charged.pop(lease.tenant, None)
             self._free.setdefault(lease.cls, []).append(lease.buf)
+
+    def charged_bytes(self, tenant: str) -> int:
+        """Bytes currently charged to ``tenant`` (0 once fully refunded)."""
+        with self._lock:
+            return self._charged.get(tenant, 0)
 
     @property
     def hit_rate(self) -> float:
@@ -158,5 +202,7 @@ class BufferPool:
                 else 0.0,
                 "grows": self.grows,
                 "declined": self.declined,
+                "budget_declines": self.budget_declines,
                 "released": self.released,
+                "tenants_charged": len(self._charged),
             }

@@ -20,6 +20,9 @@ import heapq
 import threading
 from typing import List, Optional, Sequence, Tuple
 
+from .completion import CompletionPool, completion_pool  # noqa: F401 — the
+# lane-level completion machinery (CQ analogue) lives in repro.core.completion;
+# re-exported here because lanes are where completions are produced
 from .device import Device, DeviceStats
 from .syscalls import IORequest, perform
 

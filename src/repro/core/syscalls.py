@@ -24,10 +24,11 @@ defined in docs/GLOSSARY.md.
 
 from __future__ import annotations
 
-import threading
 from dataclasses import dataclass, field
 from enum import Enum
 from typing import Any, Callable, Optional, Tuple
+
+from .completion import completion_pool
 
 
 class Sys(Enum):
@@ -94,7 +95,7 @@ class FromRequest:
         # The producer may have been submitted in an earlier batch and still
         # be in flight; block until it completes.  (Inside a Link chain the
         # producer has necessarily finished already.)
-        self.req.done.wait()
+        self.req.wait_done()
         if self.req.error is not None:
             raise self.req.error
         if self.req.result is None and self.req.state.name == "CANCELLED":
@@ -194,40 +195,70 @@ class IORequest:
     #: plane at dispatch time for PREAD requests; the worker fills it, and
     #: the engine releases it back to the pool at session teardown
     lease: Any = None
+    #: owning tenant name on a shared backend (stamped by the view alongside
+    #: the priority class); the buffer pool charges leases against it
+    tenant: Optional[str] = None
+    #: completion hook — fired exactly once, on whichever of finish/cancel
+    #: terminates the request first (the slot scheduler hangs its O(1) slot
+    #: accounting here).  Fired outside the stripe lock; must not block.
+    completion_cb: Optional[Callable[["IORequest"], None]] = \
+        field(default=None, repr=False)
     state: ReqState = ReqState.PREPARED
     result: Any = None
     error: Optional[BaseException] = None
-    done: threading.Event = field(default_factory=threading.Event, repr=False)
-    # serializes the PREPARED -> {SUBMITTED, CANCELLED} transition: a worker
-    # claiming the request and a canceller (early exit, scheduler eviction)
-    # race on the same check-then-act, and whoever loses must see the other's
-    # state — otherwise a cancelled request could still execute (or execute
-    # twice via the demand-promotion fallback).
-    _claim_lock: threading.Lock = field(default_factory=threading.Lock,
-                                        repr=False)
+    #: terminal flag, readable lock-free under the GIL (result/error/state
+    #: are written strictly before it); blocking waits ride the process-wide
+    #: completion pool (repro.core.completion) instead of a per-request
+    #: Event — zero lock allocations on the per-request hot path.
+    _done: bool = field(default=False, repr=False)
+
+    def is_done(self) -> bool:
+        """True once the request reached COMPLETED or CANCELLED."""
+        return self._done
+
+    def wait_done(self, timeout: Optional[float] = None) -> bool:
+        """Block until the request is terminal; False on timeout."""
+        return completion_pool().wait(self, timeout)
 
     def finish(self, result: Any = None, error: Optional[BaseException] = None) -> None:
         self.result = result
         self.error = error
         self.state = ReqState.COMPLETED
-        self.done.set()
+        s = completion_pool().stripe(self)
+        with s.lock:
+            cb, self.completion_cb = self.completion_cb, None
+            self._done = True
+            if s.waiters:
+                s.cond.notify_all()
+        if cb is not None:
+            cb(self)
 
     def claim(self) -> bool:
         """Atomically take PREPARED -> SUBMITTED (a worker about to execute
-        it); False means it was already claimed, cancelled, or completed."""
-        with self._claim_lock:
+        it); False means it was already claimed, cancelled, or completed.
+        The stripe lock serializes this against cancel(): whoever loses must
+        see the other's state — otherwise a cancelled request could still
+        execute (or execute twice via the demand-promotion fallback)."""
+        s = completion_pool().stripe(self)
+        with s.lock:
             if self.state is ReqState.PREPARED:
                 self.state = ReqState.SUBMITTED
                 return True
             return False
 
     def cancel(self) -> bool:
-        with self._claim_lock:
-            if self.state is ReqState.PREPARED:
-                self.state = ReqState.CANCELLED
-                self.done.set()
-                return True
-            return False
+        s = completion_pool().stripe(self)
+        with s.lock:
+            if self.state is not ReqState.PREPARED:
+                return False
+            self.state = ReqState.CANCELLED
+            cb, self.completion_cb = self.completion_cb, None
+            self._done = True
+            if s.waiters:
+                s.cond.notify_all()
+        if cb is not None:
+            cb(self)
+        return True
 
     def take_result(self):
         """The request's result with any registered-buffer lease
@@ -243,7 +274,7 @@ class IORequest:
         return r
 
     def wait_result(self):
-        self.done.wait()
+        self.wait_done()
         if self.error is not None:
             raise self.error
         if self.state is ReqState.CANCELLED:

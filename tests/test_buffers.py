@@ -143,6 +143,81 @@ def test_sync_backend_takes_no_pool():
         fa.shutdown()
 
 
+# -- per-tenant budgets (multi-tenant serving) --------------------------------
+
+def test_tenant_budget_charges_and_refunds():
+    pool = BufferPool(capacity_bytes=1 << 20, tenant_budget_bytes=2048)
+    a = pool.lease(1000, tenant="t0")  # 1 KiB class
+    assert a is not None and pool.charged_bytes("t0") == 1024
+    b = pool.lease(1000, tenant="t0")
+    assert b is not None and pool.charged_bytes("t0") == 2048
+    # at budget: declined before the free lists are even consulted
+    assert pool.lease(512, tenant="t0") is None
+    snap = pool.snapshot()
+    assert snap["budget_declines"] == 1
+    a.release()
+    assert pool.charged_bytes("t0") == 1024  # refund at release
+    assert pool.lease(512, tenant="t0") is not None  # back under budget
+    b.release()
+
+
+def test_over_budget_tenant_cannot_steal_other_tenants_buffers():
+    """A tenant at its budget falls back to allocate-per-request; the
+    recycled free-list buffers stay available to everyone else."""
+    pool = BufferPool(capacity_bytes=1 << 20, tenant_budget_bytes=1024)
+    warm = pool.lease(1024, tenant="victim")
+    warm.release()  # one warm 1 KiB buffer on the free list
+    hog = pool.lease(1024, tenant="hog")  # hog is now at its budget
+    assert hog is not None
+    assert pool.lease(1024, tenant="hog") is None  # over budget: declined
+    # the decline must not have consumed the free list: the victim's next
+    # lease is a recycle hit on the warm buffer
+    before = pool.snapshot()["recycle_hits"]
+    got = pool.lease(1024, tenant="victim")
+    assert got is not None
+    assert pool.snapshot()["recycle_hits"] >= before
+    assert pool.charged_bytes("victim") == 1024
+    got.release()
+    hog.release()
+
+
+def test_untenanted_leases_are_never_budget_limited():
+    pool = BufferPool(capacity_bytes=1 << 20, tenant_budget_bytes=512)
+    leases = [pool.lease(512) for _ in range(8)]  # 8x the tenant budget
+    assert all(l is not None for l in leases)
+    assert pool.snapshot()["budget_declines"] == 0
+    assert pool.snapshot()["tenants_charged"] == 0
+    for l in leases:
+        l.release()
+
+
+def test_tenant_budget_released_fully_at_session_finish():
+    """End to end through the shared backend: a tenant session's leased
+    reads charge its budget while in flight, and the charge refunds to
+    zero at session teardown (leases release strictly after the drain)."""
+    dev = MemDevice()
+    fd = dev.open("/f", "w")
+    dev.pwrite(fd, bytes(range(256)) * 33, 0)
+    dev.close(fd)
+    fa = Foreactor(device=dev, backend="io_uring", depth=8, workers=4,
+                   shared=True)
+    fa.register("leases", lambda: _chain_graph(8, 1024))
+    rfd = dev.open("/f", "r")
+    with fa.tenant("charged-tenant"):
+        @fa.wrap("leases", lambda: {"fd": rfd})
+        def prog():
+            for i in range(8):
+                io.pread(dev, rfd, 1024, i * 1024)
+        prog()
+        prog()
+    pool = fa.shared_backend().pool
+    assert pool.leases > 0, "shared plane never leased a buffer"
+    assert pool.charged_bytes("charged-tenant") == 0
+    assert pool.snapshot()["tenants_charged"] == 0
+    assert pool.snapshot()["released"] == pool.leases
+    fa.shutdown()
+
+
 def test_oversized_reads_fall_back_to_classic_path():
     dev = MemDevice()
     fd = dev.open("/big", "w")

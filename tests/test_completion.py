@@ -1,0 +1,203 @@
+"""The pooled completion primitive (repro.core.completion).
+
+IORequest completion used to ride a per-request ``threading.Event`` plus a
+per-request claim lock; both now live on a fixed, process-wide stripe table
+(the completion-queue analogue).  These tests pin down the three contracts
+the swap must preserve under any interleaving:
+
+* **no lost wakeups** — a waiter blocked on ``wait_done`` is always woken
+  by the finish/cancel that terminates its request, even when many
+  requests share one stripe;
+* **no double delivery** — the completion callback fires exactly once per
+  request across racing finish/cancel (including the shared backend's
+  evict-then-re-finish path), and ``take_result`` materializes once;
+* **claim/cancel exclusivity** — exactly one of N racing claimers/
+  cancellers wins the PREPARED request.
+
+The hypothesis property test explores random interleavings; the
+deterministic stress variant runs a seeded schedule of the same shape so
+the property is exercised even where hypothesis is not installed
+(tests/_hypothesis_support.py degrades @given to skips there).
+"""
+
+import random
+import threading
+
+from _hypothesis_support import given, settings, st
+
+from repro.core import completion_pool
+from repro.core.completion import CompletionPool
+from repro.core.syscalls import IORequest, ReqState, Sys
+
+
+def _req() -> IORequest:
+    return IORequest(sc=Sys.PREAD, args=(0, 16, 0))
+
+
+# -- unit: the basic lifecycle on the shared stripes --------------------------
+
+def test_finish_wakes_waiter_and_delivers_result():
+    r = _req()
+    assert not r.is_done()
+    got = []
+    t = threading.Thread(target=lambda: got.append(r.wait_result()))
+    t.start()
+    r.finish(b"payload")
+    t.join(timeout=5)
+    assert not t.is_alive()
+    assert got == [b"payload"]
+    assert r.is_done() and r.wait_done(timeout=0) is True
+
+
+def test_wait_done_timeout_returns_false_without_completion():
+    r = _req()
+    assert r.wait_done(timeout=0.01) is False
+    r.finish(b"x")
+    assert r.wait_done(timeout=0.01) is True
+
+
+def test_claim_cancel_exclusive():
+    r = _req()
+    assert r.claim() is True
+    assert r.cancel() is False  # already submitted: too late to cancel
+    assert r.claim() is False
+    r2 = _req()
+    assert r2.cancel() is True
+    assert r2.claim() is False  # cancelled: a worker must never run it
+    assert r2.is_done()
+
+
+def test_completion_cb_fires_once_on_finish():
+    r = _req()
+    fired = []
+    r.completion_cb = fired.append
+    r.finish(b"x")
+    r.finish(b"y")  # re-finish (evict-then-serve-inline shape)
+    assert fired == [r]
+
+
+def test_completion_cb_fires_once_across_cancel_then_finish():
+    """The shared backend's eviction race: cancel() releases the slot via
+    the callback, the demand path then re-finishes the request inline —
+    the callback must NOT fire again."""
+    r = _req()
+    fired = []
+    r.completion_cb = fired.append
+    assert r.cancel() is True
+    r.finish(b"served-inline")
+    assert fired == [r]
+    assert r.result == b"served-inline"
+
+
+def test_many_requests_share_stripes_without_crosstalk():
+    """More requests than stripes: waiters on colliding stripes are all
+    woken by their own request's completion, none by another's."""
+    pool = completion_pool()
+    n = pool.snapshot()["stripes"] * 3
+    reqs = [_req() for _ in range(n)]
+    results = [None] * n
+    threads = [
+        threading.Thread(target=lambda i=i: results.__setitem__(
+            i, reqs[i].wait_result()))
+        for i in range(n)
+    ]
+    for t in threads:
+        t.start()
+    for i, r in enumerate(reqs):
+        r.finish(i)
+    for t in threads:
+        t.join(timeout=10)
+    assert all(not t.is_alive() for t in threads), "lost wakeup"
+    assert results == list(range(n))
+    assert pool.snapshot()["waiters"] == 0
+
+
+def test_pool_requires_power_of_two_stripes():
+    try:
+        CompletionPool(48)
+    except ValueError:
+        pass
+    else:  # pragma: no cover
+        raise AssertionError("non-power-of-two stripe count accepted")
+
+
+# -- the interleaving property ------------------------------------------------
+
+def _race_once(seed: int, n_reqs: int = 8, n_waiters: int = 3) -> None:
+    """One seeded interleaving: N requests, each with a callback counter and
+    ``n_waiters`` blocked waiters, attacked by racing canceller/finisher
+    threads.  Afterwards: every waiter woke, every callback fired exactly
+    once, every request is terminal, and the winner (claim vs cancel) is
+    coherent with the final state."""
+    rng = random.Random(seed)
+    reqs = [_req() for _ in range(n_reqs)]
+    fired = {id(r): 0 for r in reqs}
+    flock = threading.Lock()
+
+    def make_cb(r):
+        def cb(req):
+            assert req is r
+            with flock:
+                fired[id(r)] += 1
+        return cb
+
+    for r in reqs:
+        r.completion_cb = make_cb(r)
+
+    woke = []
+    wlock = threading.Lock()
+
+    def waiter(r):
+        assert r.wait_done(timeout=10) is True
+        with wlock:
+            woke.append(r)
+
+    waiters = [threading.Thread(target=waiter, args=(r,))
+               for r in reqs for _ in range(n_waiters)]
+    for t in waiters:
+        t.start()
+
+    # racing terminators: some claim-then-finish (worker path), some cancel
+    # (eviction path), some finish directly (inline demand path)
+    def attack(tid):
+        order = list(reqs)
+        rng2 = random.Random(seed * 31 + tid)
+        rng2.shuffle(order)
+        for r in order:
+            roll = rng2.random()
+            if roll < 0.4:
+                if r.claim():
+                    r.finish(b"worker")
+            elif roll < 0.7:
+                r.cancel()
+            else:
+                r.finish(b"inline")
+
+    attackers = [threading.Thread(target=attack, args=(i,))
+                 for i in range(rng.randint(2, 4))]
+    for t in attackers:
+        t.start()
+    for t in attackers:
+        t.join(timeout=10)
+    # every request saw at least one terminator (finish unconditionally in
+    # the attacker mix), so all waiters must wake
+    for t in waiters:
+        t.join(timeout=10)
+    assert all(not t.is_alive() for t in waiters), "lost wakeup"
+    assert len(woke) == n_reqs * n_waiters
+    for r in reqs:
+        assert r.is_done()
+        assert fired[id(r)] == 1, "completion delivered != once"
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(min_value=0, max_value=10 ** 6))
+def test_random_interleavings_never_lose_wakeups_or_double_deliver(seed):
+    _race_once(seed)
+
+
+def test_seeded_interleavings_deterministic_sweep():
+    """The same property as the hypothesis test on a fixed seed set, so the
+    interleaving space is exercised even without hypothesis installed."""
+    for seed in range(12):
+        _race_once(seed)

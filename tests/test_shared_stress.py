@@ -85,7 +85,7 @@ def test_async_backend_ledger_is_thread_safe():
     # the real ledger property: nothing was lost — every submitted request
     # reached completion (a dropped ledger entry would stay PREPARED forever)
     for r in all_reqs:
-        assert r.done.wait(timeout=5), "request lost by the ledger race"
+        assert r.wait_done(timeout=5), "request lost by the ledger race"
     backend.shutdown()
 
 

@@ -218,6 +218,70 @@ def render_overhead(d: Dict) -> List[str]:
             "(one copy into recycled memory + one bounded materialize "
             "memcpy, instead of two allocations per request; wasted "
             "speculative reads allocate nothing at all)."]
+    comp = d.get("completion")
+    if comp is not None:
+        out += ["", "### Completion primitive (pooled stripes vs "
+                "per-request Event)", ""]
+        out += _table(
+            ["path", "per-request Event (us)", "pooled stripes (us)",
+             "speedup"],
+            [["claim + finish + harvest",
+              f"{comp['baseline']['lifecycle_us_per_req']:.2f}",
+              f"{comp['pooled']['lifecycle_us_per_req']:.2f}",
+              f"**{comp['speedup_lifecycle']:.2f}x**"],
+             ["cancel + poll (wasted speculation)",
+              f"{comp['baseline']['cancel_us_per_req']:.2f}",
+              f"{comp['pooled']['cancel_us_per_req']:.2f}",
+              f"{comp['speedup_cancel']:.2f}x"]])
+        out += ["",
+                "Every `IORequest` used to allocate its own "
+                "`threading.Event` plus a claim lock; completion now rides "
+                "a fixed stripe table (`repro.core.completion`, the CQ "
+                "analogue), so the per-record constant stops scaling the "
+                "10k-session open-loop runs."]
+    return out
+
+
+def render_openloop(d: Dict) -> List[str]:
+    s = d["summary"]
+    cfg = d["config"]
+    out = ["## Open-loop serving to saturation "
+           "(`benchmarks/bench_openloop.py`)", "",
+           "Fixed-rate Poisson arrivals (one fresh tenant session each, "
+           f"{cfg['rate_per_session']}/s per session over "
+           f"{cfg['duration_s']}s windows) against the serving substrate, "
+           "regardless of whether the server keeps up; latency is "
+           "virtual-time from the *scheduled* arrival (wrk2-style, no "
+           "coordinated omission).  `shared` = one queue pair + slot "
+           "scheduler; `sync` = no speculation."]
+    cells = {m: {c["sessions"]: c for c in d["sweep"][m]} for m in d["sweep"]}
+    sessions = [c["sessions"] for c in d["sweep"]["shared"]]
+    rows = []
+    for n in sessions:
+        sy, sh = cells["sync"][n], cells["shared"][n]
+        rows.append([
+            str(n), f"{sh['offered_rate']:.0f}",
+            f"{sy['achieved_rate']:.0f}", f"{sy['p99_ms']:.1f}",
+            f"{sh['achieved_rate']:.0f}", f"{sh['p99_ms']:.1f}",
+            str(max(sy["max_inflight_sessions"],
+                    sh["max_inflight_sessions"]))])
+    out += [""]
+    out += _table(["sessions", "offered (1/s)", "sync achieved",
+                   "sync p99 (ms)", "shared achieved", "shared p99 (ms)",
+                   "peak in-flight"], rows)
+    out += ["",
+            f"{s['total_sessions']} sessions total across the sweep, "
+            f"peaking at **{s['max_inflight_sessions']} concurrent "
+            f"in-flight sessions**.  The shared mode stays sustained "
+            f"through {s['knee_sessions']['shared']} sessions "
+            f"({s['knee_offered_rate']:.0f}/s offered) — at that knee its "
+            f"p99 is **{s['shared_p99_speedup_at_knee']:.2f}x** better "
+            f"than sync serving the identical arrival trace "
+            f"({s['shared_p99_at_knee_ms']:.1f} ms vs "
+            f"{s['sync_p99_at_knee_ms']:.1f} ms).  Past the knee both "
+            "modes collapse into queueing delay — which is the point of "
+            "an open loop: the backlog lands in the tail instead of "
+            "silently throttling the load generator."]
     return out
 
 
@@ -225,6 +289,7 @@ RENDERERS = [
     ("sharding", render_sharding),
     ("adaptive", render_adaptive),
     ("serve", render_serve),
+    ("openloop", render_openloop),
     ("write", render_write),
     ("overhead", render_overhead),
 ]
