@@ -18,16 +18,25 @@ measures what lifting that restriction buys:
   checkpoint every k steps): serial inline saves vs ``save_async`` over the
   speculated graph.  Measures wall time and the training-thread stall
   (``Trainer``'s ``ckpt_wait_s`` equivalent).
+* **delta** — ``save(..., delta=True)`` bytes written vs a full save at
+  1% / 10% / 50% extent churn (device ``write_bytes`` counters; chained
+  restore asserted byte-identical).  Acceptance gate: at 10% churn a delta
+  save writes <= 0.2x the bytes of a full save.
 
 Results land in ``benchmarks/results/write.json`` (common.write_results
 conventions; table rendered into docs/BENCHMARKS.md by
-``tools/bench_report.py``).
+``tools/bench_report.py``).  ``python -m benchmarks.bench_write
+--dry-run --check`` is the CI smoke gate: a reduced sweep proves the write
+path end to end, and the committed full-scale results must still satisfy
+the acceptance invariants.
 """
 
 from __future__ import annotations
 
+import json
+import sys
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -60,15 +69,17 @@ def _tree() -> Dict[str, np.ndarray]:
     return {"w": np.arange(CHUNK * NUM_EXTENTS // 4, dtype=np.float32)}
 
 
-def bench_save(repeats: int = 2) -> Dict[str, Dict]:
+def bench_save(repeats: int = 2,
+               shard_counts: Sequence[int] = SHARD_COUNTS,
+               modes: Sequence[Tuple] = MODES) -> Dict[str, Dict]:
     tree = _tree()
     out: Dict[str, Dict] = {"config": {
-        "shard_counts": list(SHARD_COUNTS), "chunk_bytes": CHUNK,
+        "shard_counts": list(shard_counts), "chunk_bytes": CHUNK,
         "num_extents": NUM_EXTENTS,
-        "modes": [m[0] for m in MODES],
+        "modes": [m[0] for m in modes],
     }}
-    for shards in SHARD_COUNTS:
-        for label, backend, depth in MODES:
+    for shards in shard_counts:
+        for label, backend, depth in modes:
             dev = SimulatedDevice(MemDevice(), WRITE_PROFILE)
             fa = Foreactor(device=dev, backend=backend, depth=depth,
                            workers=16)
@@ -89,11 +100,11 @@ def bench_save(repeats: int = 2) -> Dict[str, Dict]:
                 "seconds": t,
                 "mb_per_s": CHUNK * NUM_EXTENTS / t / 1e6,
             }
-    best4 = min(out[m[0]]["4"]["seconds"] for m in MODES[1:])
-    out["speedup_4shards"] = out["serial"]["4"]["seconds"] / best4
-    out["speedup_8shards"] = (out["serial"]["8"]["seconds"]
-                              / min(out[m[0]]["8"]["seconds"]
-                                    for m in MODES[1:]))
+    for n in shard_counts:
+        if n in (4, 8):
+            best = min(out[m[0]][str(n)]["seconds"] for m in modes[1:])
+            out[f"speedup_{n}shards"] = (out["serial"][str(n)]["seconds"]
+                                         / best)
     return out
 
 
@@ -159,12 +170,112 @@ def bench_write_behind(steps: int = 8, ckpt_every: int = 2,
     return out
 
 
+#: churn fractions for the delta section: what fraction of the tree's
+#: extents mutate between consecutive saves
+CHURNS = (0.01, 0.10, 0.50)
+
+
+def bench_delta(churns: Sequence[float] = CHURNS,
+                chain_len: int = 3) -> Dict[str, Dict]:
+    """Bytes written by ``save(..., delta=True)`` vs the full baseline,
+    counted on the device's ``write_bytes`` stats (a MemDevice without
+    simulated latency — this section measures bytes, not seconds).  Churn
+    is extent-granular: mutating one value inside an extent dirties its
+    CRC, so ``frac`` of the extents change between saves — the localized
+    "a few layers moved" update pattern delta checkpoints exist for."""
+    ext_elems = CHUNK // 4  # float32 elements per extent
+    out: Dict[str, Dict] = {"config": {
+        "churns": list(churns), "chunk_bytes": CHUNK,
+        "num_extents": NUM_EXTENTS, "chain_len": chain_len,
+    }}
+    for frac in churns:
+        dev = MemDevice()
+        fa = Foreactor(device=dev, backend="io_uring", depth=32, workers=8)
+        mgr = CheckpointManager(dev, "/ck", fa=fa, num_shards=4,
+                                chunk_bytes=CHUNK, keep=chain_len + 1)
+        tree = _tree()
+        b0 = dev.stats.snapshot()["write_bytes"]
+        mgr.save(0, tree)
+        full_bytes = dev.stats.snapshot()["write_bytes"] - b0
+        n_churn = max(1, round(frac * NUM_EXTENTS))
+        rng = np.random.default_rng(7)
+        delta_bytes: List[int] = []
+        for step in range(1, chain_len + 1):
+            for e in rng.choice(NUM_EXTENTS, size=n_churn, replace=False):
+                tree["w"][int(e) * ext_elems] = rng.random()
+            b0 = dev.stats.snapshot()["write_bytes"]
+            mgr.save(step, tree, delta=True)
+            delta_bytes.append(dev.stats.snapshot()["write_bytes"] - b0)
+        # a chained restore must reproduce the mutated tree byte-for-byte
+        restored, _ = mgr.restore(chain_len, check_crc=True)
+        assert np.array_equal(restored["['w']"], tree["w"]), frac
+        fa.shutdown()
+        mean_delta = float(np.mean(delta_bytes))
+        out[f"churn_{frac:g}"] = {
+            "changed_extents_per_save": n_churn,
+            "full_bytes": int(full_bytes),
+            "delta_bytes": [int(b) for b in delta_bytes],
+            "mean_delta_bytes": mean_delta,
+            "bytes_ratio": mean_delta / full_bytes,
+        }
+    return out
+
+
+def collect(dry_run: bool = False) -> Dict[str, Dict]:
+    if dry_run:
+        save = bench_save(repeats=1, shard_counts=(1, 4),
+                          modes=(MODES[0], MODES[1]))
+        shard = bench_record_shard(num_records=16, repeats=1)
+        wb = bench_write_behind(steps=4)
+    else:
+        save = bench_save()
+        shard = bench_record_shard()
+        wb = bench_write_behind()
+    # the delta section counts bytes on an unthrottled MemDevice, so it is
+    # cheap enough to run at full size even in the CI smoke gate
+    delta = bench_delta()
+    return {"save": save, "record_shard": shard, "write_behind": wb,
+            "delta": delta}
+
+
+def check(fresh: Dict, committed: Optional[Dict]) -> List[str]:
+    """CI smoke gate.  The fresh (dry-run-sized) sweep proves the staged
+    write path works end to end (every save restorable — asserted inline —
+    and every timing positive); the committed full-scale results must still
+    satisfy the acceptance invariants: >= 1.5x speculated save speedup at
+    4 shards and a delta save writing <= 0.2x the full-save bytes at 10%
+    churn."""
+    errs: List[str] = []
+    for label in fresh["save"]["config"]["modes"]:
+        for n, cell in fresh["save"][label].items():
+            if cell["seconds"] <= 0:
+                errs.append(f"save {label}/{n}: non-positive time")
+    for frac in fresh["delta"]["config"]["churns"]:
+        cell = fresh["delta"][f"churn_{frac:g}"]
+        if cell["mean_delta_bytes"] >= cell["full_bytes"]:
+            errs.append(f"delta at churn {frac:g} wrote as much as a full "
+                        f"save ({cell['mean_delta_bytes']:.0f} vs "
+                        f"{cell['full_bytes']})")
+    if fresh["delta"]["churn_0.1"]["bytes_ratio"] > 0.2:
+        errs.append("delta bytes at 10% churn exceeded 0.2x full "
+                    f"(ratio {fresh['delta']['churn_0.1']['bytes_ratio']:.3f})")
+    if committed is not None:
+        if committed["save"].get("speedup_4shards", 0.0) < 1.5:
+            errs.append("committed save speedup at 4 shards fell below "
+                        f"1.5x ({committed['save'].get('speedup_4shards')})")
+        ratio = committed.get("delta", {}).get("churn_0.1",
+                                               {}).get("bytes_ratio")
+        if ratio is None or ratio > 0.2:
+            errs.append(f"committed delta bytes_ratio at 10% churn is not "
+                        f"<= 0.2 ({ratio})")
+    return errs
+
+
 def run() -> List[Row]:
-    save = bench_save()
-    shard = bench_record_shard()
-    wb = bench_write_behind()
-    path = write_results("write", {"save": save, "record_shard": shard,
-                                   "write_behind": wb})
+    d = collect()
+    save, shard, wb, delta = (d["save"], d["record_shard"],
+                              d["write_behind"], d["delta"])
+    path = write_results("write", d)
     rows: List[Row] = []
     for label, _b, _d in MODES:
         for n in SHARD_COUNTS:
@@ -182,10 +293,41 @@ def run() -> List[Row]:
         rows.append((f"write_behind_{label}",
                      wb[label]["wall_seconds"] * 1e6,
                      f"stall={wb[label]['stall_seconds'] * 1e3:.0f}ms"))
+    for frac in delta["config"]["churns"]:
+        cell = delta[f"churn_{frac:g}"]
+        rows.append((f"write_delta_churn{int(frac * 100)}pct", 0.0,
+                     f"bytes_ratio={cell['bytes_ratio']:.3f}"))
     rows.append(("write_results_json", 0.0, path))
     return rows
 
 
+def main(argv: List[str]) -> int:
+    import os
+
+    dry = "--dry-run" in argv
+    fresh = collect(dry_run=dry)
+    if "--check" in argv:
+        results_path = os.path.join(os.path.dirname(__file__), "results",
+                                    "write.json")
+        committed = None
+        if os.path.exists(results_path):
+            with open(results_path) as f:
+                committed = json.load(f)
+        errs = check(fresh, committed)
+        for e in errs:
+            print(f"FAIL: {e}", file=sys.stderr)
+        print("write-smoke:", "FAIL" if errs else "ok")
+        return 1 if errs else 0
+    if not dry:
+        write_results("write", fresh)
+        print("wrote benchmarks/results/write.json")
+    summary = {"save_speedup_4shards": fresh["save"].get("speedup_4shards"),
+               "delta_ratios": {k: v["bytes_ratio"]
+                                for k, v in fresh["delta"].items()
+                                if k.startswith("churn_")}}
+    print(json.dumps(summary, indent=2, sort_keys=True))
+    return 0
+
+
 if __name__ == "__main__":
-    for line in run():
-        print(line)
+    sys.exit(main(sys.argv[1:]))

@@ -44,4 +44,43 @@ print(f"   restored step {step} OK: {len(tree)} leaves, extra={extra}")
 mgr.fa.shutdown()
 EOF
 
+echo "== 4. lifecycle: retention + delta checkpoints survive a mid-run kill"
+# Same shape, now with a retention policy (keep the newest 2 retention
+# units) and alternating full/delta saves; the run dies mid-chain, the
+# rerun restores through the delta chain, and every save GCs superseded
+# checkpoints via the speculated tombstone/unlink graph.
+LC="python -m repro.launch.train --arch tinyllama-1.1b --smoke
+    --steps 11 --batch 2 --seq 32 --ckpt-every 2
+    --shards 2 --records-per-shard 32
+    --keep-last 2 --delta-every 1
+    --data $WORK/data --ckpt $WORK/ckpt-lc"
+if $LC --kill-at 9; then
+    echo "expected the simulated node failure to abort the run" >&2
+    exit 1
+fi
+$LC | tee "$WORK/resume-lc.log"
+grep -q "restored step" "$WORK/resume-lc.log"
+grep -q "done: step 11" "$WORK/resume-lc.log"
+
+python - "$WORK/ckpt-lc" <<'EOF'
+import sys
+from repro.core import OSDevice
+from repro.checkpoint import CheckpointManager
+
+mgr = CheckpointManager(OSDevice(), sys.argv[1], num_shards=4)
+steps = mgr.committed_steps()
+assert steps and max(steps) == 11, steps
+assert 2 not in steps and len(steps) <= 4, f"retention did not collect: {steps}"
+kinds = {s: mgr.read_manifest(s)["kind"] for s in steps}
+assert "delta" in kinds.values(), kinds
+for s, k in kinds.items():
+    if k == "delta":
+        assert mgr.read_manifest(s)["base"] in steps, (s, steps)
+out = mgr.restore_latest()
+assert out is not None, "latest checkpoint failed validation"
+step, tree, extra = out
+print(f"   lifecycle OK: kept {steps} ({sorted(kinds.values())}), restored step {step}")
+mgr.fa.shutdown()
+EOF
+
 echo "== walkthrough OK"

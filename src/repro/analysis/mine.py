@@ -62,7 +62,7 @@ MAX_PERIOD = 4
 
 #: syscalls that tear down or flush an fd — mined nodes of these kinds get a
 #: harvest barrier (never pre-issued ahead of unharvested predecessors)
-BARRIER_KINDS = frozenset({Sys.CLOSE, Sys.FSYNC})
+BARRIER_KINDS = frozenset({Sys.CLOSE, Sys.FSYNC, Sys.UNLINK})
 
 
 class UnminableTrace(RuntimeError):

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import json
 import threading
+import time
 import zlib
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -30,14 +31,20 @@ import numpy as np
 
 import jax
 
-from repro.core.api import Foreactor, io
-from repro.core.device import Device
+from repro.core.api import Foreactor, current_session, io
+from repro.core.device import Device, ShardedDevice
 from repro.core.graph import ForeactionGraph, FromNode, GraphBuilder
 from repro.core.patterns import register_patterns
 from repro.core.syscalls import Sys
+from repro.store.staging import STAGE_TAG
+
+from .policy import CheckpointPolicy, SaveInfo, chain_of
 
 COMMIT_MARKER = "COMMIT"
 MANIFEST = "manifest.json"
+#: suffix of a de-committed (mid-GC) commit marker; its presence without an
+#: ``ok`` marker flags the directory as collection-in-progress for the sweep
+GC_TAG = ".__gc"
 
 
 class CheckpointError(RuntimeError):
@@ -275,6 +282,69 @@ def build_save_graph(num_shards: int, num_extents: int,
     return b.Build()
 
 
+def build_gc_graph(name: str = "ckpt_gc") -> ForeactionGraph:
+    """Collect one superseded checkpoint directory, crash-safely.
+
+    ctx: ``{"marker": str, "tomb": str, "victims": [str]}``.
+
+    Protocol (forward-only; every intermediate state is safe):
+
+    1. ``rename(marker -> tomb)`` — the *tombstone rename*.  Moving the
+       commit marker aside atomically de-commits the directory: discovery
+       (:meth:`CheckpointManager.committed_steps`) requires the marker at
+       its canonical name, so ``restore_latest`` can never pick a directory
+       whose files are about to disappear.  The rename is *undoable*
+       (:meth:`repro.store.staging.StagingTxn.stage_rename`): an abort
+       before the commit point below renames it back and the checkpoint
+       stays fully live.
+    2. The wrapped function then calls
+       :meth:`repro.store.staging.StagingTxn.publish_demanded` — the point
+       of no return.  From here the tombstone survives any abort.
+    3. Unlink every file, the tombstone last.  Unlinks are barriers and
+       gated on the tombstone rename being harvested (``_tomb_done``), so
+       speculation can never delete a byte of a still-committed checkpoint;
+       past the gate the whole victim list pre-issues as one batch and fans
+       out across sub-devices.
+
+    A crash anywhere mid-protocol leaves either a fully live checkpoint
+    (before the commit point) or a tombstoned, partially emptied directory
+    that discovery skips and the next GC pass sweeps to completion
+    (:meth:`CheckpointManager.gc`).
+    """
+    b = GraphBuilder(name)
+
+    def r_args(ctx, ep):
+        return ((ctx["marker"], ctx["tomb"]), False)
+
+    def r_save(ctx, ep, rc):
+        ctx["_tomb_done"] = True
+
+    def u_args(ctx, ep):
+        if not ctx.get("_tomb_done"):
+            return None  # harvest barrier: de-commit before any deletion
+        vs = ctx["victims"]
+        return ((vs[ep[0]],), False) if ep[0] < len(vs) else None
+
+    def head(ctx, ep):
+        return 0 if len(ctx["victims"]) > 0 else 1
+
+    def more(ctx, ep):
+        return 0 if ep[0] + 1 < len(ctx["victims"]) else 1
+
+    b.AddSyscallNode("tomb", Sys.RENAME, r_args, r_save)
+    b.AddBranchingNode("any", head)
+    b.AddSyscallNode("unlink", Sys.UNLINK, u_args)
+    b.AddBranchingNode("more", more)
+    b.SetStart("tomb")
+    b.SyscallSetNext("tomb", "any")
+    b.BranchAppendChild("any", "unlink")
+    b.BranchAppendChild("any", None)
+    b.SyscallSetNext("unlink", "more")
+    b.BranchAppendChild("more", "unlink", loopback=True)
+    b.BranchAppendChild("more", None)
+    return b.Build()
+
+
 class CheckpointManager:
     """Save/restore pytrees of arrays under ``root`` on a Device.
 
@@ -293,14 +363,24 @@ class CheckpointManager:
         num_shards: int = 16,
         chunk_bytes: int = 4 << 20,
         keep: int = 3,
+        policy: Optional[CheckpointPolicy] = None,
+        max_delta_chain: int = 8,
     ):
         self.device = device
         self.root = root.rstrip("/")
         self.num_shards = num_shards
         self.chunk_bytes = chunk_bytes
-        self.keep = keep
+        #: retention: ``policy`` wins; the legacy ``keep`` int is sugar for
+        #: CheckpointPolicy(keep_last=keep)
+        self.policy = policy if policy is not None \
+            else CheckpointPolicy(keep_last=keep)
+        self.keep = self.policy.keep_last
+        #: a delta save whose base chain is already this deep falls back to
+        #: a full save (restore cost and failure blast radius stay bounded)
+        self.max_delta_chain = max_delta_chain
         self.fa = fa if fa is not None else Foreactor(device=device, depth=32)
         register_patterns(self.fa)
+        self.fa.register("ckpt_gc", build_gc_graph)
         self._async_thread: Optional[threading.Thread] = None
         self._async_error: Optional[BaseException] = None
         # serializes save_async/wait_pending: starting a second background
@@ -318,20 +398,74 @@ class CheckpointManager:
         # every available queue pair.
         return self.device.place(f"{self.step_dir(step)}/shard_{i:04d}.bin", hint=i)
 
+    def _tombstone_path(self, step: int) -> str:
+        """The mid-GC name of a step's commit marker.  On a sharded device
+        it is pinned to the marker's own sub-device (like staged names are)
+        so the tombstone rename stays a single atomic same-shard rename."""
+        marker = f"{self.step_dir(step)}/{COMMIT_MARKER}"
+        if isinstance(self.device, ShardedDevice):
+            shard, sub = self.device.resolve(marker)
+            return f"shard{shard}:{sub}{GC_TAG}"
+        return marker + GC_TAG
+
     # -- save -------------------------------------------------------------------
-    def save(self, step: int, tree: Any, extra: Optional[Dict[str, Any]] = None) -> None:
+    def save(self, step: int, tree: Any, extra: Optional[Dict[str, Any]] = None,
+             delta: bool = False) -> None:
         """Write one committed checkpoint step as a single foreaction write
         graph (:func:`build_save_graph`): staged shard creates, pipelined
         leaf serialization, pre-issued extent writes, fsync/close harvest
         barriers, commit marker published strictly last.  Aborting mid-save
         rolls the staged files back — no trace in the committed namespace.
+
+        ``delta=True`` writes an *incremental* checkpoint: every extent of
+        the (identically chunked) tree is hashed against the effective
+        per-extent CRCs of the newest committed chain, and only changed
+        extents are written, packed densely into this step's shard files;
+        the manifest records ``base`` so restore can chain.  Falls back to
+        a full save when there is no usable base (nothing committed, leaf
+        spec changed, chain too deep, or the base predates per-extent
+        CRCs).  Each save is followed by a policy-driven GC pass
+        (:meth:`gc`).
         """
         leaves_kp, treedef = jax.tree_util.tree_flatten_with_path(tree)
         names = [_leaf_name(kp) for kp, _ in leaves_kp]
         arrays = [np.asarray(v) for _, v in leaves_kp]
         blobs = _LazyBlobs(arrays)
+        if step in self.committed_steps():
+            # re-saving a committed step (e.g. an emergency save landing on
+            # the step a periodic save already wrote) must not overwrite it
+            # in place: publish renames land file-by-file, so a crash
+            # mid-resave would leave a directory whose stale ``ok`` marker
+            # vouches for mixed old/new bytes.  De-commit and collect the
+            # old directory first — a crash now leaves an uncommitted
+            # partial that discovery skips, and restore falls back to the
+            # previous committed step.
+            self._collect(step)
         extents, shard_sizes = _plan_extents([a.nbytes for a in arrays],
                                              self.num_shards, self.chunk_bytes)
+        base_step: Optional[int] = None
+        if delta:
+            base_map = self._delta_base(names, arrays)
+            if base_map is not None:
+                base_step, chain_crcs = base_map
+                dsizes = [0] * self.num_shards
+                changed: List[Tuple[_Extent, int]] = []
+                for e in extents:
+                    crc = zlib.crc32(
+                        blobs[e.leaf][e.leaf_off : e.leaf_off + e.length])
+                    if chain_crcs.get((names[e.leaf], e.leaf_off, e.length)) == crc:
+                        continue
+                    ne = _Extent(e.leaf, e.leaf_off, e.shard,
+                                 dsizes[e.shard], e.length)
+                    dsizes[e.shard] += e.length
+                    changed.append((ne, crc))
+                extents = [e for e, _ in changed]
+                shard_sizes = dsizes
+                ext_crcs: Optional[List[int]] = [c for _, c in changed]
+            else:
+                delta = False
+        if not delta:
+            ext_crcs = None  # full save: extent CRCs computed lazily below
         d = self.step_dir(step)
         paths = [self._shard_path(step, i) for i in range(self.num_shards)]
         per_shard = [0] * self.num_shards
@@ -348,10 +482,17 @@ class CheckpointManager:
         def manifest_bytes() -> bytes:
             data = manifest_cache.get("data")
             if data is None:
+                crcs = ext_crcs if ext_crcs is not None else [
+                    zlib.crc32(blobs[e.leaf][e.leaf_off : e.leaf_off + e.length])
+                    for e in extents
+                ]
                 manifest = {
                     "step": step,
                     "num_shards": self.num_shards,
                     "shard_sizes": shard_sizes,
+                    "wall_time": time.time(),
+                    "kind": "delta" if base_step is not None else "full",
+                    "base": base_step,
                     "leaves": [
                         {
                             "name": names[i],
@@ -363,8 +504,8 @@ class CheckpointManager:
                         for i in range(len(arrays))
                     ],
                     "extents": [
-                        [e.leaf, e.leaf_off, e.shard, e.shard_off, e.length]
-                        for e in extents
+                        [e.leaf, e.leaf_off, e.shard, e.shard_off, e.length, c]
+                        for e, c in zip(extents, crcs)
                     ],
                     "extra": extra or {},
                 }
@@ -411,9 +552,10 @@ class CheckpointManager:
             io.close(self.device, cf)
 
         _save_all()
-        self._gc()
+        self.gc()
 
-    def save_async(self, step: int, tree: Any, extra: Optional[Dict[str, Any]] = None) -> None:
+    def save_async(self, step: int, tree: Any, extra: Optional[Dict[str, Any]] = None,
+                   delta: bool = False) -> None:
         """Write-behind checkpointing: snapshot to host memory now, run the
         (speculated) write graph on a background thread, overlap with step
         compute.  Join-or-raise semantics: if a previous background save is
@@ -427,7 +569,7 @@ class CheckpointManager:
 
             def run():
                 try:
-                    self.save(step, tree, extra)
+                    self.save(step, tree, extra, delta=delta)
                 except BaseException as e:  # surfaced on next wait_pending()
                     self._async_error = e
 
@@ -449,22 +591,42 @@ class CheckpointManager:
 
     # -- discovery / validation ---------------------------------------------------
     def committed_steps(self) -> List[int]:
+        """Steps with a readable ``ok`` commit marker, sorted ascending.
+
+        Everything else is skipped, never raised on: directories without a
+        marker (a killed save's partial output, or a mid-GC directory whose
+        marker was renamed to its tombstone), markers with other content
+        (legacy ``gc`` tombstones), entries that do not parse as a step
+        number (staged debris), and per-entry I/O errors.  This is the
+        load-bearing half of the atomic-commit invariant — a partial
+        directory must never shadow the real latest checkpoint."""
         try:
             entries = io.getdents(self.device, self.root)
         except FileNotFoundError:
             return []
         steps = []
         for e in entries:
-            if e.startswith("step_"):
-                marker = f"{self.root}/{e}/{COMMIT_MARKER}"
-                try:
-                    fd = io.open(self.device, marker, "r")
-                    ok = io.pread(self.device, fd, 2, 0) == b"ok"
-                    io.close(self.device, fd)
-                except FileNotFoundError:
-                    continue
-                if ok:  # gc tombstones overwrite the marker with b"gc"
-                    steps.append(int(e[len("step_"):]))
+            if not e.startswith("step_"):
+                continue
+            try:
+                step = int(e[len("step_"):])
+            except ValueError:
+                continue
+            marker = f"{self.root}/{e}/{COMMIT_MARKER}"
+            fd = None
+            try:
+                fd = io.open(self.device, marker, "r")
+                ok = io.pread(self.device, fd, 2, 0) == b"ok"
+            except (FileNotFoundError, OSError):
+                ok = False
+            finally:
+                if fd is not None:
+                    try:
+                        io.close(self.device, fd)
+                    except OSError:
+                        pass
+            if ok:
+                steps.append(step)
         return sorted(steps)
 
     def latest_step(self) -> Optional[int]:
@@ -479,25 +641,101 @@ class CheckpointManager:
         io.close(self.device, fd)
         return json.loads(data)
 
+    def _manifest_chain(self, step: int) -> List[Dict[str, Any]]:
+        """Manifests of ``step``'s delta chain, base-first (a full save is a
+        chain of one).  Raises :class:`CheckpointError` on a cycle or an
+        over-deep chain; a missing base manifest surfaces as the underlying
+        FileNotFoundError (both make ``restore_latest`` fall back)."""
+        ms = [self.read_manifest(step)]
+        seen = {step}
+        while ms[0].get("base") is not None:
+            b = ms[0]["base"]
+            if b in seen or len(ms) > 64:
+                raise CheckpointError(
+                    f"delta chain at step {step} is cyclic or too deep")
+            seen.add(b)
+            ms.insert(0, self.read_manifest(b))
+        return ms
+
+    def history(self) -> List[SaveInfo]:
+        """The committed save history, rebuilt from manifests — the pure
+        input :meth:`repro.checkpoint.policy.CheckpointPolicy.keep_steps`
+        consumes.  No in-memory retention state exists to lose in a crash."""
+        out: List[SaveInfo] = []
+        for step in self.committed_steps():
+            try:
+                m = self.read_manifest(step)
+            except (FileNotFoundError, OSError, ValueError):
+                continue
+            out.append(SaveInfo(step=step,
+                                wall_time=float(m.get("wall_time", step)),
+                                kind=m.get("kind", "full"),
+                                base=m.get("base")))
+        return out
+
+    def _delta_base(self, names: List[str], arrays: List[np.ndarray],
+                    ) -> Optional[Tuple[int, Dict[Tuple[str, int, int], int]]]:
+        """(base step, effective per-extent CRC map) for a delta save, or
+        None when no committed chain can serve as base: nothing committed,
+        the leaf spec changed, the chain is at ``max_delta_chain``, or the
+        base predates per-extent CRCs."""
+        base_step = self.latest_step()
+        if base_step is None:
+            return None
+        try:
+            ms = self._manifest_chain(base_step)
+        except (CheckpointError, FileNotFoundError, OSError, ValueError):
+            return None
+        if len(ms) >= self.max_delta_chain:
+            return None
+        top = ms[-1]
+        spec = [(lf["name"], lf["dtype"], tuple(lf["shape"]))
+                for lf in top["leaves"]]
+        ours = [(names[i], str(arrays[i].dtype), tuple(arrays[i].shape))
+                for i in range(len(names))]
+        if spec != ours:
+            return None
+        crcs: Dict[Tuple[str, int, int], int] = {}
+        for m in ms:  # base-first: newer chain members overlay older CRCs
+            lnames = [lf["name"] for lf in m["leaves"]]
+            for e in m["extents"]:
+                if len(e) < 6:
+                    return None  # pre-delta manifest: no per-extent CRCs
+                li, loff, _s, _soff, ln, crc = e[:6]
+                crcs[(lnames[li], loff, ln)] = crc
+        return base_step, crcs
+
     def validate(self, step: int) -> bool:
-        """du-shaped parallel fstat over every shard file; size check."""
-        m = self.read_manifest(step)
-        paths = [self._shard_path(step, i) for i in range(m["num_shards"])]
+        """du-shaped parallel fstat over every shard file of every chain
+        member; size check.  A delta checkpoint is only as valid as its
+        whole chain — a collected or torn base invalidates the delta."""
+        try:
+            ms = self._manifest_chain(step)
+        except (CheckpointError, FileNotFoundError, OSError, ValueError):
+            return False
 
         @self.fa.wrap("stat_list", lambda paths: {"paths": paths})
         def _stat_all(paths):
             return [io.fstatat(self.device, p) for p in paths]
 
-        try:
-            stats = _stat_all(paths)
-        except FileNotFoundError:
-            return False
-        return all(st.st_size == sz for st, sz in zip(stats, m["shard_sizes"]))
+        for m in ms:
+            paths = [self._shard_path(m["step"], i)
+                     for i in range(m["num_shards"])]
+            try:
+                stats = _stat_all(paths)
+            except FileNotFoundError:
+                return False
+            if not all(st.st_size == sz
+                       for st, sz in zip(stats, m["shard_sizes"])):
+                return False
+        return True
 
     # -- restore ---------------------------------------------------------------------
-    def restore(self, step: int, check_crc: bool = True) -> Tuple[Any, Dict[str, Any]]:
-        """Parallel chunked restore -> (flat {name: np.ndarray}, extra)."""
-        m = self.read_manifest(step)
+    def _read_step_into(self, m: Dict[str, Any],
+                        bufs: Dict[str, bytearray]) -> None:
+        """Overlay one chain member's extents into the per-leaf buffers
+        (parallel open + chunked pread graphs, as before)."""
+        step = m["step"]
         paths = [self._shard_path(step, i) for i in range(m["num_shards"])]
 
         # read-only opens are pure -> pre-issued as one batch; on a sharded
@@ -507,7 +745,7 @@ class CheckpointManager:
             return [io.open(self.device, p, "r") for p in paths]
 
         fds = _open_all(paths)
-        extents = [_Extent(*e) for e in m["extents"]]
+        extents = [_Extent(*e[:5]) for e in m["extents"]]
         ext_args = [(fds[e.shard], e.length, e.shard_off) for e in extents]
 
         @self.fa.wrap("pread_extents", lambda extents: {"extents": extents})
@@ -517,19 +755,41 @@ class CheckpointManager:
         chunks = _read_all(ext_args)
         for fd in fds:
             io.close(self.device, fd)
-        bufs = [bytearray(leaf["nbytes"]) for leaf in m["leaves"]]
+        lnames = [lf["name"] for lf in m["leaves"]]
         for e, c in zip(extents, chunks):
             if len(c) != e.length:
                 raise CheckpointError(
                     f"short read: shard {e.shard} off {e.shard_off}: "
                     f"{len(c)} != {e.length}")
-            bufs[e.leaf][e.leaf_off : e.leaf_off + e.length] = c
+            buf = bufs.get(lnames[e.leaf])
+            if buf is None:
+                raise CheckpointError(
+                    f"chain member {step} has unknown leaf {lnames[e.leaf]}")
+            buf[e.leaf_off : e.leaf_off + e.length] = c
+
+    def restore(self, step: int, check_crc: bool = True) -> Tuple[Any, Dict[str, Any]]:
+        """Parallel chunked restore -> (flat {name: np.ndarray}, extra).
+
+        A delta checkpoint restores by chaining: the rooting full save is
+        read first, then each delta overlays its changed extents base-first.
+        The final per-leaf CRC check comes from the *top* manifest, so a
+        chained restore is verified byte-identical to what the delta save
+        hashed — corruption anywhere in the chain fails the restore (and
+        ``restore_latest`` falls back to an older step)."""
+        ms = self._manifest_chain(step)
+        top = ms[-1]
+        bufs: Dict[str, bytearray] = {
+            leaf["name"]: bytearray(leaf["nbytes"]) for leaf in top["leaves"]}
+        for m in ms:
+            self._read_step_into(m, bufs)
         out: Dict[str, np.ndarray] = {}
-        for leaf, buf in zip(m["leaves"], bufs):
+        for leaf in top["leaves"]:
+            buf = bufs[leaf["name"]]
             if check_crc and zlib.crc32(bytes(buf)) != leaf["crc32"]:
                 raise CheckpointError(f"crc mismatch for leaf {leaf['name']}")
-            out[leaf["name"]] = np.frombuffer(bytes(buf), dtype=leaf["dtype"]).reshape(leaf["shape"])
-        return out, m["extra"]
+            out[leaf["name"]] = np.frombuffer(
+                bytes(buf), dtype=leaf["dtype"]).reshape(leaf["shape"])
+        return out, top["extra"]
 
     def restore_tree(self, step: int, like: Any, check_crc: bool = True) -> Tuple[Any, Dict[str, Any]]:
         """Restore into the structure of ``like`` (names must match)."""
@@ -567,8 +827,15 @@ class CheckpointManager:
     # -- replication ---------------------------------------------------------------
     def replicate(self, step: int, dst: "CheckpointManager") -> None:
         """Copy a committed checkpoint to another tier via Link'ed
-        pread->pwrite chains (the cp graph at framework scale)."""
-        m = self.read_manifest(step)
+        pread->pwrite chains (the cp graph at framework scale).  A delta
+        checkpoint replicates its whole chain — a delta without its base is
+        unrestorable, so the chain is the unit of replication just as it is
+        the unit of retention."""
+        for m in self._manifest_chain(step):
+            self._replicate_one(m, dst)
+
+    def _replicate_one(self, m: Dict[str, Any], dst: "CheckpointManager") -> None:
+        step = m["step"]
         pairs = []
         closers = []
         for i in range(m["num_shards"]):
@@ -613,14 +880,121 @@ class CheckpointManager:
         io.close(dst.device, cf)
 
     # -- gc ---------------------------------------------------------------------------
-    def _gc(self) -> None:
-        steps = self.committed_steps()
-        # best effort: we cannot unlink through the Device API; tombstone the
-        # commit marker instead so stale steps stop being restore candidates.
-        for s in steps[: max(0, len(steps) - self.keep)]:
+    def gc(self) -> None:
+        """Policy-driven garbage collection, run after every save.
+
+        The keep-set is :meth:`CheckpointPolicy.keep_steps` over the
+        manifest-derived history, always including the newest committed
+        step (and, via chain closure, everything it transitively bases on):
+        a store that collects the checkpoint it just wrote is useless.
+        Victims are collected newest-first so a delta is always gone before
+        its base starts being collected — a crash between the two leaves a
+        base that is merely unreferenced, never a committed delta with a
+        hole under it.  A final sweep finishes any collection a previous
+        crash left mid-protocol (tombstone present, marker absent) and
+        legacy ``gc``-marker tombstones."""
+        committed = self.committed_steps()
+        if committed:
+            history = self.history()
+            by_step = {s.step: s for s in history}
+            keep = set(self.policy.keep_steps(history))
+            keep.add(committed[-1])
+            keep.update(chain_of(committed[-1], by_step))
+            for s in sorted((s for s in committed if s not in keep),
+                            reverse=True):
+                self._collect(s)
+        self._sweep()
+
+    def _collect(self, step: int) -> None:
+        """Collect one committed step via the GC foreaction graph
+        (:func:`build_gc_graph`): tombstone rename, hard commit point,
+        then batched unlinks with the tombstone last."""
+        d = self.step_dir(step)
+        marker = f"{d}/{COMMIT_MARKER}"
+        tomb = self._tombstone_path(step)
+        try:
+            nshards = self.read_manifest(step)["num_shards"]
+        except (FileNotFoundError, OSError, ValueError):
+            nshards = self.num_shards
+        victims = [self._shard_path(step, i) for i in range(nshards)]
+        victims.append(f"{d}/{MANIFEST}")
+        victims.append(tomb)  # last: its absence means the GC completed
+
+        @self.fa.wrap("ckpt_gc", lambda: {"marker": marker, "tomb": tomb,
+                                          "victims": victims})
+        def _gc_one():
+            io.rename(self.device, marker, tomb)
+            sess = current_session()
+            if sess is not None and getattr(sess, "staging", None) is not None:
+                # point of no return: the tombstone rename survives any
+                # abort from here on (see build_gc_graph's protocol notes)
+                sess.staging.publish_demanded()
+            for p in victims:
+                io.unlink(self.device, p)
+
+        _gc_one()
+        self._rmdir(d)
+
+    def _sweep(self) -> None:
+        """Finish crashed collections.  A step directory is GC-pending iff
+        it is *not* committed (no readable ``ok`` marker — an ``ok`` marker
+        always wins, covering a crashed non-atomic tombstone copy) but
+        still carries a marker tombstone or a legacy ``gc`` marker.
+        In killed-save debris (no marker at all) only stale *staging
+        extents* are reclaimed: a crashed process cannot roll its staged
+        files back, and nothing else ever would.  Deleting a staging extent
+        out from under a racing save is safe — its publish rename fails and
+        the save aborts cleanly, committing nothing (one save per root at a
+        time is the supported regime anyway; the manager serializes its
+        own)."""
+        try:
+            entries = io.getdents(self.device, self.root)
+        except FileNotFoundError:
+            return
+        committed = set(self.committed_steps())
+        for e in sorted(entries):
+            if not e.startswith("step_"):
+                continue
             try:
-                cf = io.open(self.device, f"{self.step_dir(s)}/{COMMIT_MARKER}", "w")
-                io.pwrite(self.device, cf, b"gc", 0)
-                io.close(self.device, cf)
+                step = int(e[len("step_"):])
+            except ValueError:
+                continue
+            if step in committed:
+                continue
+            d = f"{self.root}/{e}"
+            try:
+                names = io.getdents(self.device, d)
             except FileNotFoundError:
-                pass
+                names = []
+            if (COMMIT_MARKER + GC_TAG) not in names \
+                    and COMMIT_MARKER not in names:
+                staged = [n for n in names if STAGE_TAG in n]
+                for n in sorted(staged):
+                    try:
+                        self.device.unlink(f"{d}/{n}")
+                    except (FileNotFoundError, OSError):
+                        pass
+                if staged and len(staged) == len(names):
+                    self._rmdir(d)  # the crash left nothing but residue
+                continue
+            victims = [f"{d}/{n}" for n in sorted(names)]
+
+            @self.fa.wrap("unlink_list", lambda: {"victims": victims})
+            def _sweep_one():
+                for p in victims:
+                    io.unlink(self.device, p)
+
+            try:
+                _sweep_one()
+            except (FileNotFoundError, OSError):
+                continue  # racing save/GC elsewhere; retried next pass
+            self._rmdir(d)
+
+    def _rmdir(self, d: str) -> None:
+        # the emptied step directory itself: a real directory on OSDevice
+        # (removed through the unlink verb's rmdir path), implicit on
+        # mem-backed devices (gone with its last file)
+        try:
+            self.device.unlink(d)
+        except (FileNotFoundError, OSError):
+            pass

@@ -465,6 +465,14 @@ class io:
     def fsync(device: Device, fd: int) -> None:
         return io._route(device, Sys.FSYNC, (fd,))
 
+    @staticmethod
+    def rename(device: Device, src: str, dst: str) -> None:
+        return io._route(device, Sys.RENAME, (src, dst))
+
+    @staticmethod
+    def unlink(device: Device, path: str) -> None:
+        return io._route(device, Sys.UNLINK, (path,))
+
 
 def _direct(device: Device, sc: Sys, args: tuple) -> Any:
     from .syscalls import execute

@@ -240,7 +240,13 @@ class OSDevice(Device):
     def unlink(self, path: str) -> None:
         self.stats.op_begin()
         try:
-            os.unlink(path)
+            try:
+                os.unlink(path)
+            except (IsADirectoryError, PermissionError):
+                # empty-directory removal rides the same verb: the checkpoint
+                # GC graph unlinks a step directory after emptying it, and a
+                # non-empty directory still fails (OSError) as it should
+                os.rmdir(path)
         finally:
             self.stats.op_end()
 
@@ -574,7 +580,7 @@ class ShardedDevice(Device):
         namespace; fd-addressed ones look up the virtual fd."""
         from .syscalls import Sys  # local import: avoid a module cycle
 
-        if sc in (Sys.OPEN, Sys.FSTATAT, Sys.GETDENTS):
+        if sc in (Sys.OPEN, Sys.FSTATAT, Sys.GETDENTS, Sys.UNLINK, Sys.RENAME):
             return self.resolve(args[0])[0]
         return self.shard_of_fd(args[0])
 
@@ -696,10 +702,33 @@ class ShardedDevice(Device):
             self.stats.op_end()
 
     def unlink(self, path: str) -> None:
+        """Pinned (``shard{k}:``) paths unlink exactly there.  A bare path
+        first tries its hash route, then falls back to every sub-device —
+        the union view, mirroring ``getdents``: pinned creations (shard
+        files, staged extents) live where ``place()`` put them, not where
+        the hash of their bare name points, and callers sweeping a
+        directory by its ``getdents`` listing address them bare."""
+        pinned = _SHARD_PREFIX.match(path) is not None
         shard, sub = self.resolve(path)
         self.stats.op_begin()
         try:
-            self.devices[shard].unlink(sub)
+            try:
+                self.devices[shard].unlink(sub)
+                return
+            except FileNotFoundError:
+                if pinned:
+                    raise
+            found = False
+            for i, d in enumerate(self.devices):
+                if i == shard:
+                    continue
+                try:
+                    d.unlink(sub)
+                    found = True
+                except FileNotFoundError:
+                    pass
+            if not found:
+                raise FileNotFoundError(path)
         finally:
             self.stats.op_end()
 

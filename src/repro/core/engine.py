@@ -474,6 +474,10 @@ class SpecSession:
                     args[0], args[1] if len(args) > 1 else "w")
                 return IORequest(sc=sc, args=args, link=link, tag=tag,
                                  runner=runner, stage=rec)
+            if sc is Sys.RENAME:
+                runner, rec = txn.stage_rename(args)
+                return IORequest(sc=sc, args=args, link=link, tag=tag,
+                                 runner=runner, stage=rec)
             # PWRITE into a file this transaction created: on a guaranteed
             # path it needs no undo record (rollback unlinks the file).
             # Behind a weak edge it must NOT pre-issue at all — if the
@@ -638,6 +642,8 @@ class SpecSession:
             if sc is Sys.OPEN:
                 runner, rec = txn.stage_create(
                     args[0], args[1] if len(args) > 1 else "w")
+            elif sc is Sys.RENAME:
+                runner, rec = txn.stage_rename(args)
             elif not self._fd_is_staged(txn, args[0]):
                 runner, rec = txn.stage_overwrite(args)
             else:  # write into a staged file: nothing extra to log

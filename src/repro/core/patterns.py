@@ -16,6 +16,8 @@ these generic builders instead of hand-drawing a graph per call site:
   *undoable* (it lands in a staging extent and publishes at the close
   barrier — repro.store.staging); fsync/close are harvest-gated so the
   barrier never runs ahead of the writes it orders
+* ``build_unlink_list_graph`` — unlink over a path list (all-strong, so the
+  barrier unlinks batch once entered; the checkpoint GC sweep's shape)
 
 ctx conventions are documented per builder.  Results are harvested into
 ctx lists so wrapped functions can also consume them if desired.
@@ -269,6 +271,39 @@ def build_copy_extents_graph(name: str = "copy_extents") -> ForeactionGraph:
     return b.Build()
 
 
+def build_unlink_list_graph(name: str = "unlink_list") -> ForeactionGraph:
+    """ctx: {"victims": [str]}; unlink loop over a path list.
+
+    Unlinks are barriers (the removed bytes are unrecoverable), but all
+    edges here are strong, so once the loop starts the whole remainder is
+    guaranteed and pre-issues as one batch — on a sharded device the
+    unlinks fan out to their owning sub-devices.  Callers must order any
+    de-commit step (tombstone rename) *before* activating this graph; the
+    checkpoint manager's GC sweep is the canonical user."""
+    b = GraphBuilder(name)
+
+    def args(ctx, ep):
+        vs = ctx["victims"]
+        return ((vs[ep[0]],), False) if ep[0] < len(vs) else None
+
+    def head(ctx, ep):
+        return 0 if len(ctx["victims"]) > 0 else 1
+
+    def more(ctx, ep):
+        return 0 if ep[0] + 1 < len(ctx["victims"]) else 1
+
+    b.AddBranchingNode("any", head)
+    b.AddSyscallNode("unlink", Sys.UNLINK, args)
+    b.AddBranchingNode("more", more)
+    b.SetStart("any")
+    b.BranchAppendChild("any", "unlink")
+    b.BranchAppendChild("any", None)
+    b.SyscallSetNext("unlink", "more")
+    b.BranchAppendChild("more", "unlink", loopback=True)
+    b.BranchAppendChild("more", None)
+    return b.Build()
+
+
 PATTERNS: Dict[str, Callable[[], ForeactionGraph]] = {
     "stat_list": build_stat_list_graph,
     "open_list": build_open_list_graph,
@@ -276,6 +311,7 @@ PATTERNS: Dict[str, Callable[[], ForeactionGraph]] = {
     "pwrite_extents": build_pwrite_extents_graph,
     "write_file": build_write_file_graph,
     "copy_extents": build_copy_extents_graph,
+    "unlink_list": build_unlink_list_graph,
 }
 
 

@@ -72,7 +72,9 @@ def _static_effect(sc: Sys) -> Optional[Effect]:
         return None
     if sc is Sys.PWRITE:
         return Effect.UNDOABLE
-    return Effect.BARRIER  # close, fsync
+    if sc is Sys.RENAME:
+        return Effect.UNDOABLE
+    return Effect.BARRIER  # close, fsync, unlink
 
 
 class GraphPlan:

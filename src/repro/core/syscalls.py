@@ -7,12 +7,14 @@ Every syscall node falls into one of three *effect classes* (the paper's
   the OS page cache (pread, fstat, getdents, read-only open).  Always safe
   to pre-issue, even across weak edges.
 * **undoable** — leaves persistent state that a staging layer can revert:
-  pwrite (old bytes can be logged and replayed) and truncating-create opens
-  (the file can land in a staged name and be renamed into place later).
+  pwrite (old bytes can be logged and replayed), truncating-create opens
+  (the file can land in a staged name and be renamed into place later),
+  and rename to a fresh destination (renaming back restores the namespace).
   Pre-issuable across weak edges *when the session runs a staging
   transaction* (:mod:`repro.store.staging`); otherwise only when guaranteed.
 * **barrier** — unrecoverable or ordering-bearing side effects: fsync,
-  close, and opens of pre-existing files in write modes ("rw"/"a", whose
+  close, unlink (the removed bytes are gone), and opens of pre-existing
+  files in write modes ("rw"/"a", whose
   prior contents a file-granularity stage cannot preserve).  Never
   pre-issued across a weak edge; serving one at the frontier is the
   *publish barrier* that commits the staged files behind it.
@@ -39,6 +41,8 @@ class Sys(Enum):
     FSTATAT = "fstatat"
     GETDENTS = "getdents"
     FSYNC = "fsync"
+    RENAME = "rename"
+    UNLINK = "unlink"
 
 
 #: read-only syscalls with no externally visible side effect
@@ -72,7 +76,11 @@ def effect_of(sc: Sys, args: Tuple[Any, ...]) -> Effect:
         return Effect.BARRIER
     if sc is Sys.PWRITE:
         return Effect.UNDOABLE
-    return Effect.BARRIER  # close, fsync
+    if sc is Sys.RENAME:
+        # renaming back restores the old namespace (staged renames assume a
+        # fresh destination; see repro.store.staging.StagingTxn.stage_rename)
+        return Effect.UNDOABLE
+    return Effect.BARRIER  # close, fsync, unlink
 
 
 def is_pure(sc: Sys, args: Tuple[Any, ...]) -> bool:
@@ -126,6 +134,10 @@ def execute(device, sc: Sys, args: Tuple[Any, ...]):
         return device.getdents(*args)
     if sc is Sys.FSYNC:
         return device.fsync(*args)
+    if sc is Sys.RENAME:
+        return device.rename(*args)
+    if sc is Sys.UNLINK:
+        return device.unlink(*args)
     raise ValueError(f"unknown syscall {sc}")
 
 

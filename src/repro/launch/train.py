@@ -16,7 +16,7 @@ from __future__ import annotations
 import argparse
 from dataclasses import replace
 
-from repro.checkpoint import CheckpointManager
+from repro.checkpoint import CheckpointManager, CheckpointPolicy
 from repro.configs import get_config
 from repro.core import Foreactor, OSDevice
 from repro.data import (DataConfig, ShardedTokenDataset, TokenBatchLoader,
@@ -47,6 +47,15 @@ def main() -> None:
                          "the training thread; the bench_write baseline)")
     ap.add_argument("--kill-at", type=int, default=0,
                     help="simulate a node failure at this step")
+    ap.add_argument("--keep-last", type=int, default=3,
+                    help="retention: newest N step-checkpoints to keep")
+    ap.add_argument("--keep-spaced", type=int, default=0,
+                    help="retention: newest M time-spaced anchor checkpoints")
+    ap.add_argument("--spacing-s", type=float, default=3600.0,
+                    help="retention: minimum seconds between anchors")
+    ap.add_argument("--delta-every", type=int, default=0,
+                    help="write K delta checkpoints between full saves "
+                         "(0 = every save full)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -74,7 +83,12 @@ def main() -> None:
                       total_steps=args.steps)
     tcfg = TrainerConfig(steps=args.steps, ckpt_every=args.ckpt_every,
                          log_every=10, restore=not args.no_restore,
-                         write_behind=not args.serial_ckpt)
+                         write_behind=not args.serial_ckpt,
+                         retention=CheckpointPolicy(
+                             keep_last=args.keep_last,
+                             keep_spaced=args.keep_spaced,
+                             spacing_s=args.spacing_s),
+                         delta_every=args.delta_every)
     trainer = Trainer(model, opt, loader, ckpt, make_host_mesh(), tcfg)
 
     if args.kill_at:

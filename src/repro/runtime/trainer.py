@@ -30,7 +30,7 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 import numpy as np
 
-from repro.checkpoint import CheckpointManager
+from repro.checkpoint import CheckpointManager, CheckpointPolicy
 from repro.data.pipeline import TokenBatchLoader
 from repro.launch import sharding as shd
 from repro.launch.steps import make_train_step, make_train_state
@@ -51,6 +51,14 @@ class TrainerConfig:
     #: every save synchronously on the training thread (the serial baseline
     #: benchmarks/bench_write.py measures against)
     write_behind: bool = True
+    #: retention policy installed on the CheckpointManager at fit() time
+    #: (None keeps whatever the manager was built with); every save is
+    #: followed by a GC pass collecting steps outside the policy's keep-set
+    retention: Optional[CheckpointPolicy] = None
+    #: delta cadence: number of delta (incremental) saves between full
+    #: saves.  0 = every save full; k writes k deltas then one full, so a
+    #: restore chains at most k+1 checkpoints.
+    delta_every: int = 0
 
 
 @dataclass
@@ -77,6 +85,21 @@ class Trainer:
         self.stragglers: List[int] = []
         self.ckpt_wait_s = 0.0  # training-thread time lost to checkpoint I/O
         self.ckpt_saves = 0
+        # delta cadence state: primed so the very first save is a full one
+        self._saves_since_full = tcfg.delta_every
+
+    def _next_delta(self) -> bool:
+        """True iff the next periodic save should be incremental: the
+        cadence writes ``delta_every`` deltas between full saves (the
+        emergency save is always full — the crash path should not depend
+        on chain state)."""
+        if self.tcfg.delta_every <= 0:
+            return False
+        if self._saves_since_full >= self.tcfg.delta_every:
+            self._saves_since_full = 0
+            return False
+        self._saves_since_full += 1
+        return True
 
     # -- step construction -------------------------------------------------
     def _jit_step(self):
@@ -105,6 +128,8 @@ class Trainer:
 
     # -- the loop ------------------------------------------------------------
     def fit(self) -> Dict[str, Any]:
+        if self.ckpt is not None and self.tcfg.retention is not None:
+            self.ckpt.policy = self.tcfg.retention
         with mesh_context(self.mesh):
             step_fn = self._jit_step()
             state, epoch, step0 = self._init_or_restore()
@@ -139,12 +164,15 @@ class Trainer:
                         e2, s2 = divmod(global_step, spe)
                         extra = {"epoch": e2, "step": global_step}
                         t0 = time.perf_counter()
+                        delta = self._next_delta()
                         if self.tcfg.write_behind:
                             # blocks only while a previous save is still in
                             # flight; the write graph runs behind compute
-                            self.ckpt.save_async(global_step, state, extra=extra)
+                            self.ckpt.save_async(global_step, state,
+                                                 extra=extra, delta=delta)
                         else:
-                            self.ckpt.save(global_step, state, extra=extra)
+                            self.ckpt.save(global_step, state, extra=extra,
+                                           delta=delta)
                         self.ckpt_wait_s += time.perf_counter() - t0
                         self.ckpt_saves += 1
             except BaseException:
@@ -162,7 +190,8 @@ class Trainer:
                 t0 = time.perf_counter()
                 self.ckpt.wait_pending()
                 self.ckpt.save(global_step, state,
-                               extra={"epoch": epoch, "step": global_step})
+                               extra={"epoch": epoch, "step": global_step},
+                               delta=self._next_delta())
                 self.ckpt_wait_s += time.perf_counter() - t0
                 self.ckpt_saves += 1
             return {

@@ -18,6 +18,10 @@ write speculation"):
   first preads the bytes it is about to clobber into the *undo log*, then
   writes in place.  Rollback replays the log in reverse and truncates away
   any extension past the old end.
+* **Staged renames** — a speculative ``rename`` to a fresh destination
+  executes immediately but logs the old name; rollback renames back.  This
+  is what makes the checkpoint GC graph's tombstone rename (de-committing a
+  checkpoint by moving its commit marker aside) speculable and abortable.
 * **Publish barrier** — a staged create is *published* (renamed onto its
   final path) when the frontier serves the ``close`` of its fd, or — for
   fds the function leaves open — when the session commits.  Until then the
@@ -81,11 +85,12 @@ def staged_name(device: Device, path: str, token: str, seq: int) -> str:
 
 @dataclass
 class StageRecord:
-    """One undo-log entry: a staged create or a logged overwrite."""
+    """One undo-log entry: a staged create, a logged overwrite, or an
+    undoable rename."""
 
-    kind: str  # "create" | "overwrite"
-    final_path: Optional[str] = None  # create: where publish renames to
-    staged_path: Optional[str] = None  # create: where the bytes live now
+    kind: str  # "create" | "overwrite" | "rename"
+    final_path: Optional[str] = None  # create/rename: where the file ends up
+    staged_path: Optional[str] = None  # create: staged name; rename: old name
     flags: Optional[str] = None
     fd: Optional[int] = None  # create: staged fd; overwrite: target fd
     offset: int = 0  # overwrite: where the write landed
@@ -162,6 +167,33 @@ class StagingTxn:
 
         return runner, rec
 
+    def stage_rename(self, args: Tuple[Any, ...],
+                     ) -> Tuple[Callable[[Device], Any], StageRecord]:
+        """Wrap a rename so an aborted speculation can rename back.
+
+        The rename executes immediately (like an overwrite, the effect is
+        visible as soon as the runner lands); the record remembers the old
+        name so rollback restores the namespace.  Sound only for a *fresh*
+        destination — an overwriting rename would clobber bytes the
+        rename-back cannot restore, the same file-granularity limit staged
+        creates have.  The checkpoint GC graph's tombstone rename (a commit
+        marker moved to a unique tombstone name) is the canonical user.
+        """
+        rec = StageRecord(kind="rename")
+        with self._lock:
+            self._records.append(rec)
+
+        def runner(device: Device):
+            src, dst = resolve_args(args)
+            out = device.rename(src, dst)
+            with self._lock:
+                rec.staged_path = src
+                rec.final_path = dst
+                rec.applied = True
+            return out
+
+        return runner, rec
+
     def is_staged_fd(self, fd: Any) -> bool:
         """True iff ``fd`` refers to a file this transaction created — a
         write through it needs no undo entry (rollback unlinks the file)."""
@@ -182,6 +214,23 @@ class StagingTxn:
         fd lookup would name the wrong record."""
         with self._lock:
             return self._staged_fds.get(fd)
+
+    def publish_demanded(self) -> None:
+        """Hard commit point mid-session: publish every record the frontier
+        has demanded *now*, in program order, instead of waiting for the
+        session to settle.  After this call those effects survive a later
+        abort — which is exactly what a forward-only protocol needs at its
+        point of no return.  The checkpoint GC graph calls it right after
+        the frontier serves the tombstone rename and before any unlink: a
+        crash or abort beyond that point must leave the tombstone in place
+        (the half-unlinked directory is only safe because it is
+        de-committed), while an abort before it rolls the rename back and
+        the checkpoint stays fully live."""
+        with self._lock:
+            records = list(self._records)
+        for rec in records:
+            if rec.demanded:
+                self._publish(rec)
 
     def publish_close(self, rec: Optional[StageRecord]) -> None:
         """Publish barrier: the frontier served the ``close`` of this
@@ -230,6 +279,10 @@ class StagingTxn:
                 self.device.unlink(rec.staged_path)
             except FileNotFoundError:
                 pass
+        elif rec.kind == "rename":
+            # rename back: the destination was fresh, so this restores the
+            # namespace exactly
+            self.device.rename(rec.final_path, rec.staged_path)
         else:
             self.device.pwrite(rec.fd, rec.old_data, rec.offset)
             if len(rec.old_data) < rec.new_len:

@@ -1,0 +1,523 @@
+"""Checkpoint lifecycle at fleet scale: retention + speculated GC + delta
+chains, proven by a crash matrix.
+
+The harness runs every lifecycle scenario once with a counting device
+wrapper to enumerate its *mutating* device ops (creating open, pwrite,
+fsync, rename, unlink — one per foreaction-graph node class that touches
+the namespace), then replays the scenario killing the process immediately
+before each op in turn.  A kill freezes the device: the op raises, and
+every later mutation (including staging-rollback attempts — a dead process
+cannot clean up) raises too, which is exactly the state a real crash
+leaves.  After each kill a *fresh* manager over the surviving bytes (the
+restart) must:
+
+* ``restore_latest()`` a byte-identical known-good checkpoint — never a
+  half-written, half-deleted, or mixed-generation one (the atomic-commit
+  invariant and the GC protocol's forward-only guarantee);
+* finish the crashed collection on its next ``gc()`` pass and then save +
+  restore normally, leaving no tombstones or staging residue behind.
+
+Scenario coverage: empty root, retention-limit GC of a full save, a live
+full+delta chain, GC of a whole delta chain (base must outlive every
+kept delta), sweep of a crash-orphaned tombstone, and re-saving an
+already-committed step (the non-atomic-overwrite regression).  A smaller
+sampled matrix repeats two scenarios under the speculating io_uring
+backend, where op order is nondeterministic but the invariants must hold
+at any interleaving.
+
+Property tests (hypothesis, optional via ``_hypothesis_support``) pin the
+retention policy's pure core: keep-set spec, monotonicity under appended
+saves, and delta-chain closure.
+"""
+
+from __future__ import annotations
+
+import threading
+import warnings
+
+import numpy as np
+import pytest
+from _hypothesis_support import HAS_HYPOTHESIS, given, settings, st
+
+from repro.checkpoint import CheckpointManager, CheckpointPolicy, SaveInfo, chain_of
+from repro.checkpoint.manager import COMMIT_MARKER, GC_TAG
+from repro.core import Foreactor, MemDevice
+from repro.store.staging import STAGE_TAG, StagingTxn
+
+ROOT = "/ck"
+SHARDS = 2
+CHUNK = 128  # w: 384 B -> 3 extents, b: 96 B -> 1 extent
+
+
+class _Killed(Exception):
+    """The injected process death (not an OSError: recovery code that
+    tolerates I/O errors must still die on it)."""
+
+
+class CrashDevice:
+    """Device wrapper with deterministic kill-point injection.
+
+    Counts mutating ops (the namespace-changing node classes).  When armed,
+    the ``kill_at``-th mutating op after arming raises *before* executing,
+    and the device freezes: every later mutation raises too, so rollback
+    paths cannot "helpfully" clean up state a dead process would have left
+    behind.  Reads keep working only because the harness, not the victim,
+    does the post-mortem.
+    """
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.kill_at = None  # absolute count of the op to die before
+        self.count = 0
+        self.frozen = False
+        self.trace = []  # mutating op kinds, in execution order
+        self._lock = threading.Lock()
+
+    def _mut(self, kind: str) -> None:
+        with self._lock:
+            if self.frozen:
+                raise _Killed(f"dead process: {kind}")
+            self.count += 1
+            self.trace.append(kind)
+            if self.kill_at is not None and self.count >= self.kill_at:
+                self.frozen = True
+                raise _Killed(f"killed before op #{self.count} ({kind})")
+
+    def open(self, path, flags="r"):
+        if flags != "r":
+            self._mut("open_w")
+        return self.inner.open(path, flags)
+
+    def pwrite(self, fd, data, off):
+        self._mut("pwrite")
+        return self.inner.pwrite(fd, data, off)
+
+    def fsync(self, fd):
+        self._mut("fsync")
+        return self.inner.fsync(fd)
+
+    def rename(self, src, dst):
+        self._mut("rename")
+        return self.inner.rename(src, dst)
+
+    def unlink(self, path):
+        self._mut("unlink")
+        return self.inner.unlink(path)
+
+    def truncate(self, fd, length):
+        self._mut("pwrite")  # same class: an in-place byte mutation
+        return self.inner.truncate(fd, length)
+
+    def __getattr__(self, name):  # reads, close, place, stats, ...
+        return getattr(self.inner, name)
+
+
+def make_tree(seed: int):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.standard_normal(96).astype(np.float32),
+            "b": rng.standard_normal(24).astype(np.float32)}
+
+
+def flat_snap(tree):
+    """Copy a tree into the flat {\"['k']\": array} form restore returns."""
+    return {f"['{k}']": np.array(v, copy=True) for k, v in tree.items()}
+
+
+def _expect(expected, step, tree):
+    """Record that ``step``, if it ever commits, must restore to exactly
+    these bytes (a step may have several acceptable generations when the
+    scenario re-saves it)."""
+    expected.setdefault(step, []).append(flat_snap(tree))
+
+
+# -- scenarios -----------------------------------------------------------------
+# Each scenario drives one manager; ops before arm() are the (never-killed)
+# setup, ops after it form the kill matrix.
+
+SCENARIOS = {}
+
+
+def scenario(name, may_be_empty=False, keep=3):
+    def deco(fn):
+        SCENARIOS[name] = (fn, may_be_empty, keep)
+        return fn
+    return deco
+
+
+@scenario("empty_full", may_be_empty=True)
+def s_empty_full(mgr, expected, arm):
+    """First save into an empty root: any kill leaves either nothing
+    committed or the complete step."""
+    t0 = make_tree(0)
+    _expect(expected, 0, t0)
+    arm()
+    mgr.save(0, t0)
+
+
+@scenario("retention_gc", keep=2)
+def s_retention_gc(mgr, expected, arm):
+    """A save at the retention limit: commit of step 2 triggers GC of
+    step 0 (tombstone rename + unlinks), killed at every point."""
+    for s in range(2):
+        t = make_tree(s)
+        _expect(expected, s, t)
+        mgr.save(s, t)
+    t2 = make_tree(2)
+    _expect(expected, 2, t2)
+    arm()
+    mgr.save(2, t2)
+
+
+@scenario("delta_chain_save", keep=10)
+def s_delta_chain_save(mgr, expected, arm):
+    """Appending a delta to a live full+delta chain: a killed delta save
+    must never damage the chain it was extending."""
+    t = make_tree(0)
+    _expect(expected, 0, t)
+    mgr.save(0, t)
+    for s in (1, 2):
+        t["w"][s] = s + 0.5
+        _expect(expected, s, t)
+        mgr.save(s, t, delta=True)
+    t["w"][7] = 9.25
+    _expect(expected, 3, t)
+    arm()
+    mgr.save(3, t, delta=True)
+
+
+@scenario("gc_delta_chain", keep=10)
+def s_gc_delta_chain(mgr, expected, arm):
+    """Collecting an entire delta chain (policy tightened to keep_last=1):
+    victims go newest-first, so at no kill point does a committed delta
+    survive the base it needs."""
+    t = make_tree(0)
+    _expect(expected, 0, t)
+    mgr.save(0, t)
+    for s in (1, 2):
+        t["w"][s] = -1.0 * s
+        _expect(expected, s, t)
+        mgr.save(s, t, delta=True)
+    t3 = make_tree(3)
+    _expect(expected, 3, t3)
+    mgr.policy = CheckpointPolicy(keep_last=1)
+    arm()
+    mgr.save(3, t3)
+
+
+@scenario("sweep_resume", keep=5)
+def s_sweep_resume(mgr, expected, arm):
+    """A previous GC died right after its point of no return (tombstone in
+    place, files intact).  The sweep must finish the collection — and be
+    killable at every step itself."""
+    t0, t1 = make_tree(0), make_tree(1)
+    mgr.save(0, t0)
+    _expect(expected, 1, t1)
+    mgr.save(1, t1)
+    # forge the crash state: de-commit step 0 exactly as the GC graph does
+    mgr.device.rename(f"{mgr.step_dir(0)}/{COMMIT_MARKER}",
+                      mgr._tombstone_path(0))
+    arm()
+    mgr.gc()
+
+
+@scenario("resave_committed", keep=5)
+def s_resave_committed(mgr, expected, arm):
+    """Re-saving an already-committed step (an emergency save landing on a
+    periodic save's step).  Restore must see the old generation or the new
+    one — never a stale ``ok`` marker vouching for mixed bytes."""
+    t_a, t_b = make_tree(10), make_tree(11)
+    _expect(expected, 1, t_a)
+    mgr.save(1, t_a)
+    _expect(expected, 2, t_b)
+    mgr.save(2, t_b)
+    t_c = make_tree(12)
+    _expect(expected, 2, t_c)
+    arm()
+    mgr.save(2, t_c)
+
+
+def run_scenario(name, kill_at=None, backend="sync", depth=0, workers=0):
+    fn, _may_be_empty, keep = SCENARIOS[name]
+    inner = MemDevice()
+    crash = CrashDevice(inner)
+    kw = {"workers": workers} if workers else {}
+    fa = Foreactor(device=crash, backend=backend, depth=depth, **kw)
+    mgr = CheckpointManager(crash, ROOT, fa=fa, num_shards=SHARDS,
+                            chunk_bytes=CHUNK, keep=keep)
+    expected = {}
+    killed = False
+    base = [0]
+
+    def arm():
+        base[0] = crash.count
+        if kill_at is not None:
+            crash.kill_at = crash.count + kill_at
+
+    with warnings.catch_warnings():
+        # a frozen device makes staging rollback fail by design; the abort
+        # path reports that as a RuntimeWarning, which is the point here
+        warnings.simplefilter("ignore", RuntimeWarning)
+        try:
+            fn(mgr, expected, arm)
+        except _Killed:
+            killed = True
+        finally:
+            fa.shutdown()
+    return inner, expected, killed, crash.count - base[0], crash.trace[base[0]:]
+
+
+def assert_recovered(inner, expected, may_be_empty, ctx):
+    """The restart: a fresh manager over the surviving bytes must restore a
+    known-good checkpoint, finish any crashed GC, and work normally."""
+    fa = Foreactor(device=inner, backend="sync", depth=0)
+    mgr = CheckpointManager(inner, ROOT, fa=fa, num_shards=SHARDS,
+                            chunk_bytes=CHUNK, keep=3)
+    try:
+        for step in mgr.committed_steps():
+            assert step in expected, \
+                f"{ctx}: committed step {step} was never a good snapshot"
+        out = mgr.restore_latest()
+        if out is None:
+            assert may_be_empty and mgr.committed_steps() == [], \
+                f"{ctx}: lost every checkpoint"
+        else:
+            step, flat, _extra = out
+            ok = any(set(flat) == set(s)
+                     and all(np.array_equal(flat[k], s[k]) for k in s)
+                     for s in expected.get(step, []))
+            assert ok, f"{ctx}: step {step} restored torn/unknown bytes"
+        # recovery: the next pass finishes any crashed collection...
+        mgr.gc()
+        # ...and the store saves + restores normally on top of it
+        t = make_tree(999)
+        mgr.save(999, t)
+        step, flat, _extra = mgr.restore_latest()
+        assert step == 999, ctx
+        want = flat_snap(t)
+        assert set(flat) == set(want) and \
+            all(np.array_equal(flat[k], want[k]) for k in want), ctx
+        # a completed pass leaves no tombstones and no staging residue
+        leftovers = [p for p in inner._files
+                     if GC_TAG in p or STAGE_TAG in p]
+        assert leftovers == [], f"{ctx}: {leftovers}"
+    finally:
+        fa.shutdown()
+
+
+# -- the matrix ----------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_crash_matrix(name):
+    _inner, _exp, killed, n_ops, _trace = run_scenario(name)
+    assert not killed and n_ops > 0
+    _fn, may_be_empty, _keep = SCENARIOS[name]
+    for k in range(1, n_ops + 1):
+        inner, expected, killed, _n, _t = run_scenario(name, kill_at=k)
+        assert killed, f"{name}: kill point {k}/{n_ops} never fired"
+        assert_recovered(inner, expected, may_be_empty,
+                         ctx=f"{name} kill {k}/{n_ops}")
+
+
+def test_matrix_covers_every_mutation_class():
+    """Meta-check: the scenarios' armed phases actually exercise every
+    namespace-mutating node class, so 'killed before every op' really means
+    'killed after every node class'."""
+    kinds = set()
+    for name in SCENARIOS:
+        _i, _e, _k, n_ops, trace = run_scenario(name)
+        assert n_ops == len(trace)
+        kinds.update(trace)
+    assert kinds >= {"open_w", "pwrite", "fsync", "rename", "unlink"}, kinds
+
+
+@pytest.mark.parametrize("name", ["retention_gc", "delta_chain_save"])
+def test_crash_matrix_speculated_smoke(name):
+    """Sampled kills under the speculating backend: op order is
+    nondeterministic there, but any interleaving must satisfy the same
+    restart invariants."""
+    _i, _e, _k, n_ops, _t = run_scenario(name)
+    _fn, may_be_empty, _keep = SCENARIOS[name]
+    for k in sorted({1, 2, max(1, n_ops // 2), max(1, n_ops - 1), n_ops}):
+        inner, expected, _killed, _n, _t2 = run_scenario(
+            name, kill_at=k, backend="io_uring", depth=32, workers=4)
+        assert_recovered(inner, expected, may_be_empty,
+                         ctx=f"spec:{name} kill {k}")
+
+
+# -- regressions the matrix reproduced -----------------------------------------
+
+def test_partial_dir_never_shadows_latest():
+    """A killed save's partial directory at a higher step number (no commit
+    marker) must not shadow the real latest checkpoint."""
+    inner = MemDevice()
+    fa = Foreactor(device=inner, backend="sync", depth=0)
+    mgr = CheckpointManager(inner, ROOT, fa=fa, num_shards=SHARDS,
+                            chunk_bytes=CHUNK, keep=3)
+    t5 = make_tree(5)
+    mgr.save(5, t5)
+    d = mgr.step_dir(9)  # forged debris: shard + manifest, no marker
+    for name, data in (("shard_0000.bin", b"junk"), ("manifest.json", b"{}")):
+        fd = inner.open(f"{d}/{name}", "w")
+        inner.pwrite(fd, data, 0)
+        inner.close(fd)
+    assert mgr.latest_step() == 5
+    step, flat, _ = mgr.restore_latest()
+    assert step == 5
+    want = flat_snap(t5)
+    assert all(np.array_equal(flat[k], want[k]) for k in want)
+    fa.shutdown()
+
+
+def test_gc_never_collects_base_of_kept_delta():
+    """Directly: tighten retention over a full+delta chain; the kept delta
+    pins its base (the chain is one retention unit)."""
+    inner = MemDevice()
+    fa = Foreactor(device=inner, backend="sync", depth=0)
+    mgr = CheckpointManager(inner, ROOT, fa=fa, num_shards=SHARDS,
+                            chunk_bytes=CHUNK, keep=10)
+    t = make_tree(0)
+    mgr.save(0, t)
+    for s in (1, 2, 3):
+        t["w"][s] = s * 2.0
+        mgr.save(s, t, delta=True)
+    mgr.policy = CheckpointPolicy(keep_last=1)
+    mgr.gc()
+    # keep_last=1 keeps delta 3 — and therefore, via chain closure, every
+    # base under it; nothing in the chain may be collected
+    assert mgr.committed_steps() == [0, 1, 2, 3]
+    step, flat, _ = mgr.restore_latest()
+    assert step == 3
+    want = flat_snap(t)
+    assert all(np.array_equal(flat[k], want[k]) for k in want)
+    fa.shutdown()
+
+
+# -- staged rename + point of no return ----------------------------------------
+
+def test_stage_rename_rollback_restores_name():
+    dev = MemDevice()
+    fd = dev.open("/a/x", "w")
+    dev.pwrite(fd, b"hi", 0)
+    dev.close(fd)
+    txn = StagingTxn(dev)
+    runner, rec = txn.stage_rename(("/a/x", "/a/y"))
+    runner(dev)
+    assert "/a/y" in dev._files and "/a/x" not in dev._files
+    txn.finalize(ok=False)  # abort: rename back
+    assert "/a/x" in dev._files and "/a/y" not in dev._files
+    assert rec.undone
+
+
+def test_publish_demanded_pins_rename_through_abort():
+    """publish_demanded is the GC protocol's point of no return: a demanded
+    rename published through it survives a later abort."""
+    dev = MemDevice()
+    fd = dev.open("/a/x", "w")
+    dev.pwrite(fd, b"hi", 0)
+    dev.close(fd)
+    txn = StagingTxn(dev)
+    runner, rec = txn.stage_rename(("/a/x", "/a/y"))
+    runner(dev)
+    txn.on_demand(rec)
+    txn.publish_demanded()
+    txn.finalize(ok=False)  # the abort must NOT rename back
+    assert "/a/y" in dev._files and "/a/x" not in dev._files
+
+
+# -- retention policy: pure-core property tests --------------------------------
+
+if HAS_HYPOTHESIS:
+    @st.composite
+    def _histories(draw, allow_delta=True):
+        """Realistic save histories: strictly increasing steps,
+        nondecreasing wall time, each delta based on the previous save
+        (exactly what the manager produces)."""
+        n = draw(st.integers(min_value=0, max_value=12))
+        hist, step, t = [], 0, 0.0
+        for _ in range(n):
+            step += draw(st.integers(min_value=1, max_value=5))
+            t += draw(st.floats(min_value=0.0, max_value=10.0,
+                                allow_nan=False))
+            if allow_delta and hist and draw(st.booleans()):
+                kind, base = "delta", hist[-1].step
+            else:
+                kind, base = "full", None
+            hist.append(SaveInfo(step=step, wall_time=t, kind=kind,
+                                 base=base))
+        return hist
+
+    _policies = st.builds(CheckpointPolicy,
+                          keep_last=st.integers(min_value=1, max_value=4),
+                          keep_spaced=st.integers(min_value=0, max_value=3),
+                          spacing_s=st.sampled_from([1.0, 5.0, 30.0]))
+    _policies_any = st.builds(CheckpointPolicy,
+                              keep_last=st.integers(min_value=0, max_value=4),
+                              keep_spaced=st.integers(min_value=0,
+                                                      max_value=3),
+                              spacing_s=st.sampled_from([1.0, 5.0, 30.0]))
+else:  # stubs; @given degrades each test to a visible skip
+    def _histories(allow_delta=True):
+        return None
+
+    _policies = _policies_any = None
+
+
+@settings(max_examples=100, deadline=None)
+@given(h=_histories(), p=_policies)
+def test_keep_steps_satisfies_spec(h, p):
+    """keep-set ⊆ history; newest keep_last always kept; newest keep_spaced
+    anchors always kept; a kept delta always keeps its base (closure)."""
+    keep = p.keep_steps(h)
+    steps = sorted({s.step for s in h})
+    by_step = {s.step: s for s in h}
+    assert keep <= set(steps)
+    assert set(steps[-p.keep_last:] if p.keep_last else []) <= keep
+    if p.keep_spaced and h:
+        assert set(p.anchors(h)[-p.keep_spaced:]) <= keep
+    for s in keep:
+        b = by_step[s].base
+        if b is not None and b in by_step:
+            assert b in keep, (s, b)
+
+
+@settings(max_examples=100, deadline=None)
+@given(h=_histories(), p=_policies)
+def test_keep_steps_monotone_under_append(h, p):
+    """Appending a save never *adds* older steps to the keep-set:
+    keep(h + [x]) ⊆ keep(h) ∪ {x.step}.  Holds for manager-shaped
+    histories (keep_last >= 1, deltas based on the previous save), which
+    is what makes GC forward-only: a collected step stays collected."""
+    for i in range(1, len(h) + 1):
+        prev = p.keep_steps(h[:i - 1])
+        cur = p.keep_steps(h[:i])
+        assert cur <= prev | {h[i - 1].step}, (i, sorted(prev), sorted(cur))
+
+
+@settings(max_examples=100, deadline=None)
+@given(h=_histories(allow_delta=False), p=_policies_any)
+def test_keep_steps_monotone_full_only_any_policy(h, p):
+    """For full-save-only histories monotonicity needs no keep_last floor
+    (no chain closure can reach back past the window)."""
+    for i in range(1, len(h) + 1):
+        prev = p.keep_steps(h[:i - 1])
+        cur = p.keep_steps(h[:i])
+        assert cur <= prev | {h[i - 1].step}
+
+
+# deterministic policy examples (run even without hypothesis)
+
+def test_keep_steps_examples():
+    h = [SaveInfo(step=s, wall_time=float(s)) for s in range(5)]
+    assert CheckpointPolicy(keep_last=2).keep_steps(h) == {3, 4}
+    # spacing 2s over wall times 0..4 anchors 0, 2, 4; newest 2 = {2, 4}
+    p = CheckpointPolicy(keep_last=1, keep_spaced=2, spacing_s=2.0)
+    assert p.keep_steps(h) == {2, 4}
+    assert CheckpointPolicy(keep_last=0, keep_spaced=0).keep_steps(h) == set()
+    assert CheckpointPolicy().keep_steps([]) == frozenset()
+
+
+def test_keep_steps_chain_closure_example():
+    h = [SaveInfo(0, 0.0), SaveInfo(5, 1.0, "delta", 0),
+         SaveInfo(9, 2.0, "delta", 5)]
+    assert CheckpointPolicy(keep_last=1).keep_steps(h) == {9, 5, 0}
+    assert chain_of(9, {s.step: s for s in h}) == [9, 5, 0]

@@ -410,6 +410,55 @@ def test_abort_never_mutates_committed_namespace(cfg, depth):
     assert_ledger_invariant(stats)
 
 
+# -- delta-chain restore conformance -------------------------------------------
+
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+
+
+def _ckpt_tree(rng):
+    return {"w": rng.standard_normal(192).astype(np.float32),
+            "b": rng.standard_normal(48).astype(np.float32)}
+
+
+@pytest.mark.parametrize("chain", [1, 3, 6])
+@pytest.mark.parametrize("cfg", CONFIGS, ids=[c[0] for c in CONFIGS])
+def test_delta_chain_restore_conformance(cfg, chain):
+    """A chained delta restore (base + ``chain`` overlays) is byte-identical
+    to restoring a plain full save of the same final tree, on every
+    backend."""
+    _name, kind, kwargs = cfg
+    dev = make_device(kind)
+    fa = Foreactor(device=dev, depth=8, **kwargs)
+    mgr = CheckpointManager(dev, "/ckpt", fa=fa, num_shards=3,
+                            chunk_bytes=256, keep=chain + 2,
+                            max_delta_chain=chain + 2)
+    rng = np.random.default_rng(chain)
+    tree = _ckpt_tree(rng)
+    mgr.save(0, tree)
+    for s in range(1, chain + 1):
+        idx = rng.integers(0, tree["w"].size, size=3)
+        tree["w"][idx] = rng.standard_normal(3).astype(np.float32)
+        mgr.save(s, tree, delta=True)
+        assert mgr.read_manifest(s)["kind"] == "delta"
+
+    ref_dev = make_device(kind)
+    ref_fa = Foreactor(device=ref_dev, backend="sync", depth=0)
+    ref = CheckpointManager(ref_dev, "/ckpt", fa=ref_fa, num_shards=3,
+                            chunk_bytes=256)
+    ref.save(chain, tree)
+    try:
+        got, _ = mgr.restore(chain, check_crc=True)
+        want, _ = ref.restore(chain, check_crc=True)
+        assert set(got) == set(want)
+        for k in got:
+            assert got[k].tobytes() == want[k].tobytes(), k
+    finally:
+        fa.shutdown()
+        ref_fa.shutdown()
+
+
 # -- property-based sweep (hypothesis) ---------------------------------------
 
 if HAS_HYPOTHESIS:

@@ -146,6 +146,7 @@ WALK_CTXS = {
     "pwrite_extents": {"writes": [(3, b"x" * 4, 0), (3, b"y" * 4, 4)]},
     "write_file": {"path": "/f", "writes": [(b"x" * 4, 0)]},
     "copy_extents": {"pairs": [(3, 4, 8, 0), (3, 4, 8, 8)]},
+    "unlink_list": {"victims": ["/a", "/b", "/c"]},
     "du": {"root": "/d", "entries": ["x", "y"]},
     "cp": {"src": "/s", "dst": "/d", "buf_size": 4096, "size": 8192,
            "sfd": 3, "dfd": 4},
