@@ -1,0 +1,204 @@
+"""Scatter-gather multiget: one generated plan vs N speculated point gets.
+
+``LSMTree.multi_get`` fans a whole batch of point lookups into a single
+``lsm_multiget`` foreaction plan: every key's candidate-block chain is
+flattened round-robin into one pread loop, issued through the futures API
+(``io.pread_async``), and harvested at one barrier with per-key early
+exit.  The baseline is the strongest *per-key* configuration this repo
+has — N sequential ``lsm_get`` activations, each speculating its own
+candidate chain on the same io_uring queue-pair backend — so the measured
+gap is purely cross-key parallelism: one session's worth of submission
+batching and device-channel occupancy instead of N sessions paying one
+blocking demand round each.
+
+``python -m benchmarks.bench_multiget`` writes
+``benchmarks/results/multiget.json`` (rendered into docs/BENCHMARKS.md by
+``tools/bench_report.py``); ``--table`` renders the batch-size sweep;
+``--dry-run --check`` is the CI multiget-smoke gate: the fresh dry run
+must produce oracle-identical values with a working speedup, and the
+committed full-size results must keep the acceptance number —
+batch-16 multiget >= 2x faster than 16 sequential speculated gets.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import Foreactor
+from repro.store import plugins
+from repro.store.lsm import LSMTree
+
+from .bench_lsm import build_db
+from .common import sim, timeit_min, write_results
+
+BATCH_SWEEP = [2, 4, 8, 16, 32]
+N_KEYS = 2000
+L0_TABLES = 6  # ~6-candidate search chains per key
+BATCHES_PER_CELL = 4  # distinct key batches timed per sweep cell
+SEED = 11
+
+#: the acceptance number, gated in --check against the committed results
+MIN_SPEEDUP_AT_16 = 2.0
+
+
+def _draw_batches(rng, n_keys: int, batch: int, count: int) -> List[List[int]]:
+    return [[int(k) for k in rng.choice(n_keys, size=batch, replace=False)]
+            for _ in range(count)]
+
+
+def collect(dry_run: bool = False) -> Dict:
+    sweep_batches = [4, 16] if dry_run else BATCH_SWEEP
+    n_keys = 600 if dry_run else N_KEYS
+    repeats = 2 if dry_run else 3
+    inner, ref, _db_bytes = build_db(n_keys=n_keys, record=256,
+                                     l0_tables=L0_TABLES)
+    rng = np.random.default_rng(SEED)
+
+    dev = sim(inner)  # BENCH_PROFILE: 16 channels, no page cache
+    fa = Foreactor(device=dev, backend="io_uring", depth=32, workers=16)
+    plugins.register_all(fa, precompile=True)
+    lsm = LSMTree.open_existing(dev, "/db")
+    get = fa.wrap("lsm_get", plugins.capture_lsm_get)(lambda l, k: l.get(k))
+    mget = fa.wrap("lsm_multiget", plugins.capture_lsm_multiget)(
+        lambda l, ks: l.multi_get(ks))
+
+    cells: List[Dict] = []
+    for batch in sweep_batches:
+        batches = _draw_batches(rng, n_keys, batch, BATCHES_PER_CELL)
+        for keys in batches:  # correctness before timing: oracle-identical
+            want = [ref[k] for k in keys]
+            assert mget(lsm, keys) == want
+            assert [get(lsm, k) for k in keys] == want
+
+        def run_seq(bs=batches):
+            for keys in bs:
+                for k in keys:
+                    get(lsm, k)
+
+        def run_mget(bs=batches):
+            for keys in bs:
+                mget(lsm, keys)
+
+        t_seq = timeit_min(run_seq, repeats=repeats) / len(batches)
+        t_mget = timeit_min(run_mget, repeats=repeats) / len(batches)
+        cells.append({
+            "batch": batch,
+            "sequential_ms": t_seq * 1e3,
+            "multiget_ms": t_mget * 1e3,
+            "speedup": t_seq / t_mget,
+        })
+        print(f"# multiget batch={batch} seq={t_seq*1e3:.2f}ms "
+              f"mget={t_mget*1e3:.2f}ms speedup={t_seq/t_mget:.2f}x",
+              file=sys.stderr, flush=True)
+    lsm.close()
+    fa.shutdown()
+
+    by_batch = {c["batch"]: c for c in cells}
+    return {
+        "config": {
+            "batch_sweep": sweep_batches,
+            "n_keys": n_keys,
+            "l0_tables": L0_TABLES,
+            "batches_per_cell": BATCHES_PER_CELL,
+            "seed": SEED,
+            "dry_run": dry_run,
+            "methodology": "io_uring queue pair, depth 32, BENCH_PROFILE "
+                           "simulated device; baseline is N sequential "
+                           "speculated lsm_get activations over the same "
+                           "keys; best-of-N wall time per cell",
+        },
+        "sweep": cells,
+        "summary": {
+            "speedup_at_16": by_batch.get(16, {}).get("speedup"),
+            "max_speedup": max(c["speedup"] for c in cells),
+            "min_speedup": min(c["speedup"] for c in cells),
+        },
+    }
+
+
+def check(fresh: Dict, committed: Optional[Dict]) -> List[str]:
+    """CI smoke gate.  The fresh (dry-run-sized) sweep proves the whole
+    futures/multiget path end to end (collect() itself asserts values are
+    oracle-identical) and that batching is at least directionally faster at
+    batch 16.  The committed full-size results must keep the acceptance
+    number: >= 2x over sequential speculated gets at batch 16."""
+    errs: List[str] = []
+    for c in fresh["sweep"]:
+        if c["speedup"] <= 0:
+            errs.append(f"batch {c['batch']}: nonsensical speedup "
+                        f"{c['speedup']}")
+    s16 = fresh["summary"].get("speedup_at_16")
+    if s16 is None:
+        errs.append("fresh sweep has no batch-16 cell")
+    elif s16 < 1.2:
+        errs.append(f"fresh batch-16 multiget barely beats sequential "
+                    f"({s16:.2f}x < 1.2x)")
+    if committed is not None:
+        cs16 = committed["summary"].get("speedup_at_16")
+        if cs16 is None or cs16 < MIN_SPEEDUP_AT_16:
+            errs.append(f"committed batch-16 speedup fell below "
+                        f"{MIN_SPEEDUP_AT_16}x (got {cs16})")
+        if committed["summary"].get("min_speedup", 0) <= 1.0:
+            errs.append("committed sweep has a cell where multiget LOSES "
+                        "to sequential gets")
+    return errs
+
+
+def render_table(d: Dict) -> str:
+    lines = ["| batch | sequential (ms) | multiget (ms) | speedup |",
+             "|---|---|---|---|"]
+    for c in d["sweep"]:
+        lines.append(f"| {c['batch']} | {c['sequential_ms']:.2f} "
+                     f"| {c['multiget_ms']:.2f} | {c['speedup']:.2f}x |")
+    return "\n".join(lines)
+
+
+def run():
+    """run.py section (also refreshes benchmarks/results/multiget.json)."""
+    d = collect()
+    write_results("multiget", d)
+    s = d["summary"]
+    c16 = next(c for c in d["sweep"] if c["batch"] == 16)
+    return [
+        ("multiget_batch16", c16["multiget_ms"] * 1e3,
+         f"speedup={s['speedup_at_16']:.2f}x"),
+        ("multiget_batch16_sequential_baseline", c16["sequential_ms"] * 1e3,
+         ""),
+    ]
+
+
+def main(argv: List[str]) -> int:
+    import os
+
+    dry = "--dry-run" in argv
+    results_path = os.path.join(os.path.dirname(__file__), "results",
+                                "multiget.json")
+    if "--table" in argv:
+        with open(results_path) as f:
+            print(render_table(json.load(f)))
+        return 0
+    fresh = collect(dry_run=dry)
+    if "--check" in argv:
+        committed = None
+        if os.path.exists(results_path):
+            with open(results_path) as f:
+                committed = json.load(f)
+        errs = check(fresh, committed)
+        for e in errs:
+            print(f"FAIL: {e}", file=sys.stderr)
+        print(json.dumps(fresh["summary"], indent=2, sort_keys=True))
+        print("multiget-smoke:", "FAIL" if errs else "ok")
+        return 1 if errs else 0
+    if not dry:
+        write_results("multiget", fresh)
+        print("wrote benchmarks/results/multiget.json")
+    print(json.dumps(fresh["summary"], indent=2, sort_keys=True))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -28,6 +28,12 @@ Prints ``name,us_per_call,derived`` CSV.  Sections:
   benchmarks.bench_openloop --table``, and ``python -m
   benchmarks.bench_openloop --dry-run --check`` is the CI openloop-smoke
   gate)
+* Multiget — batched scatter-gather lookups through the futures API: one
+  ``lsm_multiget`` plan vs N sequential speculated gets (bench_multiget;
+  results in benchmarks/results/multiget.json, table via ``python -m
+  benchmarks.bench_multiget --table``, and ``python -m
+  benchmarks.bench_multiget --dry-run --check`` is the CI multiget-smoke
+  gate)
 
 Roofline tables (§Roofline) are produced separately by
 ``python -m benchmarks.roofline`` from the dry-run reports.
@@ -38,9 +44,9 @@ import time
 
 
 def main() -> None:
-    from . import (bench_adaptive, bench_bptree, bench_lsm, bench_openloop,
-                   bench_overhead, bench_serve, bench_sharding,
-                   bench_utilities, bench_write)
+    from . import (bench_adaptive, bench_bptree, bench_lsm, bench_multiget,
+                   bench_openloop, bench_overhead, bench_serve,
+                   bench_sharding, bench_utilities, bench_write)
     from .common import fmt
 
     sections = [
@@ -53,6 +59,7 @@ def main() -> None:
         ("serving_multi_tenant", bench_serve.run),
         ("write_speculation", bench_write.run),
         ("serving_open_loop", bench_openloop.run),
+        ("multiget_scatter_gather", bench_multiget.run),
     ]
     print("name,us_per_call,derived")
     for name, fn in sections:

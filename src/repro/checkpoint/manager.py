@@ -387,6 +387,11 @@ class CheckpointManager:
         # save MUST join-or-raise the first (losing its error or orphaning
         # its thread would silently drop a checkpoint)
         self._async_lock = threading.Lock()
+        # highest wall_time ever committed (lazily recovered from on-disk
+        # manifests); stored wall times are clamped to >= this floor so a
+        # backwards system-clock step between saves cannot produce a
+        # non-monotone committed history
+        self._wall_floor: Optional[float] = None
 
     # -- paths ----------------------------------------------------------------
     def step_dir(self, step: int) -> str:
@@ -478,6 +483,11 @@ class CheckpointManager:
             for e in extents
         ]
         manifest_cache: Dict[str, bytes] = {}
+        # stamp the wall time eagerly (not inside the lazily-evaluated
+        # manifest closure) and clamp it against the committed floor:
+        # retention anchoring orders history by wall_time, so a clock that
+        # steps backwards must not make a later step look older
+        wall_time = max(time.time(), self._wall_time_floor())
 
         def manifest_bytes() -> bytes:
             data = manifest_cache.get("data")
@@ -490,7 +500,7 @@ class CheckpointManager:
                     "step": step,
                     "num_shards": self.num_shards,
                     "shard_sizes": shard_sizes,
-                    "wall_time": time.time(),
+                    "wall_time": wall_time,
                     "kind": "delta" if base_step is not None else "full",
                     "base": base_step,
                     "leaves": [
@@ -552,6 +562,7 @@ class CheckpointManager:
             io.close(self.device, cf)
 
         _save_all()
+        self._wall_floor = wall_time
         self.gc()
 
     def save_async(self, step: int, tree: Any, extra: Optional[Dict[str, Any]] = None,
@@ -672,6 +683,17 @@ class CheckpointManager:
                                 kind=m.get("kind", "full"),
                                 base=m.get("base")))
         return out
+
+    def _wall_time_floor(self) -> float:
+        """Highest ``wall_time`` across committed manifests (0.0 when none),
+        cached after the first scan and advanced on every successful commit.
+        :meth:`save` clamps the stamped wall time to this floor, so the
+        history handed to the retention policy is non-decreasing in step
+        order even across process restarts and backwards clock steps."""
+        if self._wall_floor is None:
+            self._wall_floor = max(
+                (info.wall_time for info in self.history()), default=0.0)
+        return self._wall_floor
 
     def _delta_base(self, names: List[str], arrays: List[np.ndarray],
                     ) -> Optional[Tuple[int, Dict[Tuple[str, int, int], int]]]:

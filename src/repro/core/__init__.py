@@ -32,10 +32,12 @@ from .device import (
     Device, DeviceProfile, MemDevice, NVME_PROFILE, OSDevice, REMOTE_PROFILE,
     ShardedDevice, SimulatedDevice,
 )
-from .engine import DepthController, GraphMismatch, SessionStats, SpecSession
+from .engine import (DepthController, FuturePoisoned, GraphMismatch,
+                     SessionStats, SpecSession)
 from .graph import BranchNode, ForeactionGraph, GraphBuilder, SyscallNode
 from .plan import GraphPlan, compile_plan
-from .syscalls import Effect, Sys, effect_of, is_pure
+from .syscalls import (Effect, FromRequest, FutureCancelled, IOFuture, Sys,
+                       effect_of, is_pure)
 from .trace import Trace, TraceEvent, TraceRecorder
 
 __all__ = [
@@ -47,9 +49,11 @@ __all__ = [
     "CompletionPool", "completion_pool",
     "Device", "DeviceProfile", "MemDevice", "NVME_PROFILE", "OSDevice",
     "REMOTE_PROFILE", "ShardedDevice", "SimulatedDevice",
-    "DepthController", "GraphMismatch", "SessionStats", "SpecSession",
+    "DepthController", "FuturePoisoned", "GraphMismatch", "SessionStats",
+    "SpecSession",
     "BranchNode", "ForeactionGraph", "GraphBuilder", "SyscallNode",
     "GraphPlan", "compile_plan",
-    "Effect", "Sys", "effect_of", "is_pure",
+    "Effect", "FromRequest", "FutureCancelled", "IOFuture", "Sys",
+    "effect_of", "is_pure",
     "Trace", "TraceEvent", "TraceRecorder",
 ]

@@ -42,7 +42,8 @@ from .device import Device, OSDevice
 from .engine import DepthController, SessionStats, SpecSession
 from .graph import ForeactionGraph
 from .plan import GraphPlan, compile_plan
-from .syscalls import Sys
+from .plan import stats as plan_stats
+from .syscalls import IOFuture, Sys
 from .trace import Trace, TraceRecorder
 
 _tls = threading.local()
@@ -102,6 +103,17 @@ class Foreactor:
             self.device, "supports_staging", lambda: False)()
         self._graphs: Dict[str, ForeactionGraph] = {}
         self._graph_builders: Dict[str, Callable[[], ForeactionGraph]] = {}
+        #: plan-cache observability, per graph name: how many times plan()
+        #: was probed, how many probes produced a new plan object (compile
+        #: or first sight), and how many times the graph was (re)built — the
+        #: version bumps when mine() replaces a registered graph, so serving
+        #: stats can tell plan-cache thrash from healthy reuse
+        self._plan_probes: Dict[str, int] = {}
+        self._plan_builds: Dict[str, int] = {}
+        # the last plan OBJECT seen per (name, mode) — identity, not id():
+        # a recompiled plan can land at a freed predecessor's address
+        self._plan_seen: Dict[Tuple[str, str], GraphPlan] = {}
+        self._graph_versions: Dict[str, int] = {}
         self._controllers: Dict[str, DepthController] = {}
         self._traces: Dict[str, List[Tuple[Dict[str, Any], Trace]]] = {}
         self.total_stats = SessionStats()
@@ -122,7 +134,17 @@ class Foreactor:
         with self._lock:
             if name not in self._graphs:
                 self._graphs[name] = self._graph_builders[name]()
+                self._graph_versions[name] = \
+                    self._graph_versions.get(name, 0) + 1
             return self._graphs[name]
+
+    def invalidate_graph(self, name: str) -> None:
+        """Drop the cached built graph so the next activation rebuilds it
+        from the (possibly re-registered) builder — bumping the graph
+        version ``plan_cache_stats`` reports.  ``mine()`` uses this when a
+        mined graph replaces a registered one."""
+        with self._lock:
+            self._graphs.pop(name, None)
 
     def _depth_mode(self, depth) -> str:
         return "adaptive" if depth == "adaptive" else "fixed"
@@ -135,7 +157,34 @@ class Foreactor:
         serving warm-up) call this eagerly to move compilation off the
         measured path."""
         depth = self.depth if depth is None else depth
-        return compile_plan(self.graph(name), self._depth_mode(depth))
+        mode = self._depth_mode(depth)
+        p = compile_plan(self.graph(name), mode)
+        with self._lock:
+            self._plan_probes[name] = self._plan_probes.get(name, 0) + 1
+            if self._plan_seen.get((name, mode)) is not p:
+                self._plan_seen[(name, mode)] = p
+                self._plan_builds[name] = self._plan_builds.get(name, 0) + 1
+        return p
+
+    def plan_cache_stats(self) -> Dict[str, Any]:
+        """Plan-cache and graph-version observability, surfaced in serving
+        summaries (``repro.launch.ioserver``): per graph name, ``probes``
+        (plan() calls), ``compiles`` (probes that produced a new plan
+        object), ``hits`` (probes served by the cache), and
+        ``graph_version`` (times the graph was built — bumps when a mined
+        graph replaces a registered one).  ``global`` mirrors the
+        process-wide :data:`repro.core.plan.stats` counters."""
+        with self._lock:
+            per = {}
+            for name, probes in self._plan_probes.items():
+                builds = self._plan_builds.get(name, 0)
+                per[name] = {
+                    "probes": probes,
+                    "compiles": builds,
+                    "hits": probes - builds,
+                    "graph_version": self._graph_versions.get(name, 0),
+                }
+            return {"per_graph": per, "global": dict(plan_stats)}
 
     def _make_backend(self) -> Backend:
         """Per-thread backend reuse: like the paper, each application thread
@@ -438,6 +487,22 @@ class io:
         return _direct(device, sc, args)
 
     @staticmethod
+    def _route_async(device: Device, sc: Sys, args: tuple) -> IOFuture:
+        """Futures-style routing: with an active matching session the call
+        becomes a harvestable ledger entry whose ``result()`` is a late
+        demand point; otherwise (no session, or a TraceRecorder that must
+        observe serial order) it executes now and the future is returned
+        already resolved — so code written against the async API behaves
+        identically with speculation off."""
+        sess = current_session()
+        if sess is not None and sess.device is device:
+            ia = getattr(sess, "intercept_async", None)
+            if ia is not None:
+                return ia(sc, args)
+            return IOFuture.resolved(sess.intercept(sc, args))
+        return IOFuture.resolved(_direct(device, sc, args))
+
+    @staticmethod
     def open(device: Device, path: str, flags: str = "r") -> int:
         return io._route(device, Sys.OPEN, (path, flags))
 
@@ -464,6 +529,20 @@ class io:
     @staticmethod
     def fsync(device: Device, fd: int) -> None:
         return io._route(device, Sys.FSYNC, (fd,))
+
+    # -- futures-style variants (late demand; see engine.intercept_async) --
+    @staticmethod
+    def pread_async(device: Device, fd: int, size: int,
+                    offset: int) -> IOFuture:
+        return io._route_async(device, Sys.PREAD, (fd, size, offset))
+
+    @staticmethod
+    def open_async(device: Device, path: str, flags: str = "r") -> IOFuture:
+        return io._route_async(device, Sys.OPEN, (path, flags))
+
+    @staticmethod
+    def fstatat_async(device: Device, path: str) -> IOFuture:
+        return io._route_async(device, Sys.FSTATAT, (path,))
 
     @staticmethod
     def rename(device: Device, src: str, dst: str) -> None:

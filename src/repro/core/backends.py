@@ -38,6 +38,7 @@ import threading
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from .buffers import BufferPool
+from .completion import completion_pool
 from .device import Device, ShardedDevice
 from .lanes import SubmissionLane
 from .syscalls import IORequest, ReqState, Sys, perform
@@ -572,17 +573,33 @@ class SlotScheduler:
                     self._spec_tenants.add(ten)
                 if total > self.max_spec_inflight:
                     self.max_spec_inflight = total
-            # hook the slot release before the caller dispatches: these
-            # requests are not yet visible to any worker or canceller (the
-            # candidate append below is what exposes them to eviction, and
-            # we still hold _lock), so plain assignment cannot race the
-            # completion pool's callback swap.
+            # hook the slot release before the caller dispatches.  No
+            # worker can touch these yet (the candidate append below is
+            # what exposes them to eviction, and we still hold _lock), but
+            # an IOFuture holds a direct reference to its request and may
+            # cancel() it at any time — e.g. multi_get abandoning a tail
+            # read whose chain was still deferred.  The stripe lock
+            # serializes the hook against that terminal transition: a
+            # request observed done here never takes a slot (its callback
+            # already fired as a no-op and will never fire again).
+            dead = 0
             for chain in admitted:
                 for r in chain:
-                    r._spec_tenant = ten
-                    r._spec_counted = True
-                    r.completion_cb = self._spec_done
+                    s = completion_pool().stripe(r)
+                    with s.lock:
+                        if r._done:
+                            dead += 1
+                            continue
+                        r._spec_tenant = ten
+                        r._spec_counted = True
+                        r.completion_cb = self._spec_done
                     ten.spec.append((r, view))
+            if dead:
+                with self._count_lock:
+                    ten.spec_count -= dead
+                    self._spec_total -= dead
+                    if ten.spec_count == 0:
+                        self._spec_tenants.discard(ten)
             ten.compact()
             return admitted, deferred
 
@@ -750,6 +767,13 @@ class SharedBackend(Backend):
         this costs one crossing, like a private backend's submit_all."""
         with self._lock:
             chains, self._deferred = self._deferred, []
+        if not chains:
+            return 0
+        # drop requests that went terminal while staged (a cancelled
+        # IOFuture terminates its request in place) — re-offering them
+        # would burn slots on work nobody will ever execute
+        chains = [c for c in ([r for r in chain if not r.is_done()]
+                              for chain in chains) if c]
         if not chains:
             return 0
         admitted, deferred = self.scheduler.admit(self, chains)

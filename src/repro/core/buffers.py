@@ -61,9 +61,16 @@ def size_class(size: int) -> Optional[int]:
 
 
 class BufferLease:
-    """One registered buffer, on loan from the pool to one ``IORequest``."""
+    """One registered buffer, on loan from the pool to one ``IORequest``.
 
-    __slots__ = ("pool", "cls", "buf", "mv", "nbytes", "tenant", "_released")
+    Leases are refcounted: the dispatching request holds the initial ref,
+    and additional consumers that must read ``mv`` later (a ``FromRequest``
+    stub, an unresolved future) take one via :meth:`addref`.  The buffer
+    goes back to the pool when the *last* holder releases — which, since
+    ``IORequest.take_result`` materializes bytes and releases at first
+    demand, happens mid-session rather than at teardown."""
+
+    __slots__ = ("pool", "cls", "buf", "mv", "nbytes", "tenant", "_refs")
 
     def __init__(self, pool: "BufferPool", cls: int, buf: bytearray,
                  tenant: Optional[str] = None):
@@ -73,7 +80,7 @@ class BufferLease:
         self.mv = memoryview(buf)
         self.nbytes = 0
         self.tenant = tenant
-        self._released = False
+        self._refs = 1
 
     def filled(self, n: int) -> None:
         """Record how many bytes the device wrote (short reads included)."""
@@ -84,14 +91,26 @@ class BufferLease:
         exactly one bounded memcpy out of the registered buffer."""
         return bytes(self.mv[: self.nbytes])
 
+    def addref(self) -> "BufferLease":
+        """Register one more holder; pairs with one :meth:`release`."""
+        with self.pool._lock:
+            if self._refs <= 0:
+                raise RuntimeError("addref on a released buffer lease")
+            self._refs += 1
+        return self
+
     def release(self) -> None:
-        """Return the buffer to the pool.  Idempotent; callers must ensure
-        no consumer still reads ``mv`` (the engine releases only after the
-        backend drain, when every consumer holds materialized bytes)."""
-        if self._released:
-            return
-        self._released = True
-        self.pool._give_back(self)
+        """Drop one holder's ref; the last drop returns the buffer to the
+        pool.  Extra releases are ignored (teardown paths and first-demand
+        materialization may both try).  Callers must ensure no consumer
+        still reads ``mv`` past their release."""
+        with self.pool._lock:
+            if self._refs <= 0:
+                return
+            self._refs -= 1
+            if self._refs > 0:
+                return
+            self.pool._give_back_locked(self)
 
     def __len__(self) -> int:
         return self.nbytes
@@ -138,6 +157,10 @@ class BufferPool:
         self.declined = 0
         self.budget_declines = 0
         self.released = 0
+        #: occupancy gauges — the mid-session recycling regression surface:
+        #: a session of R harvested reads must peak at O(depth), not O(R)
+        self.leased_now = 0
+        self.peak_leased = 0
 
     def lease(self, size: int,
               tenant: Optional[str] = None) -> Optional[BufferLease]:
@@ -170,18 +193,22 @@ class BufferPool:
             if tenant is not None:
                 self._charged[tenant] = self._charged.get(tenant, 0) + nbytes
             self.leases += 1
+            self.leased_now += 1
+            if self.leased_now > self.peak_leased:
+                self.peak_leased = self.leased_now
         return BufferLease(self, cls, buf, tenant)
 
-    def _give_back(self, lease: BufferLease) -> None:
-        with self._lock:
-            self.released += 1
-            if lease.tenant is not None:
-                left = self._charged.get(lease.tenant, 0) - (1 << lease.cls)
-                if left > 0:
-                    self._charged[lease.tenant] = left
-                else:  # fully refunded: drop the entry (bounded tenant map)
-                    self._charged.pop(lease.tenant, None)
-            self._free.setdefault(lease.cls, []).append(lease.buf)
+    def _give_back_locked(self, lease: BufferLease) -> None:
+        """Recycle a fully-released lease; caller holds ``self._lock``."""
+        self.released += 1
+        self.leased_now -= 1
+        if lease.tenant is not None:
+            left = self._charged.get(lease.tenant, 0) - (1 << lease.cls)
+            if left > 0:
+                self._charged[lease.tenant] = left
+            else:  # fully refunded: drop the entry (bounded tenant map)
+                self._charged.pop(lease.tenant, None)
+        self._free.setdefault(lease.cls, []).append(lease.buf)
 
     def charged_bytes(self, tenant: str) -> int:
         """Bytes currently charged to ``tenant`` (0 once fully refunded)."""
@@ -204,5 +231,7 @@ class BufferPool:
                 "declined": self.declined,
                 "budget_declines": self.budget_declines,
                 "released": self.released,
+                "leased_now": self.leased_now,
+                "peak_leased": self.peak_leased,
                 "tenants_charged": len(self._charged),
             }

@@ -54,8 +54,14 @@ from .backends import Backend
 from .device import Device
 from .graph import ForeactionGraph, FromNode
 from .plan import END, KIND_BRANCH, KIND_SYSCALL, GraphPlan, compile_plan
-from .syscalls import (Effect, FromRequest, IORequest, ReqState, Sys,
-                       effect_of, execute)
+from .syscalls import (Effect, FromRequest, IOFuture, IORequest, ReqState,
+                       Sys, effect_of, execute)
+
+
+class FuturePoisoned(RuntimeError):
+    """``IOFuture.result()`` on a future whose session failed
+    (:meth:`SpecSession.mark_failed`) before the future resolved — the
+    speculated bytes must never be trusted."""
 
 
 class DepthController:
@@ -195,6 +201,12 @@ class SessionStats:
     served_sync: int = 0
     cancelled: int = 0
     wasted_completions: int = 0
+    #: async intercepts that handed back an unresolved IOFuture (the
+    #: late-demand entries of the ledger)
+    futures_issued: int = 0
+    #: futures still unresolved when finish() ran — drained-then-materialized
+    #: (clean exit) or poisoned (failed session)
+    futures_drained: int = 0
     peek_seconds: float = 0.0
     wait_seconds: float = 0.0
     sync_seconds: float = 0.0
@@ -204,6 +216,7 @@ class SessionStats:
         for f in (
             "intercepted", "untracked", "pre_issued", "submits", "served_async",
             "served_sync", "cancelled", "wasted_completions",
+            "futures_issued", "futures_drained",
         ):
             setattr(self, f, getattr(self, f) + getattr(other, f))
         for f in ("peek_seconds", "wait_seconds", "sync_seconds", "harvest_seconds"):
@@ -269,6 +282,9 @@ class SpecSession:
         #: peeked requests a mid-walk stub error kept from being submitted;
         #: finish() cancels them so the ledger invariant still holds
         self._orphans: List[IORequest] = []
+        #: unresolved IOFutures handed out by intercept_async; finish()
+        #: drains-then-materializes them (or poisons them on failure)
+        self._futures: List[IOFuture] = []
         self._finished = False
         # undoable write speculation: when enabled, every tracked UNDOABLE
         # syscall — pre-issued or frontier-served — runs inside one staging
@@ -632,6 +648,121 @@ class SpecSession:
             self._peek_dist -= 1
         return result
 
+    def intercept_async(self, sc: Sys, args: Tuple[Any, ...]) -> IOFuture:
+        """Futures-style entry point: like :meth:`intercept`, but instead of
+        blocking at the frontier it hands back an :class:`IOFuture` whose
+        ``result()`` is the *late demand point*.
+
+        The future is a harvestable ledger entry: its request may already be
+        in flight via speculation (pre-issued by an earlier peek), or is
+        demand-issued here — either way it rides the same node-state ledger
+        and the same ``pre_issued == served_async + cancelled +
+        wasted_completions`` accounting as a blocking intercept.  Compute
+        between issue and ``result()`` overlaps with the I/O, with zero new
+        threads.
+
+        Only PURE calls defer; a non-pure call (close, fsync, staged write)
+        is an ordering point the frontier must serve in place, so it takes
+        the blocking path and returns an already-resolved future.
+        """
+        if self._finished:
+            return IOFuture.resolved(self._exec_untracked(sc, args))
+        if effect_of(sc, args) is not Effect.PURE:
+            return IOFuture.resolved(self.intercept(sc, args))
+        self.stats.intercepted += 1
+        p = self.plan
+        nid, ep = self._cur
+        res = p.resolve_branches(nid, ep, self.ctx, False)
+        if res is None or res[0] == END or p.sc[res[0]] is not sc:
+            if self.strict and res is not None and res[0] != END \
+                    and p.sc[res[0]] is not sc:
+                raise GraphMismatch(
+                    f"graph {self.plan.name!r}: expected {p.sc[res[0]]} at "
+                    f"node {p.names[res[0]]!r}, application issued {sc}"
+                )
+            return IOFuture.resolved(self._exec_untracked(sc, args))
+        fnid, fep = res[0], res[1]
+        self._cur = (fnid, fep)
+        self._frontier = (fnid, fep)
+
+        # peek + batch submit, exactly as the blocking path would
+        self._peek_and_preissue()
+
+        key = (fnid, fep)
+        st = self._state.get(key)
+        if st is None:
+            st = NodeState()
+            self._state[key] = st
+        if st.issued and (st.req is None
+                         or st.req.state is ReqState.CANCELLED):
+            # evicted under pressure (shared backend): same demand fallback
+            # as a blocking intercept — serve synchronously; the cancelled
+            # request stays in the ledger and is counted at finish
+            t0 = time.perf_counter()
+            self.backend.note_demand()
+            self.device.charge_crossing()
+            result = self._serve_sync(sc, args)
+            self.stats.sync_seconds += time.perf_counter() - t0
+            self.stats.served_sync += 1
+            save = p.save[fnid]
+            if save is not None and not st.harvested:
+                save(self.ctx, fep, result)
+            st.harvested = True
+            fut = IOFuture.resolved(result)
+        else:
+            if not st.issued:
+                # beyond the peek window (depth exhausted or stub not ready
+                # at peek time): demand-issue now — the request still rides
+                # the async ledger, and the future defers the wait
+                req = IORequest(sc=sc, args=args, tag=(fnid, fep))
+                st.issued = True
+                st.req = req
+                self.stats.pre_issued += 1
+                if self.backend.submit([req]):
+                    self.stats.submits += 1
+            fut = IOFuture(
+                st.req,
+                resolver=lambda st=st, fnid=fnid, fep=fep:
+                    self._harvest_late(st, fnid, fep))
+            self.stats.futures_issued += 1
+            self._futures.append(fut)
+
+        # advance the frontier without serving it: resolution happens at
+        # the future's demand point (or at finish's drain)
+        lid = p.out_loop[fnid]
+        if lid >= 0:
+            fep = fep[:lid] + (fep[lid] + 1,) + fep[lid + 1:]
+        self._cur = (p.out_dst[fnid], fep)
+        if self._peek_dist > 0:
+            self._peek_dist -= 1
+        return fut
+
+    def _harvest_late(self, st: NodeState, fnid: int,
+                      fep: Tuple[int, ...]) -> Any:
+        """Resolve one future: harvest its request exactly as a blocking
+        intercept would.  ``backend.wait`` is the demand signal — on a
+        shared backend it promotes a deferred chain with demand priority
+        (``note_demanded``), so a future demand is indistinguishable from a
+        blocking one to the slot scheduler."""
+        req = st.req
+        t0 = time.perf_counter()
+        self.backend.wait(req)
+        blocked = time.perf_counter() - t0
+        self.stats.wait_seconds += blocked
+        self.stats.served_async += 1
+        if req.stage is not None and self.staging is not None:
+            self.staging.on_demand(req.stage)
+        t0 = time.perf_counter()
+        result = req.take_result()
+        self.stats.harvest_seconds += time.perf_counter() - t0
+        save = self.plan.save[fnid]
+        if save is not None and not st.harvested:
+            save(self.ctx, fep, result)
+        st.harvested = True
+        if self.controller is not None and not self._finished:
+            self.controller.on_serve(blocked, True, self.backend)
+        return result
+
     def _serve_sync(self, sc: Sys, args: Tuple[Any, ...]) -> Any:
         """Serve the frontier synchronously.  With staging on, undoable
         syscalls stay inside the transaction even here: a session is a
@@ -677,14 +808,38 @@ class SpecSession:
         drained exactly once — nothing may keep running into the next
         activation that reuses this backend, and nothing may be counted
         twice.  If cancellation itself raises, the drain and the wasted-work
-        accounting still run before the error propagates.  Registered-buffer
-        leases are released back to the pool strictly after the drain, when
-        no worker can still be filling them and every consumer holds
-        materialized bytes.
+        accounting still run before the error propagates.  Harvested reads
+        released their registered-buffer leases at materialization
+        (``take_result``); the leases still attached here — wasted
+        completions and cancellations — are recycled strictly after the
+        drain, when no worker can still be filling them.
         """
         if self._finished:
             return self.stats
         self._finished = True
+        # Late futures settle FIRST, while the backend still runs.  A clean
+        # exit drains-then-materializes them: result() after finish returns
+        # bytes immediately instead of waiting on a torn-down backend (and
+        # on the sync backend, whose ledgered requests only execute at
+        # wait(), resolution *is* the execution — cancelling first would
+        # lose their results).  A failed session poisons them instead:
+        # speculated bytes from a function that raised must never be
+        # trusted, and the cancellation sweep below then accounts their
+        # requests as cancelled or wasted.
+        if self._futures:
+            futures, self._futures = self._futures, []
+            for fut in futures:
+                if fut.settled:
+                    continue
+                self.stats.futures_drained += 1
+                if self._failed:
+                    fut.poison(FuturePoisoned(
+                        "session failed before this I/O future resolved"))
+                else:
+                    try:
+                        fut.result()
+                    except BaseException:
+                        pass  # cached in the future; re-raised at result()
         try:
             # quarantined batch from a mid-walk stub error: these never
             # reached the backend, so cancel them here (they are in the
@@ -712,9 +867,11 @@ class SpecSession:
                     elif st.req.state is ReqState.COMPLETED and not st.harvested:
                         self.stats.wasted_completions += 1
                     if st.req.lease is not None:
-                        # post-drain: no worker is filling it, harvested
-                        # results were materialized — recycle the buffer
-                        st.req.lease.release()
+                        # post-drain: no worker is filling it; harvested
+                        # results already released at materialization
+                        # (take_result), so this only recycles the leases
+                        # of wasted completions and cancellations
+                        st.req.drop_lease()
                 try:
                     # settle the write transaction strictly after the drain:
                     # no staged runner can still be executing.  Success

@@ -26,6 +26,7 @@ defined in docs/GLOSSARY.md.
 
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 from enum import Enum
 from typing import Any, Callable, Optional, Tuple
@@ -87,6 +88,107 @@ def is_pure(sc: Sys, args: Tuple[Any, ...]) -> bool:
     return effect_of(sc, args) is Effect.PURE
 
 
+class FutureCancelled(RuntimeError):
+    """Raised by :meth:`IOFuture.result` when the future was explicitly
+    cancelled (:meth:`IOFuture.cancel`) before it resolved."""
+
+
+class IOFuture:
+    """First-class deferred I/O result (the futures-style session API).
+
+    An unresolved future is a *harvestable ledger entry*: its
+    :class:`IORequest` may already be in flight via speculation, and
+    :meth:`result` is a *late demand point* — the engine harvests (or
+    demand-promotes, on a shared backend) the request only when the caller
+    finally needs the bytes, so compute between issue and ``result()``
+    overlaps with I/O with zero new threads.
+
+    Resolution runs at most once, under an internal lock; the value or
+    error is cached, so repeated ``result()`` calls are cheap and a failed
+    session's *poisoned* futures keep raising the same error.  A future is
+    also a valid graph-stub input: :class:`FromRequest` accepts one, so a
+    consumer node's argument can be "whatever this future resolves to".
+    """
+
+    __slots__ = ("req", "_resolver", "_lock", "_done_flag", "_value", "_error")
+
+    def __init__(self, req: Optional["IORequest"] = None,
+                 resolver: Optional[Callable[[], Any]] = None):
+        self.req = req
+        self._resolver = resolver
+        self._lock = threading.Lock()
+        self._done_flag = False
+        self._value: Any = None
+        self._error: Optional[BaseException] = None
+
+    @classmethod
+    def resolved(cls, value: Any) -> "IOFuture":
+        """An already-materialized future (the no-session / recorder path)."""
+        f = cls()
+        f._done_flag = True
+        f._value = value
+        return f
+
+    def done(self) -> bool:
+        """True once ``result()`` is guaranteed not to block: the future is
+        resolved, poisoned, or its request has reached a terminal state."""
+        if self._done_flag:
+            return True
+        return self.req is not None and self.req.is_done()
+
+    @property
+    def settled(self) -> bool:
+        """True once the future's value or error is pinned (resolved,
+        poisoned, or cancelled).  Unlike :meth:`done`, completion of the
+        underlying request alone does not settle a future — the session's
+        finish() drain materializes completed-but-unresolved ones."""
+        return self._done_flag
+
+    def result(self) -> Any:
+        """Resolve (demand) the future; returns the same bytes the blocking
+        ``io.*`` call would have, or raises the same error it would have."""
+        with self._lock:
+            if not self._done_flag:
+                try:
+                    if self._resolver is not None:
+                        self._value = self._resolver()
+                    elif self.req is not None:
+                        self._value = self.req.wait_result()
+                except BaseException as e:
+                    self._error = e
+                self._done_flag = True
+                self._resolver = None
+            if self._error is not None:
+                raise self._error
+            return self._value
+
+    def poison(self, error: BaseException) -> bool:
+        """Mark an unresolved future as failed — ``result()`` will raise
+        ``error`` forever after.  No-op (False) if already resolved."""
+        with self._lock:
+            if self._done_flag:
+                return False
+            self._done_flag = True
+            self._error = error
+            self._resolver = None
+            return True
+
+    def cancel(self) -> bool:
+        """Abandon an unresolved future: its request is cancelled if still
+        queued (counted *cancelled* in the session ledger; a completed one
+        becomes a *wasted completion* at finish), and ``result()`` raises
+        :class:`FutureCancelled` from now on.  False if already resolved."""
+        with self._lock:
+            if self._done_flag:
+                return False
+            self._done_flag = True
+            self._error = FutureCancelled("I/O future was cancelled")
+            self._resolver = None
+        if self.req is not None:
+            self.req.cancel()
+        return True
+
+
 class FromRequest:
     """Deferred argument: the result of another (linked) request.
 
@@ -94,12 +196,24 @@ class FromRequest:
     data argument *is* the internal buffer the linked pread populates, with
     no intermediate copy.  Linked chains run in order on one worker, so the
     producer has completed by the time the consumer executes.
+
+    Also accepts an :class:`IOFuture`: a consumer node's argument can be a
+    future another part of the program holds — resolution then routes
+    through the future (so the session's late-demand accounting and the
+    future's cached value/error stay authoritative).
     """
 
-    def __init__(self, req: "IORequest"):
-        self.req = req
+    def __init__(self, req):
+        if isinstance(req, IOFuture):
+            self._future: Optional[IOFuture] = req
+            self.req = req.req
+        else:
+            self._future = None
+            self.req = req
 
     def resolve(self):
+        if self._future is not None:
+            return self._future.result()
         # The producer may have been submitted in an earlier batch and still
         # be in flight; block until it completes.  (Inside a Link chain the
         # producer has necessarily finished already.)
@@ -114,7 +228,9 @@ class FromRequest:
 
 
 def resolve_args(args: Tuple[Any, ...]) -> Tuple[Any, ...]:
-    return tuple(a.resolve() if isinstance(a, FromRequest) else a for a in args)
+    return tuple(a.resolve() if isinstance(a, FromRequest)
+                 else a.result() if isinstance(a, IOFuture)
+                 else a for a in args)
 
 
 def execute(device, sc: Sys, args: Tuple[Any, ...]):
@@ -276,14 +392,35 @@ class IORequest:
         """The request's result with any registered-buffer lease
         materialized to ``bytes`` (paper Fig. 10's result copy — exactly one
         bounded memcpy, cached so repeated consumers share the object).
-        Safe under the benign race of two consumers materializing at once:
-        both copies are identical and either assignment wins."""
-        r = self.result
-        lease = self.lease
-        if lease is not None and r is lease:
-            r = lease.to_bytes()
-            self.result = r
+
+        Materialization releases the lease: once the bytes are copied out,
+        nothing reads the registered buffer again, so it goes back to the
+        pool *mid-session* instead of at teardown — a long session's pool
+        occupancy stays O(depth), not O(reads).  The stripe lock serializes
+        concurrent consumers (two futures, a future plus a ``FromRequest``
+        stub): exactly one copies and releases; the rest see bytes."""
+        lease = None
+        s = completion_pool().stripe(self)
+        with s.lock:
+            r = self.result
+            if self.lease is not None and r is self.lease:
+                lease, self.lease = self.lease, None
+                r = lease.to_bytes()
+                self.result = r
+        if lease is not None:
+            lease.release()
         return r
+
+    def drop_lease(self) -> None:
+        """Return an unconsumed lease to the pool (wasted completions and
+        cancellations at session teardown); idempotent with take_result."""
+        s = completion_pool().stripe(self)
+        with s.lock:
+            lease, self.lease = self.lease, None
+            if self.result is lease:
+                self.result = None
+        if lease is not None:
+            lease.release()
 
     def wait_result(self):
         self.wait_done()

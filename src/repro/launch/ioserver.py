@@ -101,11 +101,12 @@ class ClientSpec:
     """One closed-loop client: its tenant identity and request mix."""
 
     name: str
-    workload: str = "get"  # "get" | "restore"
+    workload: str = "get"  # "get" | "multiget" | "restore"
     priority: str = "normal"  # "high" | "normal" | "low"
     weight: float = 1.0
     ops: int = 60
     warmup: int = 3  # leading ops excluded from latency stats
+    batch: int = 8  # keys per op for the "multiget" workload
 
 
 @dataclass
@@ -188,6 +189,11 @@ def _client_loop(fa: Foreactor, dev, lsm: LSMTree, ref: Dict[int, bytes],
     rng = np.random.default_rng(seed)
     extents = restore_extents(dev)
     keys = rng.integers(0, len(ref), size=spec.ops + spec.warmup)
+    # drawn after `keys` so get/restore clients' random streams are
+    # unchanged by the multiget op class existing
+    mkeys = rng.integers(0, len(ref),
+                         size=(spec.ops + spec.warmup) * spec.batch) \
+        if spec.workload == "multiget" else None
     with fa.tenant(spec.name, weight=spec.weight, priority=spec.priority):
         start_gate.wait()
         for i in range(spec.ops + spec.warmup):
@@ -204,6 +210,21 @@ def _client_loop(fa: Foreactor, dev, lsm: LSMTree, ref: Dict[int, bytes],
                     finally:
                         fa.deactivate(sess)
                     if v != ref[key]:
+                        result.errors += 1
+                elif spec.workload == "multiget":
+                    # scatter-gather op class: one N-key batch per request,
+                    # one generated plan per batch (the futures fan-out)
+                    batch = [int(k) for k in
+                             mkeys[i * spec.batch:(i + 1) * spec.batch]]
+                    sess = fa.activate(
+                        "lsm_multiget",
+                        plugins.capture_lsm_multiget(lsm, batch))
+                    try:
+                        vs = lsm.multi_get(batch)
+                        dt = time.perf_counter() - t0
+                    finally:
+                        fa.deactivate(sess)
+                    if vs != [ref.get(k) for k in batch]:
                         result.errors += 1
                 else:
                     sess = fa.activate("restore_scan", {"extents": extents})
@@ -276,6 +297,9 @@ def run_serving(mode: str, clients: List[ClientSpec],
             for prio, lat in by_class.items()
         },
         "scheduler": fa.scheduler.snapshot() if fa.scheduler else None,
+        # plan-cache + mined-graph-version observability (per endpoint):
+        # thrash shows as compiles tracking probes instead of hits
+        "plans": fa.plan_cache_stats(),
     }
     return report
 
@@ -284,6 +308,16 @@ def get_clients(n: int, priority: str = "normal", ops: int = 60,
                 prefix: str = "get") -> List[ClientSpec]:
     return [ClientSpec(name=f"{prefix}-{i}", workload="get",
                        priority=priority, ops=ops) for i in range(n)]
+
+
+def multiget_clients(n: int, priority: str = "normal", ops: int = 20,
+                     batch: int = 8,
+                     prefix: str = "multiget") -> List[ClientSpec]:
+    """Scatter-gather clients: each op is one ``batch``-key multiget served
+    by a single generated ``lsm_multiget`` plan."""
+    return [ClientSpec(name=f"{prefix}-{i}", workload="multiget",
+                       priority=priority, ops=ops, batch=batch, warmup=1)
+            for i in range(n)]
 
 
 def restore_clients(n: int, priority: str = "low", ops: int = 12,
@@ -450,6 +484,7 @@ def run_openloop(mode: str, sessions: int, rate_per_session: float,
         t.join()
     lsm.close()
     sched_snap = fa.scheduler.snapshot() if fa.scheduler else None
+    plans_snap = fa.plan_cache_stats()
     fa.shutdown()
 
     lat = [x for x in latencies if x is not None]
@@ -472,6 +507,7 @@ def run_openloop(mode: str, sessions: int, rate_per_session: float,
         "max_inflight_sessions": max_inflight(evs),
         "server_threads": server_threads,
         "scheduler": sched_snap,
+        "plans": plans_snap,
     }
 
 
@@ -484,6 +520,11 @@ def _print_report(rep: dict) -> None:
               f"p50={c['p50_ms']:.2f}ms p99={c['p99_ms']:.2f}ms")
     if rep["scheduler"]:
         print(f"  scheduler: {rep['scheduler']}")
+    plans = rep.get("plans") or {}
+    for name, p in sorted(plans.get("per_graph", {}).items()):
+        print(f"  plan {name:14s} probes={p['probes']:3d} "
+              f"hits={p['hits']:3d} compiles={p['compiles']} "
+              f"graph_v{p['graph_version']}")
 
 
 def main() -> None:
@@ -494,6 +535,9 @@ def main() -> None:
     ap.add_argument("--ops", type=int, default=60)
     ap.add_argument("--low-pri-restores", type=int, default=0,
                     help="add N low-priority restore clients")
+    ap.add_argument("--multigets", type=int, default=0,
+                    help="add N scatter-gather multiget clients "
+                         "(8-key batches)")
     ap.add_argument("--openloop", action="store_true",
                     help="open-loop session stream instead of closed-loop "
                          "clients")
@@ -521,6 +565,7 @@ def main() -> None:
         return
     specs = get_clients(args.clients, priority="high", ops=args.ops)
     specs += restore_clients(args.low_pri_restores)
+    specs += multiget_clients(args.multigets)
     for mode in modes:
         _print_report(run_serving(mode, specs, store=store))
 

@@ -319,6 +319,64 @@ class LSMTree:
                 return v  # may be None (tombstone) — still an early exit
         return None
 
+    def multi_get(self, keys: List[int]) -> List[Optional[bytes]]:
+        """Batched point lookup: N keys, one scatter-gather plan.
+
+        Issue phase: every key's candidate blocks are read through
+        ``io.pread_async`` in round-robin order (all first candidates, then
+        all second candidates, ...), so under an active ``lsm_multiget``
+        session the whole fan-out is in flight before any result is
+        demanded.  Harvest barrier: keys resolve in candidate order with the
+        usual early exit; futures a key no longer needs are cancelled.  One
+        key's read error does not abandon the others — every key is
+        harvested first, then the first error (if any) is re-raised.
+
+        Without an active session the futures come back already resolved,
+        making this exactly N sequential ``get``\\s — the conformance
+        oracle.  The flattened candidate order here must match
+        ``repro.store.plugins.capture_lsm_multiget``, which drives the
+        generated graph's pread loop over the same extents.
+        """
+        results: List[Optional[bytes]] = [None] * len(keys)
+        per_key: List[List[Tuple[SSTable, int, int]]] = []
+        with self._lock:
+            from_mem = {i: self.mem[k] for i, k in enumerate(keys)
+                        if k in self.mem}
+        for i, k in enumerate(keys):
+            # memtable hits (tombstones included) take no candidates
+            per_key.append([] if i in from_mem else self.candidates(k))
+        futs: List[List] = [[None] * len(c) for c in per_key]
+        width = max((len(c) for c in per_key), default=0)
+        for j in range(width):
+            for i, cands in enumerate(per_key):
+                if j < len(cands):
+                    t, off, length = cands[j]
+                    futs[i][j] = io.pread_async(self.device, t.fd,
+                                                length, off)
+        first_error: Optional[BaseException] = None
+        for i, k in enumerate(keys):
+            if i in from_mem:
+                results[i] = from_mem[i]
+                continue
+            found_at = len(per_key[i])
+            for j in range(len(per_key[i])):
+                try:
+                    data = futs[i][j].result()
+                except BaseException as e:
+                    if first_error is None:
+                        first_error = e
+                    continue  # the other keys must still resolve
+                found, v = search_block(data, k)
+                if found:
+                    results[i] = v
+                    found_at = j
+                    break
+            for j in range(found_at + 1, len(per_key[i])):
+                futs[i][j].cancel()  # still-queued tail reads
+        if first_error is not None:
+            raise first_error
+        return results
+
     # -- misc -------------------------------------------------------------------
     def table_count(self) -> int:
         return sum(len(l) for l in self.levels)

@@ -300,6 +300,61 @@ def capture_lsm_get(lsm, key: int) -> Dict[str, Any]:
     return {"cands": lsm.candidates(key), "key": key}
 
 
+def build_lsm_multiget_graph() -> ForeactionGraph:
+    """N-key scatter-gather Get as ONE generated plan (the futures-style
+    analytics shape): the per-key candidate chains of
+    ``LSMTree.multi_get`` flattened round-robin — every key's first
+    candidate, then every second candidate, ... — into a single pread loop.
+
+    Unlike ``lsm_get`` the loop edge is STRONG: the issue phase reads every
+    flattened candidate unconditionally (each is some key's possible home),
+    and the per-key early exit moves to the harvest barrier, where a
+    resolved key simply cancels the futures it no longer needs.
+    """
+    b = GraphBuilder("lsm_multiget")
+
+    def read_args(ctx, ep):
+        extents = ctx["extents"]
+        if ep[0] >= len(extents):
+            return None
+        fd, length, off = extents[ep[0]]
+        return ((fd, length, off), False)
+
+    def head_choice(ctx, ep):
+        return 0 if len(ctx["extents"]) > 0 else 1
+
+    def loop_choice(ctx, ep):
+        return 0 if ep[0] + 1 < len(ctx["extents"]) else 1
+
+    b.AddBranchingNode("any_exts", head_choice)
+    b.AddSyscallNode("pread_data", Sys.PREAD, read_args)
+    b.AddBranchingNode("more_exts", loop_choice)
+    b.SetStart("any_exts")
+    b.BranchAppendChild("any_exts", "pread_data")
+    b.BranchAppendChild("any_exts", None)
+    b.SyscallSetNext("pread_data", "more_exts")
+    b.BranchAppendChild("more_exts", "pread_data", loopback=True)
+    b.BranchAppendChild("more_exts", None)
+    return b.Build()
+
+
+def capture_lsm_multiget(lsm, keys) -> Dict[str, Any]:
+    """Flatten the batch's candidate extents in the exact order
+    ``LSMTree.multi_get`` issues them: round-robin across keys, memtable
+    hits (tombstones included) contributing none."""
+    with lsm._lock:
+        in_mem = {k for k in keys if k in lsm.mem}
+    per_key = [([] if k in in_mem else lsm.candidates(k)) for k in keys]
+    extents = []
+    width = max((len(c) for c in per_key), default=0)
+    for j in range(width):
+        for cands in per_key:
+            if j < len(cands):
+                t, off, length = cands[j]
+                extents.append((t.fd, length, off))
+    return {"extents": extents, "keys": list(keys)}
+
+
 def register_all(fa, precompile: bool = False) -> None:
     """Register every case-study graph on a Foreactor instance.
 
@@ -307,12 +362,14 @@ def register_all(fa, precompile: bool = False) -> None:
     :class:`repro.core.plan.GraphPlan` immediately (cached per graph), so a
     serving process warms the plan cache before the first request instead
     of lowering on the request path."""
-    names = ("du", "cp", "bptree_scan", "bptree_load", "lsm_get")
+    names = ("du", "cp", "bptree_scan", "bptree_load", "lsm_get",
+             "lsm_multiget")
     fa.register("du", build_du_graph)
     fa.register("cp", build_cp_graph)
     fa.register("bptree_scan", build_bptree_scan_graph)
     fa.register("bptree_load", build_bptree_load_graph)
     fa.register("lsm_get", build_lsm_get_graph)
+    fa.register("lsm_multiget", build_lsm_multiget_graph)
     if precompile:
         for name in names:
             fa.plan(name)

@@ -521,3 +521,54 @@ def test_keep_steps_chain_closure_example():
          SaveInfo(9, 2.0, "delta", 5)]
     assert CheckpointPolicy(keep_last=1).keep_steps(h) == {9, 5, 0}
     assert chain_of(9, {s.step: s for s in h}) == [9, 5, 0]
+
+
+# -- wall-clock monotonicity ----------------------------------------------------
+
+@settings(max_examples=100, deadline=None)
+@given(clocks=(st.lists(st.floats(min_value=0.0, max_value=1e4,
+                                  allow_nan=False),
+                        min_size=0, max_size=12)
+               if HAS_HYPOTHESIS else st.none()),
+       p=_policies)
+def test_clamped_clock_keeps_policy_monotone(clocks, p):
+    """The manager's wall-time clamp (running max over committed saves)
+    turns ANY raw clock sequence — including one that steps backwards —
+    into a manager-shaped history, and on that history the policy keep-set
+    stays monotone under append (GC stays forward-only)."""
+    hist, floor = [], 0.0
+    for i, raw in enumerate(clocks):
+        floor = max(raw, floor)  # the save()-side clamp
+        hist.append(SaveInfo(step=i, wall_time=floor))
+    assert all(a.wall_time <= b.wall_time for a, b in zip(hist, hist[1:]))
+    for i in range(1, len(hist) + 1):
+        prev = p.keep_steps(hist[:i - 1])
+        cur = p.keep_steps(hist[:i])
+        assert cur <= prev | {hist[i - 1].step}
+
+
+def test_manager_clamps_backwards_clock(monkeypatch):
+    """Manager-level: a system clock that steps backwards between saves
+    must not produce a non-monotone committed history, and a *fresh*
+    manager (restart) must recover the floor from on-disk manifests."""
+    import repro.checkpoint.manager as mgr_mod
+    ticks = iter([1000.0, 900.0, 950.0])
+    monkeypatch.setattr(mgr_mod.time, "time", lambda: next(ticks))
+    inner = MemDevice()
+    fa = Foreactor(device=inner, backend="sync", depth=0)
+    mgr = CheckpointManager(inner, ROOT, fa=fa, num_shards=SHARDS,
+                            chunk_bytes=CHUNK, keep=10)
+    for s in (0, 1):
+        mgr.save(s, make_tree(s))
+    # step 1 saved while the clock read 900 — clamped to step 0's 1000
+    walls = [mgr.read_manifest(s)["wall_time"] for s in (0, 1)]
+    assert walls == [1000.0, 1000.0]
+    # restart: a fresh manager rebuilds the floor from committed manifests
+    mgr2 = CheckpointManager(inner, ROOT, fa=fa, num_shards=SHARDS,
+                             chunk_bytes=CHUNK, keep=10)
+    mgr2.save(2, make_tree(2))  # clock reads 950 — still behind the floor
+    assert mgr2.read_manifest(2)["wall_time"] == 1000.0
+    hist = mgr2.history()
+    assert [s.step for s in hist] == [0, 1, 2]
+    assert all(a.wall_time <= b.wall_time for a, b in zip(hist, hist[1:]))
+    fa.shutdown()

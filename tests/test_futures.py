@@ -1,0 +1,427 @@
+"""Futures-style session API conformance.
+
+``io.pread_async`` returns an :class:`repro.core.IOFuture` — a handle to a
+ledgered request whose demand point moves to ``result()``.  The contract
+under test:
+
+* byte identity: any interleaving of async and blocking intercepts, with
+  late out-of-order resolution, returns exactly the bytes the all-blocking
+  sync run returns, on every backend × depth;
+* the ledger invariant ``pre_issued == served_async + cancelled +
+  wasted_completions`` holds with futures in play — including futures left
+  unresolved at ``finish()`` (drained-then-materialized) and futures
+  crossing a failed session (poisoned, never silently empty);
+* lease lifetime: a long all-async session keeps O(inflight) registered
+  buffers leased, not O(session length) — the mid-session recycling fix;
+* ``LSMTree.multi_get`` (N keys, one generated ``lsm_multiget`` plan)
+  matches N sequential ``get``\\ s on every backend, and one key's EIO does
+  not abandon the rest of the batch.
+"""
+
+import errno
+
+import pytest
+
+from repro.core import (Foreactor, FuturePoisoned, GraphBuilder, IOFuture,
+                        MemDevice, ShardedDevice, Sys, io)
+from repro.store import plugins
+from repro.store.lsm import LSMTree
+
+N_FILES = 6
+FILE_SIZE = 96
+
+CONFIGS = [
+    ("sync", "flat", dict(backend="sync")),
+    ("user_threads", "flat", dict(backend="user_threads", workers=4)),
+    ("io_uring", "flat", dict(backend="io_uring", workers=4)),
+    ("multi_queue", "sharded", dict(backend="multi_queue", workers=2)),
+    ("shared", "flat", dict(backend="io_uring", workers=4, shared=True)),
+]
+DEPTHS = [0, 1, "adaptive"]
+
+
+def file_bytes(i: int) -> bytes:
+    return bytes((i * 7 + j) % 251 for j in range(FILE_SIZE))
+
+
+def make_device(kind: str = "flat"):
+    dev = ShardedDevice([MemDevice() for _ in range(3)]) if kind == "sharded" \
+        else MemDevice()
+    for i in range(N_FILES):
+        fd = dev.open(f"/c/f{i}", "w")
+        dev.pwrite(fd, file_bytes(i), 0)
+        dev.close(fd)
+    return dev
+
+
+def build_pread_chain(name: str, reads):
+    """One PREAD node per (file, size, off), every edge weak — the pure
+    all-pre-issuable shape the futures API targets."""
+    b = GraphBuilder(name)
+    prev = None
+    for idx, (f, size, off) in enumerate(reads):
+        def args(ctx, ep, f=f, size=size, off=off):
+            return ((ctx["fds"][f], size, off), False)
+        b.AddSyscallNode(f"s{idx}", Sys.PREAD, args)
+        if prev is not None:
+            b.SyscallSetNext(prev, f"s{idx}", weak=True)
+        prev = f"s{idx}"
+    b.SyscallSetNext(prev, None, weak=True)
+    return b.Build()
+
+
+def assert_ledger_invariant(stats):
+    assert stats.pre_issued == (stats.served_async + stats.cancelled
+                                + stats.wasted_completions), vars(stats)
+
+
+READS = [((i * 5) % N_FILES, 8 + (i * 3) % 24, (i * 11) % (FILE_SIZE - 32))
+         for i in range(12)]
+EXPECTED = [file_bytes(f)[off:off + size] for f, size, off in READS]
+
+
+def _run_mixed(dev, fa_kwargs, depth):
+    """Even steps via pread_async (resolved late, in reverse), odd steps
+    blocking — the interleaving stresses frontier advance on both paths."""
+    fa = Foreactor(device=dev, depth=depth, **fa_kwargs)
+    fa.register("mix", lambda: build_pread_chain("mix", READS))
+    fds = [dev.open(f"/c/f{i}", "r") for i in range(N_FILES)]
+
+    @fa.wrap("mix", lambda: {"fds": fds})
+    def prog():
+        out = [None] * len(READS)
+        futs = []
+        for idx, (f, size, off) in enumerate(READS):
+            if idx % 2 == 0:
+                futs.append((idx, io.pread_async(dev, fds[f], size, off)))
+            else:
+                out[idx] = io.pread(dev, fds[f], size, off)
+        for idx, fut in reversed(futs):  # late demand, out of order
+            out[idx] = fut.result()
+        return out
+
+    try:
+        result = prog()
+    finally:
+        stats = fa.total_stats
+        fa.shutdown()
+    return result, stats
+
+
+@pytest.mark.parametrize("depth", DEPTHS)
+@pytest.mark.parametrize("cfg", CONFIGS, ids=[c[0] for c in CONFIGS])
+def test_futures_byte_identical_to_blocking(cfg, depth):
+    _name, kind, kwargs = cfg
+    result, stats = _run_mixed(make_device(kind), kwargs, depth)
+    assert result == EXPECTED
+    assert stats.futures_issued > 0
+    assert_ledger_invariant(stats)
+
+
+@pytest.mark.parametrize("cfg", CONFIGS, ids=[c[0] for c in CONFIGS])
+def test_future_resolves_after_finish(cfg):
+    """A future escaping its session is drained at finish() and must still
+    materialize the right bytes afterwards (never a dropped lease)."""
+    _name, kind, kwargs = cfg
+    dev = make_device(kind)
+    fa = Foreactor(device=dev, depth=4, **kwargs)
+    reads = READS[:4]
+    fa.register("esc", lambda: build_pread_chain("esc", reads))
+    fds = [dev.open(f"/c/f{i}", "r") for i in range(N_FILES)]
+
+    @fa.wrap("esc", lambda: {"fds": fds})
+    def prog():
+        return [io.pread_async(dev, fds[f], size, off)
+                for f, size, off in reads]
+
+    futs = prog()
+    stats = fa.total_stats
+    assert stats.futures_drained == len(reads)
+    assert_ledger_invariant(stats)
+    for fut, want in zip(futs, EXPECTED[:4]):
+        assert fut.settled
+        assert fut.result() == want
+    fa.shutdown()
+
+
+@pytest.mark.parametrize("cfg", [CONFIGS[0], CONFIGS[2]],
+                         ids=["sync", "io_uring"])
+def test_future_poisoned_by_failed_session(cfg):
+    """mark_failed poisons unresolved futures: result() raises
+    FuturePoisoned instead of returning bytes the session disowned."""
+    _name, kind, kwargs = cfg
+    dev = make_device(kind)
+    fa = Foreactor(device=dev, depth=4, **kwargs)
+    reads = READS[:3]
+    fa.register("boom", lambda: build_pread_chain("boom", reads))
+    fds = [dev.open(f"/c/f{i}", "r") for i in range(N_FILES)]
+    escaped = []
+
+    @fa.wrap("boom", lambda: {"fds": fds})
+    def prog():
+        f, size, off = reads[0]
+        escaped.append(io.pread_async(dev, fds[f], size, off))
+        raise RuntimeError("injected failure")
+
+    with pytest.raises(RuntimeError, match="injected failure"):
+        prog()
+    (fut,) = escaped
+    assert fut.settled
+    with pytest.raises(FuturePoisoned):
+        fut.result()
+    with pytest.raises(FuturePoisoned):  # sticky, not one-shot
+        fut.result()
+    assert_ledger_invariant(fa.total_stats)
+    fa.shutdown()
+
+
+def test_unresolved_futures_ledger_accounting():
+    """Futures never resolved by the caller are settled by the finish-time
+    drain, each accounted exactly once in the ledger."""
+    dev = make_device()
+    fa = Foreactor(device=dev, backend="io_uring", workers=4, depth=4)
+    fa.register("drain", lambda: build_pread_chain("drain", READS))
+    fds = [dev.open(f"/c/f{i}", "r") for i in range(N_FILES)]
+
+    @fa.wrap("drain", lambda: {"fds": fds})
+    def prog():
+        for f, size, off in READS:
+            io.pread_async(dev, fds[f], size, off)
+
+    prog()
+    stats = fa.total_stats
+    assert stats.futures_issued == len(READS)
+    assert stats.futures_drained == len(READS)
+    assert_ledger_invariant(stats)
+    fa.shutdown()
+
+
+def test_pread_async_without_session_is_eager():
+    """Outside any session the future comes back already resolved — the
+    degenerate form sequential oracles rely on."""
+    dev = make_device()
+    fd = dev.open("/c/f0", "r")
+    fut = io.pread_async(dev, fd, 16, 8)
+    assert isinstance(fut, IOFuture)
+    assert fut.settled
+    assert fut.result() == file_bytes(0)[8:24]
+
+
+# -- lease lifetime (the mid-session recycling fix) ---------------------------
+
+def test_lease_recycling_bounds_pool_occupancy():
+    """100 reads through one session must peak at O(inflight window)
+    leased registered buffers, not O(reads): each lease is released at the
+    last-consumer materialization, mid-session."""
+    dev = make_device()
+    n = 100
+    reads = [(i % N_FILES, 16, (i * 7) % (FILE_SIZE - 16)) for i in range(n)]
+    fa = Foreactor(device=dev, backend="io_uring", workers=4, depth=4)
+    fa.register("long", lambda: build_pread_chain("long", reads))
+    fds = [dev.open(f"/c/f{i}", "r") for i in range(N_FILES)]
+
+    @fa.wrap("long", lambda: {"fds": fds})
+    def prog():
+        return [io.pread(dev, fds[f], size, off) for f, size, off in reads]
+
+    out = prog()
+    assert out == [file_bytes(f)[off:off + size] for f, size, off in reads]
+    backend = fa._backend_pool.backend
+    pool = backend.pool
+    assert pool.leased_now == 0, pool.snapshot()
+    # depth-4 speculation + 4 workers: the window is ~8; 16 leaves slack
+    # without ever tolerating the old O(n) leak (which peaked at 100)
+    assert pool.peak_leased <= 16, pool.snapshot()
+    assert_ledger_invariant(fa.total_stats)
+    fa.shutdown()
+
+
+def test_cancelled_deferred_future_releases_slots():
+    """Regression: cancelling a future whose chain the shared scheduler had
+    *deferred* must not leak speculation slots.  The request goes terminal
+    in place inside the view's staging queue; when the chain was re-offered,
+    admit() used to hook the slot-release callback onto the already-dead
+    request — the callback never fired, and the pool starved at capacity
+    (every later op demand-promoting past a permanently full budget)."""
+    dev = make_device()
+    reads = [(i % N_FILES, 16, (i * 8) % (FILE_SIZE - 16)) for i in range(12)]
+    fa = Foreactor(device=dev, backend="io_uring", workers=4,
+                   shared=True, shared_slots=4, depth=len(reads))
+    fa.register("leak", lambda: build_pread_chain("leak", reads))
+    fds = [dev.open(f"/c/f{i}", "r") for i in range(N_FILES)]
+
+    @fa.wrap("leak", lambda: {"fds": fds})
+    def prog():
+        futs = [io.pread_async(dev, fds[f], size, off)
+                for f, size, off in reads]
+        for fut in futs[4:]:  # tail chains the 4-slot budget deferred
+            fut.cancel()
+        # resolving the head re-flushes the deferred queue through admit()
+        return [fut.result() for fut in futs[:4]]
+
+    try:
+        out = prog()
+    finally:
+        stats = fa.total_stats
+        snap = fa.scheduler.snapshot()
+        fa.shutdown()
+    assert out == [file_bytes(f)[off:off + size] for f, size, off in reads[:4]]
+    assert snap["deferred"] > 0, snap  # the scenario really deferred chains
+    assert snap["spec_inflight"] == 0, snap
+    assert_ledger_invariant(stats)
+
+
+# -- multi_get ----------------------------------------------------------------
+
+def _make_lsm(dev):
+    """A store with several L0 tables (multi-candidate chains), memtable
+    residents, tombstones, and misses — every multi_get resolution path."""
+    lsm = LSMTree(dev, "/db", memtable_limit_bytes=1 << 10, l0_limit=10 ** 6,
+                  fsync_writes=False)
+    for k in range(120):
+        lsm.put(k, f"v{k}".encode() * 3)
+    lsm.flush()
+    for k in range(0, 120, 3):  # second generation -> longer chains
+        lsm.put(k, f"w{k}".encode() * 2)
+    lsm.flush()
+    for k in range(0, 120, 10):
+        lsm.put(k, f"mem{k}".encode())  # memtable hits
+    for k in range(5, 120, 20):
+        lsm.delete(k)  # tombstones
+    return lsm
+
+
+QUERY = [0, 5, 7, 10, 30, 31, 64, 99, 119, 500, 17, 45]  # incl. misses
+
+
+@pytest.mark.parametrize("cfg", CONFIGS, ids=[c[0] for c in CONFIGS])
+def test_multi_get_matches_sequential_gets(cfg):
+    _name, kind, kwargs = cfg
+    dev = make_device(kind)
+    lsm = _make_lsm(dev)
+    oracle = [lsm.get(k) for k in QUERY]  # plain sequential, no session
+    fa = Foreactor(device=dev, depth=16, **kwargs)
+    plugins.register_all(fa)
+    mget = fa.wrap("lsm_multiget", plugins.capture_lsm_multiget)(
+        lambda l, ks: l.multi_get(ks))
+    assert mget(lsm, QUERY) == oracle
+    assert lsm.multi_get(QUERY) == oracle  # and sessionless
+    assert_ledger_invariant(fa.total_stats)
+    fa.shutdown()
+
+
+class _EIODevice:
+    """Delegating device wrapper: pread at a poisoned offset raises EIO."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.eio_offsets = set()
+
+    def pread(self, fd, size, off):
+        if off in self.eio_offsets:
+            raise OSError(errno.EIO, f"injected EIO at offset {off}")
+        return self.inner.pread(fd, size, off)
+
+    def pread_into(self, fd, buf, off):  # the registered-buffer read path
+        if off in self.eio_offsets:
+            raise OSError(errno.EIO, f"injected EIO at offset {off}")
+        return self.inner.pread_into(fd, buf, off)
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+
+def test_multi_get_eio_on_one_key_spares_the_rest():
+    """One key's read error surfaces as the batch's exception, but only
+    after every other key was harvested — siblings are never abandoned."""
+    dev = _EIODevice(MemDevice())
+    lsm = LSMTree(dev, "/db", memtable_limit_bytes=1 << 20, l0_limit=10 ** 6,
+                  fsync_writes=False)
+    for k in range(64):
+        # ~3 KB values: one entry per 4 KB data block, so every key owns a
+        # distinct block offset and EIO can be aimed at exactly one key
+        lsm.put(k, f"v{k:03d}".encode() * 600)
+    lsm.flush()  # one sstable: exactly one candidate per key
+    keys = list(range(0, 64, 4))  # 16 keys
+    offsets = [lsm.candidates(k)[0][1] for k in keys]
+    # pick a victim whose block no other queried key shares
+    victim_i = next(i for i, off in enumerate(offsets)
+                    if offsets.count(off) == 1)
+    dev.eio_offsets = {offsets[victim_i]}
+    fa = Foreactor(device=dev, backend="io_uring", workers=4, depth=16)
+    plugins.register_all(fa)
+    mget = fa.wrap("lsm_multiget", plugins.capture_lsm_multiget)(
+        lambda l, ks: l.multi_get(ks))
+    with pytest.raises(OSError) as exc:
+        mget(lsm, keys)
+    assert exc.value.errno == errno.EIO
+    stats = fa.total_stats
+    # every non-victim key's chain was still served to its caller
+    assert stats.served_async >= len(keys) - 1, vars(stats)
+    assert_ledger_invariant(stats)
+    fa.shutdown()
+
+
+def test_future_error_is_cached_and_siblings_resolve():
+    """Future-level EIO: the erroring future raises on every result() call,
+    and a sibling future in the same session still yields its bytes."""
+    dev = _EIODevice(make_device())
+    dev.eio_offsets = {40}
+    fa = Foreactor(device=dev, backend="io_uring", workers=4, depth=4)
+    reads = [(0, 8, 40), (1, 8, 8)]
+    fa.register("eio", lambda: build_pread_chain("eio", reads))
+    fds = [dev.open(f"/c/f{i}", "r") for i in range(N_FILES)]
+
+    @fa.wrap("eio", lambda: {"fds": fds})
+    def prog():
+        return [io.pread_async(dev, fds[f], size, off)
+                for f, size, off in reads]
+
+    bad, good = prog()
+    assert good.result() == file_bytes(1)[8:16]
+    for _ in range(2):
+        with pytest.raises(OSError) as exc:
+            bad.result()
+        assert exc.value.errno == errno.EIO
+    assert_ledger_invariant(fa.total_stats)
+    fa.shutdown()
+
+
+# -- plan-cache / graph-version observability ---------------------------------
+
+def test_plan_stats_present_and_monotone():
+    dev = make_device()
+    fa = Foreactor(device=dev, backend="sync", depth=0)
+    fa.register("obs", lambda: build_pread_chain("obs", READS[:2]))
+    fa.plan("obs")
+    s1 = fa.plan_cache_stats()
+    assert "obs" in s1["per_graph"]
+    g1 = s1["per_graph"]["obs"]
+    assert g1["probes"] >= 1 and g1["compiles"] >= 1
+    assert g1["graph_version"] == 1
+    assert s1["global"]["compiles"] >= 1
+    fa.plan("obs")  # cache hit: probes up, compiles flat
+    g2 = fa.plan_cache_stats()["per_graph"]["obs"]
+    assert g2["probes"] == g1["probes"] + 1
+    assert g2["compiles"] == g1["compiles"]
+    fa.invalidate_graph("obs")  # re-mine: version bumps, plan recompiles
+    fa.plan("obs")
+    g3 = fa.plan_cache_stats()["per_graph"]["obs"]
+    assert g3["graph_version"] == 2
+    assert g3["compiles"] == g2["compiles"] + 1
+    fa.shutdown()
+
+
+def test_ioserver_report_surfaces_plan_stats():
+    from repro.launch.ioserver import (build_store, get_clients,
+                                       multiget_clients, run_serving)
+    store = build_store(n_keys=200, l0_tables=2, ckpt_chunks=2)
+    specs = get_clients(1, ops=3) + multiget_clients(1, ops=2, batch=4)
+    report = run_serving("shared", specs, store=store)
+    assert report["errors"] == 0
+    plans = report["plans"]
+    per = plans["per_graph"]
+    for name in ("lsm_get", "lsm_multiget"):
+        assert per[name]["probes"] >= 1, plans
+        assert per[name]["graph_version"] >= 1
+    assert plans["global"]["compiles"] >= 1
