@@ -34,6 +34,12 @@ Prints ``name,us_per_call,derived`` CSV.  Sections:
   benchmarks.bench_multiget --table``, and ``python -m
   benchmarks.bench_multiget --dry-run --check`` is the CI multiget-smoke
   gate)
+* Re-mining — drift-to-recovery: LSM compaction mid-serve kills the
+  speculation benefit, online re-mining hot-swaps it back (bench_remine;
+  results in benchmarks/results/remine.json, table via ``python -m
+  benchmarks.bench_remine --table``, and ``python -m
+  benchmarks.bench_remine --dry-run --check`` is the CI remine-smoke
+  gate)
 
 Roofline tables (§Roofline) are produced separately by
 ``python -m benchmarks.roofline`` from the dry-run reports.
@@ -45,8 +51,8 @@ import time
 
 def main() -> None:
     from . import (bench_adaptive, bench_bptree, bench_lsm, bench_multiget,
-                   bench_openloop, bench_overhead, bench_serve,
-                   bench_sharding, bench_utilities, bench_write)
+                   bench_openloop, bench_overhead, bench_remine,
+                   bench_serve, bench_sharding, bench_utilities, bench_write)
     from .common import fmt
 
     sections = [
@@ -60,6 +66,7 @@ def main() -> None:
         ("write_speculation", bench_write.run),
         ("serving_open_loop", bench_openloop.run),
         ("multiget_scatter_gather", bench_multiget.run),
+        ("remine_drift_recovery", bench_remine.run),
     ]
     print("name,us_per_call,derived")
     for name, fn in sections:

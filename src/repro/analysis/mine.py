@@ -1132,3 +1132,76 @@ def mine_and_validate(
                 f"mined graph {name!r} failed replay of trace {t}{held}: {e}"
             ) from e
     return mined
+
+
+def preissue_overlap(graph: ForeactionGraph, ctx: Dict[str, Any],
+                     trace: Trace) -> int:
+    """Predicted pre-issue coverage of ``trace`` by ``graph``'s compiled
+    plan — the number of leading events the plan reproduces with exactly
+    the recorded arguments (:func:`repro.core.plan.predicted_preissue`).
+
+    This is the re-miner's improvement metric: a full match equals
+    ``len(trace)``; a graph that drifted away from the live pattern scores
+    only the still-matching prefix."""
+    from repro.core.plan import predicted_preissue
+
+    return predicted_preissue(compile_plan(graph), ctx, trace.events)
+
+
+def synthesize_trace(graph: ForeactionGraph, ctx: Dict[str, Any],
+                     device) -> Trace:
+    """Execute ``graph``'s compiled plan serially against ``device`` and
+    record the resulting syscall trace — the *replay* direction of
+    mine∘replay: a graph generating the very traces it was mined from.
+
+    Walks from Start taking strong edges (branch choices must be decidable
+    from ``ctx`` plus already-saved results, as in serial replay) and
+    executes each computed syscall in order.  Used by the fixed-point
+    property test (re-mining a mined graph's own traces must reproduce the
+    same pre-issue schedule) and handy for shadow-validating a candidate
+    without live traffic.  Raises :class:`ReplayMismatch` when a stub is
+    undecidable mid-walk — e.g. a weak loop whose count only a live run
+    determines."""
+    from repro.core.syscalls import execute
+
+    plan = compile_plan(graph)
+    ctx = dict(ctx)
+    ctx.pop("__mined__", None)
+    ctx.pop("__mined_n__", None)
+    out = Trace(graph.name)
+    epochs = plan.initial_epochs()
+    nid = plan.start_dst
+    results: Dict[Tuple[str, Tuple[int, ...]], Any] = {}
+    while True:
+        res = plan.resolve_branches(nid, epochs, ctx, False)
+        if res is None:
+            raise ReplayMismatch(
+                f"synthesis of {graph.name!r}: branch undecidable at "
+                f"event {len(out)} (count provenance needs a live run)")
+        nid, epochs, _weak = res
+        if nid == END:
+            return out
+        computed = plan.compute[nid](ctx, epochs)
+        if computed is None:
+            raise ReplayMismatch(
+                f"synthesis of {graph.name!r}: {plan.names[nid]!r} args "
+                f"not computable at event {len(out)}")
+        args, _link = computed
+        resolved = []
+        for a in args:
+            if isinstance(a, FromNode):
+                key = (a.name, epochs)
+                if key not in results:
+                    raise ReplayMismatch(
+                        f"synthesis of {graph.name!r}: link producer "
+                        f"{a.name!r} has no result at event {len(out)}")
+                a = results[key]
+            resolved.append(a)
+        resolved = tuple(resolved)
+        rc = execute(device, plan.sc[nid], resolved)
+        out.append(TraceEvent(seq=len(out), sc=plan.sc[nid],
+                              args=resolved, result=rc))
+        results[(plan.names[nid], epochs)] = rc
+        if plan.save[nid] is not None:
+            plan.save[nid](ctx, epochs, rc)
+        nid, epochs, _weak = plan.follow_out(nid, epochs)

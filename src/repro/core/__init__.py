@@ -38,7 +38,8 @@ from .graph import BranchNode, ForeactionGraph, GraphBuilder, SyscallNode
 from .plan import GraphPlan, compile_plan
 from .syscalls import (Effect, FromRequest, FutureCancelled, IOFuture, Sys,
                        effect_of, is_pure)
-from .trace import Trace, TraceEvent, TraceRecorder
+from .trace import (RecordingSession, Trace, TraceEvent,
+                    TraceRecorder, TraceRing)
 
 __all__ = [
     "Foreactor", "current_session", "io", "make_foreactor",
@@ -55,5 +56,6 @@ __all__ = [
     "GraphPlan", "compile_plan",
     "Effect", "FromRequest", "FutureCancelled", "IOFuture", "Sys",
     "effect_of", "is_pure",
-    "Trace", "TraceEvent", "TraceRecorder",
+    "Trace", "TraceEvent", "TraceRecorder", "TraceRing",
+    "RecordingSession",
 ]

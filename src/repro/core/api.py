@@ -44,7 +44,7 @@ from .graph import ForeactionGraph
 from .plan import GraphPlan, compile_plan
 from .plan import stats as plan_stats
 from .syscalls import IOFuture, Sys
-from .trace import Trace, TraceRecorder
+from .trace import RecordingSession, Trace, TraceRecorder, TraceRing
 
 _tls = threading.local()
 
@@ -76,6 +76,7 @@ class Foreactor:
         shared: bool = False,
         shared_slots: Optional[int] = None,
         staging: bool = True,
+        trace_capacity: int = 64,
     ):
         if not (isinstance(depth, int) or depth == "adaptive"):
             raise ValueError(f"depth must be an int or 'adaptive', got {depth!r}")
@@ -114,8 +115,21 @@ class Foreactor:
         # a recompiled plan can land at a freed predecessor's address
         self._plan_seen: Dict[Tuple[str, str], GraphPlan] = {}
         self._graph_versions: Dict[str, int] = {}
+        #: hot-swap observability, per graph name: how many times a new
+        #: builder replaced the registered one mid-flight (swap_graph) and
+        #: how many of those were the rollback guard restoring the previous
+        #: graph after a regression
+        self._graph_swaps: Dict[str, int] = {}
+        self._graph_rollbacks: Dict[str, int] = {}
         self._controllers: Dict[str, DepthController] = {}
-        self._traces: Dict[str, List[Tuple[Dict[str, Any], Trace]]] = {}
+        #: recorded traces, one bounded ring per endpoint — sampling must
+        #: never grow memory without bound (every trace pins its raw I/O
+        #: buffers); overflow evicts the oldest pair and is counted in
+        #: trace_stats()
+        self.trace_capacity = trace_capacity
+        self._traces: Dict[str, TraceRing] = {}
+        #: attached online re-miner (repro.analysis.remine.ReMiner), or None
+        self._reminer = None
         self.total_stats = SessionStats()
         self._backends: List[Backend] = []
         self._backend_pool = threading.local()  # one live queue pair per thread
@@ -146,6 +160,50 @@ class Foreactor:
         with self._lock:
             self._graphs.pop(name, None)
 
+    def graph_version(self, name: str) -> int:
+        """Times the graph under ``name`` has been built (bumps on the
+        first build after registration, mine() re-registration, or a
+        swap_graph hot-swap).  0 until the first activation builds it."""
+        with self._lock:
+            return self._graph_versions.get(name, 0)
+
+    def swap_graph(self, name: str,
+                   builder: Callable[[], ForeactionGraph],
+                   rollback: bool = False) -> Optional[Callable[[], ForeactionGraph]]:
+        """Atomically hot-swap the registered graph: replace the builder and
+        drop the cached built graph in one critical section, so the next
+        activation builds (and compiles) the new graph at version N+1 while
+        every in-flight session keeps speculating on the plan object it
+        activated with — plans are immutable and cached per graph *object*,
+        so a swap can never mutate a live session's schedule.
+
+        Returns the previous builder (the re-miner stashes it so its
+        regression guard can roll back a swap whose waste ledger regresses;
+        ``rollback=True`` marks this swap as such a restoration).  Counted
+        per graph in :meth:`plan_cache_stats` (``swaps``/``rollbacks``)."""
+        with self._lock:
+            prev = self._graph_builders.get(name)
+            self._graph_builders[name] = builder
+            self._graphs.pop(name, None)  # next activation builds version N+1
+            self._graph_swaps[name] = self._graph_swaps.get(name, 0) + 1
+            if rollback:
+                self._graph_rollbacks[name] = \
+                    self._graph_rollbacks.get(name, 0) + 1
+        return prev
+
+    @property
+    def reminer(self):
+        """The attached online re-miner, or None."""
+        return self._reminer
+
+    def attach_reminer(self, reminer) -> None:
+        """Attach an online re-miner (:class:`repro.analysis.remine.ReMiner`
+        does this in its constructor).  From then on ``activate`` asks it to
+        elect sampled activations (which record a trace serially instead of
+        speculating) and ``deactivate`` feeds it every finished session's
+        stats for the per-version waste ledger its rollback guard watches."""
+        self._reminer = reminer
+
     def _depth_mode(self, depth) -> str:
         return "adaptive" if depth == "adaptive" else "fixed"
 
@@ -170,19 +228,24 @@ class Foreactor:
         """Plan-cache and graph-version observability, surfaced in serving
         summaries (``repro.launch.ioserver``): per graph name, ``probes``
         (plan() calls), ``compiles`` (probes that produced a new plan
-        object), ``hits`` (probes served by the cache), and
-        ``graph_version`` (times the graph was built — bumps when a mined
-        graph replaces a registered one).  ``global`` mirrors the
-        process-wide :data:`repro.core.plan.stats` counters."""
+        object), ``hits`` (probes served by the cache), ``graph_version``
+        (times the graph was built — bumps when a mined graph replaces a
+        registered one), and ``swaps``/``rollbacks`` (hot-swaps applied by
+        the online re-miner, and how many of those its regression guard
+        reverted).  ``global`` mirrors the process-wide
+        :data:`repro.core.plan.stats` counters."""
         with self._lock:
             per = {}
-            for name, probes in self._plan_probes.items():
+            for name in set(self._plan_probes) | set(self._graph_swaps):
+                probes = self._plan_probes.get(name, 0)
                 builds = self._plan_builds.get(name, 0)
                 per[name] = {
                     "probes": probes,
                     "compiles": builds,
                     "hits": probes - builds,
                     "graph_version": self._graph_versions.get(name, 0),
+                    "swaps": self._graph_swaps.get(name, 0),
+                    "rollbacks": self._graph_rollbacks.get(name, 0),
                 }
             return {"per_graph": per, "global": dict(plan_stats)}
 
@@ -261,6 +324,17 @@ class Foreactor:
                  tenant: Optional[str] = None,
                  weight: Optional[float] = None,
                  priority=None) -> SpecSession:
+        # trace sampling: an attached re-miner elects 1-in-N activations per
+        # watched endpoint; those run serially under a RecordingSession (no
+        # speculation — observation must not perturb the pattern) and
+        # deliver their trace to the endpoint's bounded ring on clean finish
+        rm = self._reminer
+        if rm is not None and rm.sample(graph_name):
+            rec = RecordingSession(self.device, graph_name, ctx,
+                                   sink=self._deliver_trace)
+            rec.graph_version = self.graph_version(graph_name)
+            _session_stack().append(rec)
+            return rec  # duck-types the SpecSession surface wrap/io touch
         depth = self.depth if depth is None else depth
         controller = None
         if depth == "adaptive":
@@ -270,8 +344,9 @@ class Foreactor:
             backend: Backend = self._shared_view(tenant, weight, priority)
         else:
             backend = self._make_backend()
+        graph = self.graph(graph_name)
         sess = SpecSession(
-            graph=self.graph(graph_name),
+            graph=graph,
             ctx=ctx,
             backend=backend,
             device=self.device,
@@ -282,6 +357,8 @@ class Foreactor:
             staging=self.staging,
             plan=self.plan(graph_name,
                            "adaptive" if controller is not None else depth),
+            graph_name=graph_name,
+            graph_version=self.graph_version(graph_name),
         )
         _session_stack().append(sess)
         return sess
@@ -295,6 +372,12 @@ class Foreactor:
             sess.backend.shutdown()  # release the slot lease, keep the inner
         with self._lock:
             self.total_stats.merge(stats)
+        rm = self._reminer
+        if rm is not None and not getattr(sess, "is_recording", False):
+            # per-version waste ledger for the rollback guard: attribute
+            # this session's counters to the graph build it activated on
+            rm.on_session_finish(getattr(sess, "graph_name", None),
+                                 getattr(sess, "graph_version", 0), stats)
         return stats
 
     def wrap(self, graph_name: str,
@@ -402,9 +485,22 @@ class Foreactor:
             assert st and st[-1] is rec, "unbalanced recorder stack"
             st.pop()
         trace = rec.finish()
-        with self._lock:
-            self._traces.setdefault(name, []).append((dict(ctx), trace))
+        self._deliver_trace(name, ctx, trace)
         return out
+
+    def _deliver_trace(self, name: str, ctx: Dict[str, Any],
+                       trace: Trace) -> None:
+        """Store one recorded (ctx, trace) pair in the endpoint's bounded
+        ring and tell the attached re-miner (if any) new evidence exists —
+        its cadence counter decides whether a re-mine attempt runs now."""
+        with self._lock:
+            ring = self._traces.get(name)
+            if ring is None:
+                ring = self._traces[name] = TraceRing(self.trace_capacity)
+            ring.append(dict(ctx), trace)
+        rm = self._reminer
+        if rm is not None:
+            rm.on_trace(name)
 
     def observe(self, name: str,
                 capture: Callable[..., Dict[str, Any]]) -> Callable:
@@ -425,7 +521,23 @@ class Foreactor:
 
     def traces(self, name: str) -> List[Tuple[Dict[str, Any], Trace]]:
         with self._lock:
-            return list(self._traces.get(name, ()))
+            ring = self._traces.get(name)
+            return ring.snapshot() if ring is not None else []
+
+    def trace_stats(self) -> Dict[str, Dict[str, int]]:
+        """Per-endpoint trace-ring occupancy and drop counts
+        (:meth:`repro.core.trace.TraceRing.stats`): sustained sampling is
+        memory-bounded by design, and nonzero ``dropped`` means traces are
+        arriving faster than the re-mine cadence consumes them."""
+        with self._lock:
+            return {name: ring.stats() for name, ring in self._traces.items()}
+
+    def drop_traces(self, name: str) -> None:
+        """Release every recorded trace under ``name`` (the re-miner calls
+        this after a hot-swap or rollback: evidence of the old pattern must
+        not contaminate the next mining attempt)."""
+        with self._lock:
+            self._traces.pop(name, None)
 
     def mine(self, name: str, register: bool = True, holdout: bool = True):
         """Mine the traces recorded under ``name`` into a validated

@@ -189,6 +189,42 @@ class NodeState:
     issued: bool = False
     req: Optional[IORequest] = None
     harvested: bool = False
+    #: the pre-issued request's arguments did not match what the
+    #: application actually asked for (the live pattern drifted away from
+    #: the graph) — its completion must be accounted as wasted, never
+    #: harvested
+    stale: bool = False
+
+
+def _spec_args_match(spec_args: Tuple[Any, ...],
+                     args: Tuple[Any, ...]) -> bool:
+    """Harvest-time argument guard: may a pre-issued request's result be
+    served for this intercepted call?
+
+    The frontier is resolved by syscall *kind*; under pattern drift (a
+    stale mined graph after an LSM compaction changed the level geometry)
+    the kinds can still line up while the graph-computed arguments — fd,
+    offset, size, path — point at yesterday's layout.  Harvesting such a
+    request would silently return the wrong bytes, so the engine compares
+    arguments before trusting a speculated completion and falls back to
+    synchronous service on mismatch (the stale request is accounted as
+    wasted/cancelled at finish, keeping the ledger invariant).
+
+    Positions holding :class:`FromRequest` link placeholders are skipped —
+    the producer's buffer *is* the argument, there is no application value
+    to compare — as are raw write payloads (``bytes``/``bytearray``/
+    ``memoryview``), where an O(n) memcmp per intercept would tax every
+    staged write to defend against a drift mode the fd/offset check
+    already catches."""
+    if len(spec_args) != len(args):
+        return False
+    for a, b in zip(spec_args, args):
+        if isinstance(a, (FromRequest, bytes, bytearray, memoryview)) \
+                or isinstance(b, (bytes, bytearray, memoryview)):
+            continue
+        if a != b:
+            return False
+    return True
 
 
 @dataclass
@@ -201,6 +237,10 @@ class SessionStats:
     served_sync: int = 0
     cancelled: int = 0
     wasted_completions: int = 0
+    #: pre-issued requests rejected by the harvest-time argument guard —
+    #: the graph computed different arguments than the application issued
+    #: (stale mined graph under pattern drift); served synchronously instead
+    stale_harvests: int = 0
     #: async intercepts that handed back an unresolved IOFuture (the
     #: late-demand entries of the ledger)
     futures_issued: int = 0
@@ -215,7 +255,7 @@ class SessionStats:
     def merge(self, other: "SessionStats") -> None:
         for f in (
             "intercepted", "untracked", "pre_issued", "submits", "served_async",
-            "served_sync", "cancelled", "wasted_completions",
+            "served_sync", "cancelled", "wasted_completions", "stale_harvests",
             "futures_issued", "futures_drained",
         ):
             setattr(self, f, getattr(self, f) + getattr(other, f))
@@ -249,8 +289,18 @@ class SpecSession:
         tenant: Optional[str] = None,
         staging: bool = False,
         plan: Optional[GraphPlan] = None,
+        graph_name: Optional[str] = None,
+        graph_version: int = 0,
     ):
         self.graph = graph
+        #: registry identity, stamped by Foreactor.activate: which endpoint
+        #: this session serves and which build of its graph it started on.
+        #: A hot-swap mid-session never retargets a live session — it keeps
+        #: speculating on the plan it activated with, and the version lets
+        #: the re-miner's rollback guard attribute its waste ledger to the
+        #: right graph build.
+        self.graph_name = graph_name if graph_name is not None else graph.name
+        self.graph_version = graph_version
         self.plan = plan if plan is not None else compile_plan(
             graph, "adaptive" if controller is not None else "fixed")
         self.ctx = ctx
@@ -589,18 +639,29 @@ class SpecSession:
         if st is None:
             st = NodeState()
             self._state[key] = st
+        # harvestable: a live pre-issued request exists AND the harvest-time
+        # argument guard agrees it answers the call the application actually
+        # made — under pattern drift (stale mined graph) the kinds match but
+        # the graph-computed fd/offset/size point at yesterday's layout, and
+        # harvesting would silently serve the wrong bytes
+        harvestable = st.issued and st.req is not None \
+            and st.req.state is not ReqState.CANCELLED
+        if harvestable and not st.harvested \
+                and not _spec_args_match(st.req.args, args):
+            harvestable = False
+            st.stale = True
+            self.stats.stale_harvests += 1
         # resolve a close's publish-barrier record BEFORE serving: for a
         # pre-issued close it was bound at pre-issue; for a sync serve the
         # fd is still open right now.  After the close executes, the OS may
         # recycle the fd number onto a newer staged create.
         close_rec = None
         if sc is Sys.CLOSE and self.staging is not None:
-            if st.issued and st.req is not None \
-                    and st.req.state is not ReqState.CANCELLED:
+            if harvestable:
                 close_rec = st.req.barrier_for
             else:
                 close_rec = self.staging.record_for_fd(args[0])
-        if st.issued and st.req is not None and st.req.state is not ReqState.CANCELLED:
+        if harvestable:
             t0 = time.perf_counter()
             self.backend.wait(st.req)
             blocked = time.perf_counter() - t0
@@ -693,11 +754,23 @@ class SpecSession:
         if st is None:
             st = NodeState()
             self._state[key] = st
+        if st.issued and st.req is not None \
+                and st.req.state is not ReqState.CANCELLED \
+                and not st.harvested \
+                and not _spec_args_match(st.req.args, args):
+            # harvest-time argument guard, async flavour: never hand out a
+            # future backed by a request whose arguments drifted away from
+            # the application's — resolve it synchronously instead and let
+            # finish() account the stale completion as waste
+            st.stale = True
+            self.stats.stale_harvests += 1
         if st.issued and (st.req is None
-                         or st.req.state is ReqState.CANCELLED):
-            # evicted under pressure (shared backend): same demand fallback
-            # as a blocking intercept — serve synchronously; the cancelled
-            # request stays in the ledger and is counted at finish
+                         or st.req.state is ReqState.CANCELLED
+                         or st.stale):
+            # evicted under pressure (shared backend) or stale under drift:
+            # same demand fallback as a blocking intercept — serve
+            # synchronously; the dead request stays in the ledger and is
+            # counted at finish
             t0 = time.perf_counter()
             self.backend.note_demand()
             self.device.charge_crossing()
@@ -864,7 +937,11 @@ class SpecSession:
                         continue
                     if st.req.state is ReqState.CANCELLED:
                         self.stats.cancelled += 1
-                    elif st.req.state is ReqState.COMPLETED and not st.harvested:
+                    elif st.req.state is ReqState.COMPLETED \
+                            and (not st.harvested or st.stale):
+                        # stale nodes were *served* (synchronously, after
+                        # the argument guard rejected the speculation) but
+                        # their pre-issued completion is pure waste
                         self.stats.wasted_completions += 1
                     if st.req.lease is not None:
                         # post-drain: no worker is filling it; harvested

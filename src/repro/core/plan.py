@@ -51,7 +51,7 @@ import threading
 import weakref
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
-from .graph import BranchNode, ForeactionGraph, SyscallNode
+from .graph import BranchNode, ForeactionGraph, FromNode, SyscallNode
 from .syscalls import PURE, Effect, Sys
 
 KIND_SYSCALL = 0
@@ -159,6 +159,67 @@ class GraphPlan:
         if lid >= 0:
             epochs = epochs[:lid] + (epochs[lid] + 1,) + epochs[lid + 1:]
         return self.out_dst[nid], epochs, self.out_weak[nid]
+
+
+#: sentinel for "producer result unavailable" during the symbolic walk
+_MISSING = object()
+
+
+def predicted_preissue(plan: GraphPlan, ctx: Dict[str, Any],
+                       events) -> int:
+    """Predicted pre-issue schedule coverage: how many of ``events`` this
+    plan would pre-issue with exactly the application's arguments.
+
+    ``events`` is a sequence of recorded syscalls (``.sc``, ``.args``,
+    ``.result`` — :class:`repro.core.trace.TraceEvent` or anything
+    shaped like it).  The walk mirrors the validator's serial replay
+    (:func:`repro.analysis.mine.replay_trace`) but *scores* instead of
+    judging: it stops at the first divergence — wrong syscall kind,
+    mismatched arguments, undecidable branch, graph exhausted — and
+    returns the count of matched events.  Against a live trace this is the
+    number of intercepts the engine's harvest-time argument guard would
+    accept from this plan, i.e. the speculation the graph can still buy.
+
+    The online re-miner's improvement check compares this score between
+    the incumbent graph and a mined candidate over held-out sampled
+    traces: a hot-swap is only allowed when the candidate's predicted
+    schedule covers strictly more of the live pattern than the incumbent's
+    (a drifted incumbent scores the pre-drift prefix at best)."""
+    ctx = dict(ctx)
+    ctx.pop("__mined__", None)
+    ctx.pop("__mined_n__", None)
+    epochs = plan.initial_epochs()
+    nid = plan.start_dst
+    results: Dict[Tuple[str, Tuple[int, ...]], Any] = {}
+    matched = 0
+    for ev in events:
+        res = plan.resolve_branches(nid, epochs, ctx, False)
+        if res is None:
+            break
+        nid, epochs, _weak = res
+        if nid == END or plan.sc[nid] is not ev.sc:
+            break
+        out = plan.compute[nid](ctx, epochs)
+        if out is None:
+            break
+        args, _link = out
+        if len(args) != len(ev.args):
+            break
+        ok = True
+        for a, b in zip(args, ev.args):
+            if isinstance(a, FromNode):
+                a = results.get((a.name, epochs), _MISSING)
+            if a is _MISSING or a != b:
+                ok = False
+                break
+        if not ok:
+            break
+        results[(plan.names[nid], epochs)] = ev.result
+        if plan.save[nid] is not None:
+            plan.save[nid](ctx, epochs, ev.result)
+        matched += 1
+        nid, epochs, _weak = plan.follow_out(nid, epochs)
+    return matched
 
 
 def _topo_order(graph: ForeactionGraph) -> List[str]:

@@ -21,8 +21,9 @@ docs/GLOSSARY.md.
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Dict, Iterator, List, Optional, Tuple
+from typing import Any, Callable, Deque, Dict, Iterator, List, Optional, Tuple
 
 from .device import Device
 from .syscalls import Sys, execute
@@ -99,6 +100,56 @@ class Trace:
         ]
 
 
+class TraceRing:
+    """Bounded per-endpoint store of sampled ``(ctx, trace)`` pairs.
+
+    Every trace pins the raw result of each recorded I/O (the miner needs
+    the live values for provenance detection), so an unbounded trace list
+    under sustained sampling grows by one buffer set per sampled request —
+    the original ``Foreactor._traces`` list did exactly that when
+    ``observe`` ran long.  The ring keeps the *newest* ``capacity`` pairs
+    (the ones that describe the current live pattern, which is what online
+    re-mining wants) and counts what it evicted, so ``trace_stats`` can
+    report drop pressure instead of hiding it.
+    """
+
+    def __init__(self, capacity: int = 64):
+        if capacity < 1:
+            raise ValueError(f"trace ring capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._items: Deque[Tuple[Dict[str, Any], "Trace"]] = deque(
+            maxlen=capacity)
+        #: total pairs ever appended (survivors + dropped)
+        self.recorded = 0
+        #: pairs evicted to make room — nonzero means sampling outpaces
+        #: re-mining cadence (docs/TUNING.md, "Sample rate vs re-mine
+        #: cadence")
+        self.dropped = 0
+
+    def append(self, ctx: Dict[str, Any], trace: "Trace") -> None:
+        if len(self._items) == self.capacity:
+            self.dropped += 1
+        self._items.append((ctx, trace))
+        self.recorded += 1
+
+    def snapshot(self) -> List[Tuple[Dict[str, Any], "Trace"]]:
+        return list(self._items)
+
+    def clear(self) -> None:
+        self._items.clear()
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "capacity": self.capacity,
+            "resident": len(self._items),
+            "recorded": self.recorded,
+            "dropped": self.dropped,
+        }
+
+
 class TraceRecorder:
     """Records every intercepted I/O call while active on a thread.
 
@@ -133,3 +184,58 @@ class TraceRecorder:
     def finish(self) -> Trace:
         self.trace.wall_seconds = time.perf_counter() - self._t0
         return self.trace
+
+
+class RecordingSession:
+    """A *sampled* activation: records the live syscall pattern instead of
+    speculating on it — the trace sampler half of online re-mining.
+
+    ``Foreactor.activate`` returns one of these for the 1-in-N activations
+    an attached :class:`repro.analysis.remine.ReMiner` elects to sample.
+    It duck-types the slice of the ``SpecSession`` surface that
+    ``Foreactor.deactivate``, ``Foreactor.wrap`` and the interception layer
+    touch (``device``, ``intercept``, ``mark_failed``, ``finish`` returning
+    a ``SessionStats``), executes strictly serially like a
+    :class:`TraceRecorder` (observation must not perturb the pattern being
+    observed), and on clean finish delivers its ``(ctx, trace)`` pair to
+    the per-endpoint :class:`TraceRing` via the ``sink`` callback.  A
+    failed activation delivers nothing — the miner only learns from clean
+    runs.  Unsampled activations never touch this class, so the steady-
+    state cost of having a re-miner attached is one counter increment per
+    activation.
+    """
+
+    #: lets Foreactor.deactivate tell a sampling activation from a real one
+    is_recording = True
+
+    def __init__(self, device: Device, name: str, ctx: Dict[str, Any],
+                 sink: Optional[Callable[[str, Dict[str, Any], Trace],
+                                         None]] = None):
+        from .engine import SessionStats  # engine does not import trace
+
+        self.device = device
+        self.graph_name = name
+        self.graph_version = 0
+        self.ctx = dict(ctx)
+        self.backend = None  # no speculation: nothing to lease or shut down
+        self.stats = SessionStats()
+        self._recorder = TraceRecorder(device, name=name)
+        self._sink = sink
+        self._failed = False
+        self._finished = False
+
+    def intercept(self, sc: Sys, args: Tuple[Any, ...]) -> Any:
+        self.stats.intercepted += 1
+        self.stats.served_sync += 1
+        return self._recorder.intercept(sc, args)
+
+    def mark_failed(self) -> None:
+        self._failed = True
+
+    def finish(self):
+        if not self._finished:
+            self._finished = True
+            trace = self._recorder.finish()
+            if not self._failed and self._sink is not None:
+                self._sink(self.graph_name, self.ctx, trace)
+        return self.stats

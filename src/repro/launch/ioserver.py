@@ -155,7 +155,7 @@ def restore_extents(dev, n_chunks: int = 16, chunk: int = 16384):
 
 
 def make_foreactor(mode: str, dev, depth=SERVE_DEPTH,
-                   clients: int = 8) -> Foreactor:
+                   clients: int = 8, remine: bool = False) -> Foreactor:
     if mode == "sync":
         fa = Foreactor(device=dev, backend="sync", depth=0)
     elif mode == "isolated":
@@ -173,6 +173,12 @@ def make_foreactor(mode: str, dev, depth=SERVE_DEPTH,
     fa.register("restore_scan",
                 lambda: build_pread_extents_graph("restore_scan"))
     fa.plan("restore_scan")
+    if remine and mode != "sync":
+        # online re-mining on the hot endpoint: sampled activations record
+        # traces, validated candidates hot-swap, regressions roll back —
+        # swaps/rollbacks surface in the serving report's plan lines
+        from repro.analysis.remine import ReMiner
+        ReMiner(fa, watch=["lsm_get"])
     return fa
 
 
@@ -243,11 +249,11 @@ def _client_loop(fa: Foreactor, dev, lsm: LSMTree, ref: Dict[int, bytes],
 
 def run_serving(mode: str, clients: List[ClientSpec],
                 profile: DeviceProfile = SERVE_PROFILE,
-                seed: int = 0, store=None) -> dict:
+                seed: int = 0, store=None, remine: bool = False) -> dict:
     """Run one closed-loop serving experiment; returns the report dict."""
     inner, ref = store if store is not None else build_store(seed=seed)
     dev = SimulatedDevice(inner, profile)
-    fa = make_foreactor(mode, dev, clients=len(clients))
+    fa = make_foreactor(mode, dev, clients=len(clients), remine=remine)
     lsm = LSMTree.open_existing(dev, "/db", fsync_writes=False)
     results = [ClientResult(spec=c) for c in clients]
     start_gate = threading.Event()
@@ -300,6 +306,9 @@ def run_serving(mode: str, clients: List[ClientSpec],
         # plan-cache + mined-graph-version observability (per endpoint):
         # thrash shows as compiles tracking probes instead of hits
         "plans": fa.plan_cache_stats(),
+        # online re-mining activity: sampling/attempt/swap/rollback counters
+        # and the deterministic decision log (None when --remine is off)
+        "remine": fa.reminer.snapshot() if fa.reminer else None,
     }
     return report
 
@@ -524,7 +533,15 @@ def _print_report(rep: dict) -> None:
     for name, p in sorted(plans.get("per_graph", {}).items()):
         print(f"  plan {name:14s} probes={p['probes']:3d} "
               f"hits={p['hits']:3d} compiles={p['compiles']} "
-              f"graph_v{p['graph_version']}")
+              f"graph_v{p['graph_version']} swaps={p.get('swaps', 0)} "
+              f"rollbacks={p.get('rollbacks', 0)}")
+    rm = rep.get("remine")
+    if rm:
+        for name, ep in sorted(rm["endpoints"].items()):
+            print(f"  remine {name:12s} samples={ep['samples']:3d} "
+                  f"attempts={ep['attempts']} swaps={ep['swaps']} "
+                  f"rollbacks={ep['rollbacks']} "
+                  f"refusals={sum(ep['refusals'].values())}")
 
 
 def main() -> None:
@@ -538,6 +555,9 @@ def main() -> None:
     ap.add_argument("--multigets", type=int, default=0,
                     help="add N scatter-gather multiget clients "
                          "(8-key batches)")
+    ap.add_argument("--remine", action="store_true",
+                    help="attach the online re-miner to the lsm_get "
+                         "endpoint (closed-loop modes)")
     ap.add_argument("--openloop", action="store_true",
                     help="open-loop session stream instead of closed-loop "
                          "clients")
@@ -567,7 +587,8 @@ def main() -> None:
     specs += restore_clients(args.low_pri_restores)
     specs += multiget_clients(args.multigets)
     for mode in modes:
-        _print_report(run_serving(mode, specs, store=store))
+        _print_report(run_serving(mode, specs, store=store,
+                                  remine=args.remine))
 
 
 if __name__ == "__main__":

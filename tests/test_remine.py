@@ -1,0 +1,557 @@
+"""Deterministic drift-replay harness for online re-mining and hot-swap.
+
+The scenario the re-miner exists for: a served endpoint whose true syscall
+pattern is baked into its mined graph (fd numbers, extent geometry, loop
+counts — app state *not* in the activation ctx), and that pattern changes
+mid-serve.  The engine's harvest-time argument guard keeps every response
+byte-identical to serial execution, but the speculation benefit decays to
+zero until :class:`repro.analysis.remine.ReMiner` samples the new pattern,
+shadow-validates a re-mined candidate, and hot-swaps it.
+
+Everything here is deterministic, single-threaded, and free of wall-clock
+sleeps (the PR-6 ``ManualPlane`` style): an :class:`EagerPlane` executes
+every admitted request inline at submit, and every re-miner decision is
+counter-driven — so a seeded run replays with identical swap decisions,
+which one test asserts outright by comparing two full-run snapshots.
+
+Checked across every swap/rollback boundary:
+
+* byte-identity with the sync oracle on every single request;
+* the session-stats ledger
+  ``pre_issued == served_async + cancelled + wasted_completions``;
+* in-flight sessions finish on the plan they activated with;
+* an injected bad candidate is swapped, caught by the waste-regression
+  guard, rolled back, and vetoed;
+* the validator refuses unsound candidates mined from drifted/ambiguous
+  evidence (loop-count change, spurious branch, reordered write barrier)
+  and keeps the old graph.
+"""
+
+import random
+import threading
+
+import pytest
+from _hypothesis_support import given, settings, st
+
+from repro.analysis.mine import (UnsoundGraph, mine_and_validate,
+                                 preissue_overlap, synthesize_trace)
+from repro.analysis.remine import ReMineConfig, ReMiner
+from repro.core import (Foreactor, GraphBuilder, MemDevice, ShardedDevice,
+                        Sys, TraceRing, io)
+from repro.core.backends import IOPlane
+from repro.core.syscalls import perform
+
+
+# -- the deterministic I/O plane ----------------------------------------------
+
+class EagerPlane(IOPlane):
+    """A zero-thread plane that executes every admitted request inline at
+    submit: pre-issues complete immediately and deterministically, and a
+    speculated request with stale (post-drift) arguments fails or reads the
+    wrong bytes *safely* — errors land in the request like a lane worker's
+    would, never in the submitting thread."""
+
+    def __init__(self, device):
+        super().__init__(device, lanes=())
+        self.executed = 0
+
+    def _run(self, req) -> None:
+        if req.claim():
+            try:
+                req.finish(perform(self.device, req))
+            except BaseException as e:  # mirror lanes.py worker behaviour
+                req.finish(error=e)
+            self.executed += 1
+
+    def submit(self, batch):
+        if not batch:
+            return 0
+        with self._lock:
+            self._submitted.extend(batch)
+            if len(self._submitted) > self._LEDGER_COMPACT:
+                self._submitted = [r for r in self._submitted
+                                   if not r.is_done()]
+        for r in batch:
+            self._run(r)
+        return len(batch)
+
+    # IOPlane aliases submit_batch at class definition time
+    submit_batch = submit
+
+
+# -- the drifting endpoint ----------------------------------------------------
+# Geometry lives in *app state*, not ctx: the mined graph can only bake it
+# in as constants (PConst fd/size, PLinear offset, CConst count) — exactly
+# the class of graph that goes stale when the app reconfigures.
+
+FILE = "/data/blob"
+FILE_BYTES = bytes((i * 31 + 7) % 251 for i in range(1 << 14))
+
+
+class DriftApp:
+    def __init__(self, dev, fd):
+        self.dev = dev
+        self.fd = fd
+        self.count, self.size, self.stride = 4, 256, 512
+
+    def drift(self, count=6, size=128, stride=256):
+        self.count, self.size, self.stride = count, size, stride
+
+    def run(self):
+        return b"".join(
+            io.pread(self.dev, self.fd, self.size, i * self.stride)
+            for i in range(self.count))
+
+    def oracle(self):
+        return b"".join(
+            self.dev.pread(self.fd, self.size, i * self.stride)
+            for i in range(self.count))
+
+
+def make_env(cfg=None, capacity=64):
+    dev = MemDevice()
+    fd = dev.open(FILE, "w")
+    dev.pwrite(fd, FILE_BYTES, 0)
+    app = DriftApp(dev, fd)
+    fa = Foreactor(device=dev, backend="io_uring", depth=8,
+                   trace_capacity=capacity)
+    plane = EagerPlane(dev)
+    fa._backend_pool.backend = plane  # deterministic plane, no workers
+    fa._backends.append(plane)
+    rm = ReMiner(fa, cfg or ReMineConfig(sample_every=4, min_traces=3,
+                                         remine_every=3, guard_sessions=3),
+                 watch=["scan"])
+    return dev, app, fa, rm
+
+
+def bootstrap(fa, app, n=3):
+    """Offline observe→mine: n recorded traces trip the re-mine cadence and
+    install the first mined graph (no incumbent → unconditional swap)."""
+    for _ in range(n):
+        fa.record("scan", {}, app.run)
+
+
+def serve(fa, app, n):
+    """n closed-loop requests; every one is checked byte-identical to the
+    sync oracle and ledger-consistent before the next is admitted."""
+    out = []
+    for _ in range(n):
+        sess = fa.activate("scan", {})
+        try:
+            got = app.run()
+        finally:
+            st = fa.deactivate(sess)
+        assert got == app.oracle(), "response diverged from sync oracle"
+        assert st.pre_issued == (st.served_async + st.cancelled
+                                 + st.wasted_completions), vars(st)
+        out.append(st)
+    return out
+
+
+def ep_snapshot(rm, name="scan"):
+    return rm.snapshot()["endpoints"][name]
+
+
+# -- the headline: drift → refusal → validated hot-swap → recovery ------------
+
+def test_drift_replay_hot_swap_recovers_speculation():
+    dev, app, fa, rm = make_env()
+    bootstrap(fa, app)
+    assert ep_snapshot(rm)["swaps"] == 1  # initial mined graph installed
+
+    pre = serve(fa, app, 8)
+    assert sum(s.served_async for s in pre) > 0, "no speculation pre-drift"
+    assert sum(s.stale_harvests for s in pre) == 0
+    v_before = fa.graph_version("scan")
+
+    app.drift()  # the true pattern changes mid-serve
+    post = serve(fa, app, 16)
+
+    # correctness held throughout (serve() asserted per-op), and the guard
+    # visibly refused stale pre-issues while the old graph was live
+    assert sum(s.stale_harvests for s in post) > 0
+    # mixed old/new evidence was refused before the suffix window converged
+    acts = [(d["action"], d.get("scope")) for d in rm.decisions()]
+    assert ("refuse", None) in acts
+    assert ("swap", "suffix") in acts, f"no suffix-scope re-swap in {acts}"
+
+    # speculation benefit is back: fresh sessions pre-issue and waste
+    # nothing (the first recovery activation builds version N+1)
+    rec = serve(fa, app, 6)
+    assert fa.graph_version("scan") > v_before
+    spec = [s for s in rec if s.pre_issued > 0]  # skip sampled (serial) ones
+    assert spec and all(
+        s.cancelled + s.wasted_completions == 0 and s.served_async > 0
+        for s in spec)
+
+    stats = fa.plan_cache_stats()["per_graph"]["scan"]
+    assert stats["swaps"] == 2 and stats["rollbacks"] == 0
+    fa.shutdown()
+
+
+def _drift_scenario(seed: int):
+    """One full seeded drift-replay run; returns (responses, snapshot)."""
+    rng = random.Random(seed)
+    dev, app, fa, rm = make_env()
+    bootstrap(fa, app)
+    responses = []
+    pre_ops = rng.randint(6, 10)
+    post_ops = 16 + rng.randint(0, 4)
+    for phase_ops in (pre_ops, post_ops):
+        for _ in range(phase_ops):
+            sess = fa.activate("scan", {})
+            try:
+                responses.append(app.run())
+            finally:
+                fa.deactivate(sess)
+        app.drift()
+    snap = rm.snapshot()
+    fa.shutdown()
+    return responses, snap
+
+
+def test_swap_decisions_replay_identical_across_runs():
+    """The re-miner is counter-driven end to end: two runs of the same
+    seeded workload make byte-identical swap decisions — the decision log
+    carries no timestamps, ids, or RNG."""
+    r1, s1 = _drift_scenario(seed=7)
+    r2, s2 = _drift_scenario(seed=7)
+    assert r1 == r2
+    assert s1 == s2
+    assert s1["endpoints"]["scan"]["swaps"] >= 2  # bootstrap + recovery
+
+
+def test_in_flight_session_finishes_on_its_own_plan_across_swap():
+    """swap_graph is atomic at the registry: a session activated on version
+    N keeps its compiled plan (and its graph_version stamp) even when the
+    swap lands mid-session; the next activation builds N+1."""
+    dev, app, fa, rm = _quiet_env()
+    bootstrap(fa, app)
+    serve(fa, app, 1)  # build v1
+    v1 = fa.graph_version("scan")
+
+    sess = fa.activate("scan", {})
+    try:
+        # first half of the pattern, then the swap lands mid-flight
+        first = [io.pread(dev, app.fd, app.size, i * app.stride)
+                 for i in range(2)]
+        fa.swap_graph("scan", fa._graph_builders["scan"])
+        rest = [io.pread(dev, app.fd, app.size, i * app.stride)
+                for i in range(2, app.count)]
+    finally:
+        st = fa.deactivate(sess)
+    assert b"".join(first + rest) == app.oracle()
+    assert st.pre_issued == (st.served_async + st.cancelled
+                             + st.wasted_completions)
+    assert sess.graph_version == v1  # stamped at activation, not at finish
+    serve(fa, app, 1)  # next activation rebuilds
+    assert fa.graph_version("scan") == v1 + 1
+    fa.shutdown()
+
+
+def test_injected_bad_candidate_is_rolled_back_and_vetoed():
+    """The regression guard end to end: a candidate that validates nowhere
+    near the live pattern gets swapped in via the canary API, wastes its
+    pre-issues for guard_sessions sessions, and is rolled back — the old
+    builder restored, the candidate's signature vetoed, every response
+    byte-identical the whole time."""
+    dev, app, fa, rm = _quiet_env()
+    bootstrap(fa, app)
+    good = serve(fa, app, 4)
+    assert sum(s.cancelled + s.wasted_completions for s in good) == 0
+
+    def bad_builder():
+        # plausible but wrong: reads from offsets the app never touches
+        b = GraphBuilder("scan")
+        prev = None
+        for i in range(4):
+            node = f"p{i}"
+            b.AddSyscallNode(node, Sys.PREAD,
+                             lambda ctx, ep, i=i: ((app.fd, 64, 8192 + i), False))
+            if prev is not None:
+                b.SyscallSetNext(prev, node, weak=False)
+            prev = node
+        b.SyscallSetNext(prev, None, weak=True)
+        b.SetStart("p0")
+        return b.Build()
+
+    rm.inject_candidate("scan", bad_builder, sig="bad-canary")
+    stats = fa.plan_cache_stats()["per_graph"]["scan"]
+    assert stats["swaps"] == 2 and stats["rollbacks"] == 0
+
+    # guard window: responses stay correct (harvest guard refuses the junk),
+    # waste is visible, and after guard_sessions the rollback fires
+    during = serve(fa, app, 3)
+    assert all(s.cancelled + s.wasted_completions > 0
+               for s in during if s.pre_issued > 0)
+    ep = ep_snapshot(rm)
+    assert ep["rollbacks"] == 1 and ep["vetoed"] == 1
+    assert not ep["guard_active"]
+    stats = fa.plan_cache_stats()["per_graph"]["scan"]
+    assert stats["rollbacks"] == 1
+    acts = [d["action"] for d in rm.decisions()]
+    assert "rollback" in acts
+
+    # restored graph serves with zero waste again
+    after = serve(fa, app, 4)
+    spec = [s for s in after if s.pre_issued > 0]
+    assert spec and all(s.cancelled + s.wasted_completions == 0 for s in spec)
+    fa.shutdown()
+
+
+# -- satellite: adversarial drifted/ambiguous evidence ------------------------
+
+def _quiet_env():
+    """Env with sampling effectively off — evidence is fed via record()."""
+    return make_env(ReMineConfig(sample_every=10 ** 9, min_traces=3,
+                                 remine_every=3, guard_sessions=3))
+
+
+def test_validator_refuses_loop_count_change_and_keeps_old_graph():
+    """Two count=4 traces train a CConst(4) loop; a count=6 held-out trace
+    must fail shadow replay — the unsound candidate never swaps in."""
+    dev, app, fa, rm = _quiet_env()
+    bootstrap(fa, app)  # v-next swap on count=4 pattern
+    swaps_before = ep_snapshot(rm)["swaps"]
+    v = fa.graph_version("scan")
+    fa.record("scan", {}, app.run)
+    fa.record("scan", {}, app.run)
+    app.count = 6  # loop-count drift lands in the newest (held-out) trace
+    fa.record("scan", {}, app.run)  # cadence → attempt → must refuse
+    ep = ep_snapshot(rm)
+    assert ep["swaps"] == swaps_before
+    assert ep["refusals"].get("shadow", 0) >= 1
+    assert fa.graph_version("scan") == v  # old graph kept
+    fa.shutdown()
+
+
+def test_miner_refuses_spurious_branch_in_minority_trace():
+    """A syscall that appears mid-pattern in one trace only (a 'new weak
+    branch' the evidence cannot justify) breaks structural alignment; the
+    attempt refuses rather than guess."""
+    dev, app, fa, rm = _quiet_env()
+    bootstrap(fa, app)
+    swaps_before = ep_snapshot(rm)["swaps"]
+
+    def with_spurious_stat():
+        a = io.pread(app.dev, app.fd, app.size, 0)
+        io.fstatat(app.dev, FILE)  # the branch the other traces lack
+        return a + io.pread(app.dev, app.fd, app.size, app.stride)
+
+    def plain():
+        return (io.pread(app.dev, app.fd, app.size, 0)
+                + io.pread(app.dev, app.fd, app.size, app.stride))
+
+    fa.drop_traces("scan")
+    # the divergent trace lands in the *training* set: structural alignment
+    # itself fails, before any replay runs
+    fa.record("scan", {}, with_spurious_stat)
+    fa.record("scan", {}, plain)
+    fa.record("scan", {}, plain)
+    ep = ep_snapshot(rm)
+    assert ep["swaps"] == swaps_before
+    assert ep["refusals"].get("unminable", 0) >= 1
+    fa.shutdown()
+
+
+def test_miner_refuses_reordered_write_barrier():
+    """pwrite→fsync in most traces, fsync→pwrite in one: a reordered
+    harvest barrier is a structural divergence, not a minable pattern."""
+    dev, app, fa, rm = _quiet_env()
+    bootstrap(fa, app)
+    swaps_before = ep_snapshot(rm)["swaps"]
+    wfd = dev.open("/data/wal", "w")
+
+    def write_then_sync():
+        io.pwrite(app.dev, wfd, b"x" * 64, 0)
+        io.fsync(app.dev, wfd)
+
+    def sync_then_write():
+        io.fsync(app.dev, wfd)
+        io.pwrite(app.dev, wfd, b"x" * 64, 0)
+
+    fa.drop_traces("scan")
+    fa.record("scan", {}, sync_then_write)  # reordered, in the training set
+    fa.record("scan", {}, write_then_sync)
+    fa.record("scan", {}, write_then_sync)
+    ep = ep_snapshot(rm)
+    assert ep["swaps"] == swaps_before
+    assert ep["refusals"].get("unminable", 0) >= 1
+    fa.shutdown()
+
+
+# -- satellite: mine ∘ replay ∘ mine is a fixed point -------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(count=st.integers(min_value=3, max_value=7),
+       size=st.integers(min_value=1, max_value=64),
+       stride=st.integers(min_value=64, max_value=256))
+def test_mine_synthesize_mine_fixed_point(count, size, stride):
+    """Re-mining the traces a mined graph generates about itself must
+    reproduce the same graph: identical structural signature, hence the
+    identical pre-issue schedule."""
+    dev = MemDevice()
+    fd = dev.open(FILE, "w")
+    dev.pwrite(fd, FILE_BYTES, 0)
+    app = DriftApp(dev, fd)
+    app.count, app.size, app.stride = count, size, stride
+    fa = Foreactor(device=dev, backend="sync")
+    for _ in range(3):
+        fa.record("scan", {}, app.run)
+    pairs = fa.traces("scan")
+    g1 = mine_and_validate([t for _, t in pairs], [c for c, _ in pairs],
+                           name="scan")
+    synth = [synthesize_trace(g1.graph, {}, dev) for _ in range(3)]
+    g2 = mine_and_validate(synth, [{} for _ in synth], name="scan")
+    assert g2.signature() == g1.signature()
+    # and the predicted pre-issue schedule covers the synthetic trace fully
+    assert preissue_overlap(g2.graph, {}, synth[0]) == len(synth[0])
+    fa.shutdown()
+
+
+# -- satellite: invalidate_graph racing in-flight sessions, all backends ------
+
+N_FILES = 6
+FSIZE = 96
+
+CONFIGS = [
+    ("sync", "flat", dict(backend="sync")),
+    ("user_threads", "flat", dict(backend="user_threads", workers=4)),
+    ("io_uring", "flat", dict(backend="io_uring", workers=4)),
+    ("multi_queue", "sharded", dict(backend="multi_queue", workers=2)),
+    ("shared", "flat", dict(backend="io_uring", workers=4, shared=True)),
+]
+
+
+def _race_device(kind):
+    dev = ShardedDevice([MemDevice() for _ in range(3)]) if kind == "sharded" \
+        else MemDevice()
+    for i in range(N_FILES):
+        fd = dev.open(f"/c/f{i}", "w")
+        dev.pwrite(fd, bytes((i * 7 + j) % 251 for j in range(FSIZE)), 0)
+        dev.close(fd)
+    return dev
+
+
+def _chain_builder(fds):
+    def build():
+        b = GraphBuilder("race")
+        prev = None
+        for i in range(N_FILES):
+            node = f"s{i}"
+            b.AddSyscallNode(node, Sys.PREAD,
+                             lambda ctx, ep, i=i: ((fds[i], 32, 0), False))
+            if prev is not None:
+                b.SyscallSetNext(prev, node, weak=True)
+            prev = node
+        b.SyscallSetNext(prev, None, weak=True)
+        b.SetStart("s0")
+        return b.Build()
+    return build
+
+
+@pytest.mark.parametrize("cfg", CONFIGS, ids=[c[0] for c in CONFIGS])
+def test_invalidate_races_in_flight_session_on_every_backend(cfg):
+    """Session A (worker thread) is mid-graph when the main thread
+    invalidates + swaps and compiles version N+1 for session B.  Both must
+    stay byte-identical to the oracle with intact ledgers; A keeps the
+    version it activated on.  Event-gated, no sleeps."""
+    name, kind, kwargs = cfg
+    dev = _race_device(kind)
+    fds = [dev.open(f"/c/f{i}", "r") for i in range(N_FILES)]
+    oracle = [dev.pread(fd, 32, 0) for fd in fds]
+    fa = Foreactor(device=dev, depth=4, **kwargs)
+    fa.register("race", _chain_builder(fds))
+
+    a_started = threading.Event()
+    swap_done = threading.Event()
+    a_out, a_stat, a_ver = [], [], []
+
+    def session_a():
+        sess = fa.activate("race", {})
+        try:
+            a_out.append(io.pread(dev, fds[0], 32, 0))
+            a_started.set()
+            swap_done.wait()  # the swap lands while A is mid-graph
+            for i in range(1, N_FILES):
+                a_out.append(io.pread(dev, fds[i], 32, 0))
+        finally:
+            a_stat.append(fa.deactivate(sess))
+            a_ver.append(sess.graph_version)
+
+    t = threading.Thread(target=session_a)
+    t.start()
+    a_started.wait()
+    v1 = fa.graph_version("race")
+    fa.invalidate_graph("race")
+    fa.swap_graph("race", _chain_builder(fds))
+    # session B compiles version N+1 while A is still in flight
+    sess_b = fa.activate("race", {})
+    try:
+        b_out = [io.pread(dev, fds[i], 32, 0) for i in range(N_FILES)]
+    finally:
+        b_stat = fa.deactivate(sess_b)
+    swap_done.set()
+    t.join()
+
+    assert a_out == oracle and b_out == oracle
+    for st_ in (a_stat[0], b_stat):
+        assert st_.pre_issued == (st_.served_async + st_.cancelled
+                                  + st_.wasted_completions), vars(st_)
+    assert a_ver[0] == v1
+    assert sess_b.graph_version == v1 + 1
+    fa.shutdown()
+
+
+# -- satellite: the trace ring bounds memory under sustained sampling ---------
+
+def test_trace_ring_rejects_degenerate_capacity():
+    with pytest.raises(ValueError):
+        TraceRing(0)
+
+
+def test_trace_ring_bounds_memory_and_counts_drops():
+    ring = TraceRing(4)
+    for i in range(50):
+        ring.append({"i": i}, object())
+    assert len(ring) == 4
+    assert ring.stats() == {"capacity": 4, "resident": 4,
+                            "recorded": 50, "dropped": 46}
+    # newest survive: the live pattern, which is what re-mining wants
+    assert [c["i"] for c, _ in ring.snapshot()] == [46, 47, 48, 49]
+
+
+def test_sustained_sampling_is_bounded_and_reported():
+    """The regression satellite: before the ring, Foreactor._traces grew
+    one pinned buffer set per sampled request forever.  Now residency is
+    capped at trace_capacity and the drop count is visible in stats."""
+    dev = MemDevice()
+    fd = dev.open(FILE, "w")
+    dev.pwrite(fd, FILE_BYTES, 0)
+    app = DriftApp(dev, fd)
+    fa = Foreactor(device=dev, backend="sync", trace_capacity=8)
+    for _ in range(40):
+        fa.record("scan", {}, app.run)
+    assert len(fa.traces("scan")) == 8
+    st_ = fa.trace_stats()["scan"]
+    assert st_ == {"capacity": 8, "resident": 8,
+                   "recorded": 40, "dropped": 32}
+    fa.shutdown()
+
+
+def test_sampled_activations_record_and_stay_correct():
+    """sample_every=N: the elected activations run serially under a
+    RecordingSession (still byte-correct, still ledger-clean with zero
+    pre-issues) and their traces land in the ring; unwatched endpoints
+    are never sampled."""
+    dev, app, fa, rm = make_env(ReMineConfig(sample_every=3, min_traces=99,
+                                             remine_every=99))
+    bootstrap(fa, app)
+    fa.mine("scan")  # cadence is off in this env: register explicitly
+    stats = serve(fa, app, 9)
+    sampled = [s for s in stats if s.pre_issued == 0 and s.served_sync > 0]
+    assert len(fa.traces("scan")) == 3  # every 3rd activation
+    assert len(sampled) >= 3
+    # a graph the re-miner does not watch is never sampled
+    assert rm.sample("other_endpoint") is False
+    fa.shutdown()
