@@ -1,0 +1,345 @@
+"""Raw-device bandwidth: direct-I/O lanes + extent coalescing on the two
+storage-heavy consumers.
+
+The sharding section (bench_sharding) showed the *op-rate* story: per-device
+queue pairs fan pre-issued requests across shards and aggregate IOPS scale
+with device count.  But every request still pays ``base_latency`` per
+*extent*, so small-extent workloads top out at a tiny fraction of what the
+device can stream.  This section measures what the bandwidth-oriented path
+buys (docs/ARCHITECTURE.md, "Direct I/O & extent coalescing"):
+
+* **alignment-classed buffers** — PREAD leases come from 512/4096-aligned
+  mmap slabs (``repro.core.buffers.BufferPool``) so they are valid
+  O_DIRECT targets (the READ_FIXED analogue);
+* **extent coalescing** — the dispatch path fuses statically-adjacent
+  same-fd pread runs into MB-scale super-reads
+  (``repro.core.coalesce.ExtentCoalescer``), amortizing ``base_latency``
+  over the whole run and scattering zero-copy sub-views on completion;
+* **direct lanes** — ``direct=True`` devices bypass the simulated page
+  cache and demand aligned targets, as an O_DIRECT fd does.
+
+Sweeps: 1-8 shards x {buffered, direct} x {coalesce off, on} on a simulated
+NVMe-class profile, for
+
+* **restore** — ``CheckpointManager.restore`` of a checkpoint whose chunks
+  are sorted into per-shard-file adjacent runs, and
+* **pipeline** — ``TokenBatchLoader`` in ``sequential`` streaming order
+  (``repro.data.pipeline.DataConfig``), where consecutive records of a
+  shard are byte-adjacent.
+
+Every row reports ``bandwidth_mb_s`` and ``raw_fraction`` — the fraction of
+``n_devices * DeviceProfile.raw_bandwidth_bytes()`` actually achieved.
+
+Results land in ``benchmarks/results/bandwidth.json`` (common.write_results
+conventions; table rendered into docs/BENCHMARKS.md by
+``tools/bench_report.py``).  ``python -m benchmarks.bench_bandwidth
+--dry-run --check`` is the CI bandwidth-smoke gate: a reduced sweep proves
+the fused path end to end (restored bytes asserted identical inline), and
+the committed full-scale results must satisfy the acceptance invariants —
+coalesced+direct pipeline bandwidth >= 5x the committed sharding.json
+io_uring pipeline baseline, and coalesced+direct restore bandwidth at
+4 shards >= 2.5x the 1-shard figure.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core import DeviceProfile, Foreactor, ShardedDevice
+from repro.data import (DataConfig, ShardedTokenDataset, TokenBatchLoader,
+                        write_synthetic_dataset)
+
+from .common import Row, timeit_min, write_results
+
+SHARD_COUNTS = (1, 2, 4, 8)
+
+#: (label, direct, coalesce) — ``buffered`` with coalescing off is the
+#: pre-existing per-extent path; ``direct_coalesced`` is the full
+#: bandwidth-oriented lane.
+MODES = (
+    ("buffered", False, False),
+    ("buffered_coalesced", False, True),
+    ("direct", True, False),
+    ("direct_coalesced", True, True),
+)
+
+#: NVMe-class *shape* at CI-measurable time constants (see
+#: repro.core.device.NVME_PROFILE for why the literal 60 us profile is
+#: unmeasurable under Python sleep granularity): ms-scale per-op command
+#: cost that dominates small extents (a 16 KiB record costs 4.4 ms, of
+#: which 0.4 ms is streaming — the gap coalescing closes), one channel per
+#: device so aggregate bandwidth scales with *device* count, and a
+#: streaming rate chosen so full super-read waves stay an order of
+#: magnitude above the harness's Python memcpy overhead (~2.5 ms/MiB).
+CHANNELS = 1
+BW_PROFILE = DeviceProfile(channels=CHANNELS, base_latency=4.0e-3,
+                           per_byte=2.5e-8, crossing_cost=4e-6,
+                           metadata_latency=1.0e-3)
+
+#: restore: 16 MiB tree in 256 KiB chunks round-robined over one shard
+#: file per device; sorted into per-fd adjacent runs they fuse into
+#: 4 MiB super-reads (4 total).  One single-channel device serializes
+#: them in 4 waves; 4 devices finish in one.
+CHUNK_BYTES = 256 << 10
+NUM_CHUNKS = 64
+
+#: pipeline: 16 KiB records, 16 records per shard file => a sequential
+#: 64-record batch covers 4 shard files on 4 devices, each file one
+#: 256 KiB adjacent run.
+PIPE_SEQ_LEN = 4095
+PIPE_BATCH = 64
+PIPE_RECORDS_PER_SHARD = 16
+PIPE_NUM_SHARDS = 48
+
+
+def _sharded(n: int, direct: bool) -> ShardedDevice:
+    return ShardedDevice.simulated(n, profile=BW_PROFILE, direct=direct)
+
+
+def _raw_fraction(bw_bytes_s: float, n: int) -> float:
+    return bw_bytes_s / (n * BW_PROFILE.raw_bandwidth_bytes())
+
+
+def bench_restore(shard_counts: Sequence[int] = SHARD_COUNTS,
+                  modes: Sequence[Tuple] = MODES,
+                  num_chunks: int = NUM_CHUNKS,
+                  repeats: int = 2) -> Dict[str, Dict]:
+    """Checkpoint restore bandwidth vs shard count per I/O mode."""
+    tree = {"w": np.arange((CHUNK_BYTES // 4) * num_chunks,
+                           dtype=np.float32)}
+    nbytes = tree["w"].nbytes
+    out: Dict[str, Dict] = {"config": {
+        "shard_counts": list(shard_counts), "chunk_bytes": CHUNK_BYTES,
+        "num_chunks": num_chunks, "channels_per_device": CHANNELS,
+        "modes": [m[0] for m in modes],
+    }}
+    for n in shard_counts:
+        for direct in sorted({d for _l, d, _c in modes}):
+            dev = _sharded(n, direct)
+            # write once per (topology, lane) with a placement-only
+            # manager, then shut its pools down so they don't linger into
+            # the timings
+            mgr0 = CheckpointManager(dev, "/ck", num_shards=n,
+                                     chunk_bytes=CHUNK_BYTES, keep=2)
+            mgr0.save(1, tree)
+            mgr0.fa.shutdown()
+            for label, d, coalesce in modes:
+                if d != direct:
+                    continue
+                fa = Foreactor(device=dev, backend="multi_queue",
+                               depth=2 * num_chunks, workers=4,
+                               coalesce=coalesce)
+                mgr = CheckpointManager(dev, "/ck", fa=fa, num_shards=n,
+                                        chunk_bytes=CHUNK_BYTES, keep=2)
+                # conformance inline: the fused/direct path must hand back
+                # the exact bytes the per-extent sync path wrote
+                got, _extra = mgr.restore(1, check_crc=False)
+                (leaf,) = got.values()  # single-leaf tree, keypath-named
+                assert np.array_equal(leaf, tree["w"]), \
+                    f"restore mismatch in mode {label} at {n} shards"
+                t = timeit_min(lambda: mgr.restore(1, check_crc=False),
+                               repeats=repeats, warmup=0)
+                fa.shutdown()
+                bw = nbytes / t
+                out.setdefault(label, {})[str(n)] = {
+                    "seconds": t,
+                    "bandwidth_mb_s": bw / 1e6,
+                    "raw_fraction": _raw_fraction(bw, n),
+                }
+    for label, _d, _c in modes:
+        cells = out[label]
+        lo, hi = str(min(shard_counts)), str(max(shard_counts))
+        if "1" in cells and "4" in cells:
+            out[f"scaling_4shards_{label}"] = (
+                cells["4"]["bandwidth_mb_s"] / cells["1"]["bandwidth_mb_s"])
+        out[f"coalesce_speedup_{label}_{lo}sh"] = None  # filled below
+    for direct_label, base_label in (("direct_coalesced", "direct"),
+                                     ("buffered_coalesced", "buffered")):
+        if direct_label in out and base_label in out:
+            for n in shard_counts:
+                k = f"coalesce_speedup_{direct_label}_{n}sh"
+                out[k] = (out[direct_label][str(n)]["bandwidth_mb_s"]
+                          / out[base_label][str(n)]["bandwidth_mb_s"])
+    # drop the placeholder keys never filled
+    for k in [k for k, v in out.items() if v is None]:
+        del out[k]
+    return out
+
+
+def bench_pipeline(shard_counts: Sequence[int] = SHARD_COUNTS,
+                   modes: Sequence[Tuple] = MODES,
+                   batches: int = 2) -> Dict[str, Dict]:
+    """Sequential-order TokenBatchLoader bandwidth vs shard count per mode.
+
+    ``DataConfig(sequential=True)`` streams records in storage order, so a
+    batch's extents form same-fd adjacent runs the coalescer can fuse; the
+    double-buffer keeps the next batch's super-reads in flight during this
+    batch's numpy work (same warmup discipline as bench_sharding)."""
+    cfg = DataConfig(seq_len=PIPE_SEQ_LEN, batch_size=PIPE_BATCH,
+                     sequential=True)
+    out: Dict[str, Dict] = {"config": {
+        "shard_counts": list(shard_counts), "batch_size": cfg.batch_size,
+        "record_bytes": cfg.record_bytes, "batches": batches,
+        "records_per_shard": PIPE_RECORDS_PER_SHARD,
+        "num_shard_files": PIPE_NUM_SHARDS,
+        "modes": [m[0] for m in modes],
+    }}
+    for n in shard_counts:
+        for direct in sorted({d for _l, d, _c in modes}):
+            dev = _sharded(n, direct)
+            paths = write_synthetic_dataset(
+                dev, "/data", cfg, num_shards=PIPE_NUM_SHARDS,
+                records_per_shard=PIPE_RECORDS_PER_SHARD, vocab_size=1000)
+            for label, d, coalesce in modes:
+                if d != direct:
+                    continue
+                ds = ShardedTokenDataset(dev, paths)
+                fa = Foreactor(device=dev, backend="multi_queue",
+                               depth=2 * cfg.batch_size, workers=4,
+                               coalesce=coalesce)
+                loader = TokenBatchLoader(ds, cfg, fa=fa)
+                state = {"step": 0}
+
+                def run_batches():
+                    for _ in range(batches):
+                        loader.load(0, state["step"])
+                        state["step"] += 1
+
+                t = timeit_min(run_batches, repeats=2)
+                loader.close()
+                ds.close()
+                fa.shutdown()
+                nbytes = batches * cfg.batch_size * cfg.record_bytes
+                bw = nbytes / t
+                out.setdefault(label, {})[str(n)] = {
+                    "seconds": t,
+                    "bandwidth_mb_s": bw / 1e6,
+                    "raw_fraction": _raw_fraction(bw, n),
+                }
+    for label, _d, _c in modes:
+        cells = out[label]
+        best = max(c["bandwidth_mb_s"] for c in cells.values()
+                   if isinstance(c, dict))
+        out[f"best_mb_s_{label}"] = best
+    return out
+
+
+def collect(dry_run: bool = False) -> Dict[str, Dict]:
+    if dry_run:
+        modes = (MODES[0], MODES[3])  # buffered vs direct_coalesced
+        restore = bench_restore(shard_counts=(1, 4), modes=modes,
+                                num_chunks=16, repeats=1)
+        pipeline = bench_pipeline(shard_counts=(1, 4), modes=modes,
+                                  batches=1)
+    else:
+        restore = bench_restore()
+        pipeline = bench_pipeline()
+    return {"restore": restore, "pipeline": pipeline}
+
+
+def _sharding_io_uring_baseline() -> Optional[float]:
+    """Best committed io_uring pipeline bandwidth from sharding.json."""
+    import os
+    path = os.path.join(os.path.dirname(__file__), "results",
+                        "sharding.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        committed = json.load(f)
+    cells = committed.get("pipeline", {}).get("io_uring", {})
+    vals = [c["bandwidth_mb_s"] for c in cells.values()
+            if isinstance(c, dict)]
+    return max(vals) if vals else None
+
+
+def check(fresh: Dict, committed: Optional[Dict]) -> List[str]:
+    """CI smoke gate.  The fresh (dry-run-sized) sweep proves the fused
+    direct path end to end (restores byte-identical — asserted inline —
+    and every timing positive); the committed full-scale results must
+    satisfy the acceptance invariants: coalesced+direct pipeline >= 5x the
+    committed sharding.json io_uring pipeline baseline, and
+    coalesced+direct restore at 4 shards >= 2.5x the 1-shard figure."""
+    errs: List[str] = []
+    for section in ("restore", "pipeline"):
+        for label in fresh[section]["config"]["modes"]:
+            for n, cell in fresh[section][label].items():
+                if cell["seconds"] <= 0:
+                    errs.append(f"{section} {label}/{n}: non-positive time")
+    if committed is not None:
+        scaling = committed["restore"].get("scaling_4shards_direct_coalesced")
+        if scaling is None or scaling < 2.5:
+            errs.append("committed direct_coalesced restore scaling at "
+                        f"4 shards fell below 2.5x ({scaling})")
+        baseline = _sharding_io_uring_baseline()
+        best = committed["pipeline"].get("best_mb_s_direct_coalesced")
+        if baseline is not None:
+            if best is None or best < 5.0 * baseline:
+                errs.append("committed direct_coalesced pipeline bandwidth "
+                            f"({best} MB/s) is not >= 5x the sharding.json "
+                            f"io_uring baseline ({baseline} MB/s)")
+    return errs
+
+
+def run() -> List[Row]:
+    d = collect()
+    restore, pipeline = d["restore"], d["pipeline"]
+    path = write_results("bandwidth", d)
+    rows: List[Row] = []
+    for section, data in (("restore", restore), ("pipeline", pipeline)):
+        for label, _d, _c in MODES:
+            for n in data["config"]["shard_counts"]:
+                cell = data[label][str(n)]
+                rows.append((
+                    f"bandwidth_{section}_{label}_sh{n}",
+                    cell["seconds"] * 1e6,
+                    f"bw={cell['bandwidth_mb_s']:.1f}MB/s "
+                    f"raw={cell['raw_fraction'] * 100:.0f}%",
+                ))
+    rows.append(("bandwidth_restore_scaling_4sh_direct_coalesced", 0.0,
+                 f"x{restore['scaling_4shards_direct_coalesced']:.2f}"))
+    baseline = _sharding_io_uring_baseline()
+    if baseline:
+        rows.append(("bandwidth_pipeline_vs_sharding_io_uring", 0.0,
+                     f"x{pipeline['best_mb_s_direct_coalesced'] / baseline:.1f}"))
+    rows.append(("bandwidth_results_json", 0.0, path))
+    return rows
+
+
+def main(argv: List[str]) -> int:
+    import os
+
+    dry = "--dry-run" in argv
+    fresh = collect(dry_run=dry)
+    if "--check" in argv:
+        results_path = os.path.join(os.path.dirname(__file__), "results",
+                                    "bandwidth.json")
+        committed = None
+        if os.path.exists(results_path):
+            with open(results_path) as f:
+                committed = json.load(f)
+        errs = check(fresh, committed)
+        for e in errs:
+            print(f"FAIL: {e}", file=sys.stderr)
+        print("bandwidth-smoke:", "FAIL" if errs else "ok")
+        return 1 if errs else 0
+    if not dry:
+        write_results("bandwidth", fresh)
+        print("wrote benchmarks/results/bandwidth.json")
+    summary = {
+        "restore_scaling_4shards_direct_coalesced":
+            fresh["restore"].get("scaling_4shards_direct_coalesced"),
+        "pipeline_best_mb_s_direct_coalesced":
+            fresh["pipeline"].get("best_mb_s_direct_coalesced"),
+        "sharding_io_uring_baseline_mb_s": _sharding_io_uring_baseline(),
+    }
+    print(json.dumps(summary, indent=2, sort_keys=True))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

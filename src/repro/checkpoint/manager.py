@@ -32,6 +32,8 @@ import numpy as np
 import jax
 
 from repro.core.api import Foreactor, current_session, io
+from repro.core.buffers import BufferPool
+from repro.core.coalesce import _pool_alignment
 from repro.core.device import Device, ShardedDevice
 from repro.core.graph import ForeactionGraph, FromNode, GraphBuilder
 from repro.core.patterns import register_patterns
@@ -86,20 +88,55 @@ class _LazyBlobs:
     """Per-leaf serialization on first touch, cached.
 
     The extent plan needs only ``nbytes`` (known without serializing), so
-    ``tobytes()`` runs when a write's data thunk fires at pre-issue time —
+    serialization runs when a write's data thunk fires at pre-issue time —
     the engine serializes leaf *k+1* on the application thread while the
     workers are still writing leaf *k*'s extents.
+
+    With a ``pool``, serialization lands in *leased aligned buffers* (the
+    WRITE_FIXED analogue): each leaf is copied once into a registered slab
+    and every extent thunk hands out a zero-copy ``memoryview`` slice of
+    it, so the save graph's pwrites write straight out of registered —
+    and, on a direct-mode device, O_DIRECT-valid — memory instead of a
+    fresh ``tobytes`` allocation per leaf.  The caller releases the slabs
+    via :meth:`release` once the save graph has drained; leaves the pool
+    declines (over-class or at capacity) fall back to ``tobytes``.
     """
 
-    def __init__(self, arrays: Sequence[np.ndarray]):
+    def __init__(self, arrays: Sequence[np.ndarray],
+                 pool: Optional[BufferPool] = None, alignment: int = 0):
         self.arrays = arrays
-        self._blobs: Dict[int, bytes] = {}
+        self.pool = pool
+        self.alignment = alignment
+        self._blobs: Dict[int, Any] = {}
+        self._leases: List[Any] = []
 
-    def __getitem__(self, i: int) -> bytes:
+    def __getitem__(self, i: int):
         b = self._blobs.get(i)
         if b is None:
-            b = self._blobs[i] = self.arrays[i].tobytes()
+            a = self.arrays[i]
+            lease = (self.pool.lease(a.nbytes, alignment=self.alignment)
+                     if self.pool is not None else None)
+            if lease is not None:
+                mv = lease.mv[: a.nbytes]
+                try:
+                    mv[:] = memoryview(np.ascontiguousarray(a)).cast("B")
+                except (TypeError, ValueError):
+                    mv[:] = a.tobytes()
+                lease.filled(a.nbytes)
+                self._leases.append(lease)
+                b = self._blobs[i] = mv
+            else:
+                b = self._blobs[i] = a.tobytes()
         return b
+
+    def release(self) -> None:
+        """Return the leased slabs to the pool.  Must run only after every
+        consumer is done with the views (the save session has drained) —
+        the slabs recycle immediately."""
+        leases, self._leases = self._leases, []
+        self._blobs.clear()
+        for lease in leases:
+            lease.release()
 
     def __len__(self) -> int:
         return len(self.arrays)
@@ -379,6 +416,11 @@ class CheckpointManager:
         #: a full save (restore cost and failure blast radius stay bounded)
         self.max_delta_chain = max_delta_chain
         self.fa = fa if fa is not None else Foreactor(device=device, depth=32)
+        #: registered slabs for leaf serialization (the WRITE_FIXED
+        #: analogue): save graphs write out of leased aligned buffers
+        #: instead of a fresh tobytes() per leaf; alignment follows the
+        #: device's direct-I/O block size (0 on buffered devices)
+        self.save_pool = BufferPool()
         register_patterns(self.fa)
         self.fa.register("ckpt_gc", build_gc_graph)
         self._async_thread: Optional[threading.Thread] = None
@@ -435,7 +477,8 @@ class CheckpointManager:
         leaves_kp, treedef = jax.tree_util.tree_flatten_with_path(tree)
         names = [_leaf_name(kp) for kp, _ in leaves_kp]
         arrays = [np.asarray(v) for _, v in leaves_kp]
-        blobs = _LazyBlobs(arrays)
+        blobs = _LazyBlobs(arrays, pool=self.save_pool,
+                           alignment=_pool_alignment(self.device))
         if step in self.committed_steps():
             # re-saving a committed step (e.g. an emergency save landing on
             # the step a periodic save already wrote) must not overwrite it
@@ -561,7 +604,12 @@ class CheckpointManager:
             io.fsync(self.device, cf)
             io.close(self.device, cf)
 
-        _save_all()
+        try:
+            _save_all()
+        finally:
+            # the wrapped session has drained (or rolled back): no worker
+            # still reads the leased slabs, so they recycle now
+            blobs.release()
         self._wall_floor = wall_time
         self.gc()
 
@@ -768,6 +816,15 @@ class CheckpointManager:
 
         fds = _open_all(paths)
         extents = [_Extent(*e[:5]) for e in m["extents"]]
+        # group by owning shard: the round-robin extent plan interleaves
+        # shards in manifest order, but within one shard file the extents
+        # are densely packed at ascending shard_off.  Sorting by
+        # (shard, shard_off) exposes exactly the statically-adjacent
+        # same-fd runs the I/O plane's extent coalescer fuses into
+        # super-reads, and keeps whole runs on one lane of a multi-queue
+        # backend; the overlay below follows the same order, so restored
+        # bytes are identical either way.
+        extents.sort(key=lambda e: (e.shard, e.shard_off))
         ext_args = [(fds[e.shard], e.length, e.shard_off) for e in extents]
 
         @self.fa.wrap("pread_extents", lambda extents: {"extents": extents})

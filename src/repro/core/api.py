@@ -77,6 +77,7 @@ class Foreactor:
         shared_slots: Optional[int] = None,
         staging: bool = True,
         trace_capacity: int = 64,
+        coalesce: bool = False,
     ):
         if not (isinstance(depth, int) or depth == "adaptive"):
             raise ValueError(f"depth must be an int or 'adaptive', got {depth!r}")
@@ -94,6 +95,12 @@ class Foreactor:
         #: default: one slot per worker.
         self.shared = shared
         self.shared_slots = shared_slots
+        #: extent coalescing (repro.core.coalesce): async backends fuse
+        #: adjacent same-fd PREAD runs into MB-scale super-reads at
+        #: dispatch.  Off by default — it changes the device-op profile
+        #: (fewer, larger reads), which bandwidth-oriented workloads want
+        #: and op-count-sensitive tests do not.
+        self.coalesce = coalesce
         #: undoable write speculation (repro.store.staging): sessions run
         #: tracked writes inside a staging transaction — speculative pwrites
         #: land in staging extents / carry undo bytes, creating opens get
@@ -255,7 +262,8 @@ class Foreactor:
         paying setup cost per wrapped call."""
         b = getattr(self._backend_pool, "backend", None)
         if b is None:
-            b = make_backend(self.backend_name, self.device, workers=self.workers)
+            b = make_backend(self.backend_name, self.device,
+                             workers=self.workers, coalesce=self.coalesce)
             self._backend_pool.backend = b
             with self._lock:
                 self._backends.append(b)
@@ -266,7 +274,8 @@ class Foreactor:
         with self._lock:
             if self._shared_inner is None:
                 inner = make_backend(self.backend_name, self.device,
-                                     workers=self.workers)
+                                     workers=self.workers,
+                                     coalesce=self.coalesce)
                 if isinstance(inner, SyncBackend):
                     raise ValueError(
                         "shared=True needs an async backend (got 'sync')")
@@ -647,6 +656,16 @@ class io:
     def pread_async(device: Device, fd: int, size: int,
                     offset: int) -> IOFuture:
         return io._route_async(device, Sys.PREAD, (fd, size, offset))
+
+    @staticmethod
+    def pwrite_async(device: Device, fd: int, data: bytes,
+                     offset: int) -> IOFuture:
+        """Futures-style write: inside a session running a staging
+        transaction the pwrite becomes a harvestable (speculable, undoable)
+        ledger entry and ``result()`` is the late demand point returning the
+        byte count; without staging — or with no session — it degrades to
+        the blocking write, already resolved."""
+        return io._route_async(device, Sys.PWRITE, (fd, data, offset))
 
     @staticmethod
     def open_async(device: Device, path: str, flags: str = "r") -> IOFuture:

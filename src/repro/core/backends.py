@@ -38,6 +38,7 @@ import threading
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from .buffers import BufferPool
+from .coalesce import ExtentCoalescer
 from .completion import completion_pool
 from .device import Device, ShardedDevice
 from .lanes import SubmissionLane
@@ -138,7 +139,8 @@ class IOPlane(Backend):
 
     def __init__(self, device: Device, lanes: Sequence[SubmissionLane] = (),
                  router: Optional[Callable[[IORequest], int]] = None,
-                 pool: Optional[BufferPool] = None):
+                 pool: Optional[BufferPool] = None,
+                 coalesce: bool = False):
         super().__init__(device)
         self.lanes: List[SubmissionLane] = list(lanes)
         if len(self.lanes) > 1 and router is None:
@@ -147,6 +149,12 @@ class IOPlane(Backend):
                 "on lane 0 while capacity reports every lane's workers)")
         self._router = router
         self.pool = pool
+        #: extent coalescing (repro.core.coalesce): fuse adjacent same-fd
+        #: PREAD runs into super-reads at dispatch.  Off on the zero-lane
+        #: (sync) plane regardless — the conformance oracle executes every
+        #: request exactly as written.
+        self.coalescer: Optional[ExtentCoalescer] = (
+            ExtentCoalescer(pool) if coalesce and self.lanes else None)
         self.capacity = sum(lane.workers for lane in self.lanes)
         self._sq: List[IORequest] = []
         self._submitted: List[IORequest] = []
@@ -211,6 +219,11 @@ class IOPlane(Backend):
             # its own boundary crossing
             self.device.charge_crossing()
             req.finish(perform(self.device, req))
+        if req.fused is not None:
+            # a demanded member of a fused super-read whose carrier was
+            # cancelled before executing is decomposed back to its own
+            # per-extent read (repro.core.coalesce) instead of blocking
+            req.fused.on_demand(self.device, req)
         return req.wait_result()
 
     def cancel_remaining(self) -> int:
@@ -241,18 +254,51 @@ class IOPlane(Backend):
         """Attach registered-buffer leases to PREAD entries (READ_FIXED):
         the worker will fill recycled memory instead of allocating a result
         per request.  Pool exhaustion or odd shapes (staged runners,
-        deferred size arguments) silently fall back to the classic path."""
+        deferred size arguments) silently fall back to the classic path.
+
+        On a coalescing plane, PWRITE entries with static payloads get the
+        WRITE_FIXED analogue: the payload is copied into an aligned lease at
+        dispatch (the registration copy) and the worker writes straight out
+        of registered memory — on a direct-mode device the buffer is a
+        valid O_DIRECT source."""
         pool = self.pool
         if pool is None:
             return
+        align = 0
+        if self.coalescer is not None:
+            from .coalesce import _pool_alignment
+
+            align = _pool_alignment(self.device)
         for req in batch:
             if req.sc is Sys.PREAD and req.runner is None \
                     and req.lease is None and isinstance(req.args[1], int):
-                req.lease = pool.lease(req.args[1], tenant=req.tenant)
+                req.lease = pool.lease(req.args[1], tenant=req.tenant,
+                                       alignment=align)
+            elif self.coalescer is not None and req.sc is Sys.PWRITE \
+                    and req.runner is None and req.lease is None \
+                    and isinstance(req.args[1], (bytes, bytearray, memoryview)):
+                data = req.args[1]
+                lease = pool.lease(len(data), tenant=req.tenant,
+                                   alignment=align)
+                if lease is None:
+                    continue
+                n = len(data)
+                lease.mv[:n] = data
+                lease.filled(n)
+                req.lease = lease
+                fd, _, off = req.args
+                req.runner = (lambda device, fd=fd, off=off, lease=lease,
+                              n=n: device.pwrite(fd, lease.mv[:n], off))
 
     def _dispatch(self, batch: List[IORequest]) -> None:
-        self._lease_buffers(batch)
-        chains = _chains(batch)
+        if self.coalescer is not None:
+            chains = self.coalescer.fuse(_chains(batch))
+            # satellites left the dispatch set; lease/charge only what runs
+            batch = [r for chain in chains for r in chain]
+            self._lease_buffers(batch)
+        else:
+            self._lease_buffers(batch)
+            chains = _chains(batch)
         if len(self.lanes) == 1 or self._router is None:
             lane = self.lanes[0]
             lane.charge(len(batch))
@@ -296,9 +342,10 @@ class QueuePairBackend(IOPlane):
 
     name = "io_uring"
 
-    def __init__(self, device: Device, workers: int = 16):
+    def __init__(self, device: Device, workers: int = 16,
+                 coalesce: bool = False):
         super().__init__(device, lanes=(SubmissionLane(device, workers),),
-                         pool=BufferPool())
+                         pool=BufferPool(), coalesce=coalesce)
 
 
 class ThreadPoolBackend(IOPlane):
@@ -306,11 +353,13 @@ class ThreadPoolBackend(IOPlane):
 
     name = "user_threads"
 
-    def __init__(self, device: Device, workers: int = 16):
+    def __init__(self, device: Device, workers: int = 16,
+                 coalesce: bool = False):
         super().__init__(
             device,
             lanes=(SubmissionLane(device, workers, per_request=True),),
             pool=BufferPool(),
+            coalesce=coalesce,
         )
 
 
@@ -327,7 +376,8 @@ class MultiQueueBackend(IOPlane):
 
     name = "multi_queue"
 
-    def __init__(self, device: Device, workers: int = 16):
+    def __init__(self, device: Device, workers: int = 16,
+                 coalesce: bool = False):
         if not isinstance(device, ShardedDevice):
             raise TypeError(
                 "MultiQueueBackend requires a ShardedDevice "
@@ -345,6 +395,7 @@ class MultiQueueBackend(IOPlane):
             ],
             router=self._route_head,
             pool=BufferPool(),
+            coalesce=coalesce,
         )
 
     def _route_head(self, head: IORequest) -> int:
@@ -820,6 +871,10 @@ class SharedBackend(Backend):
                 self._submitted.extend(promoted)
         else:
             self.scheduler.note_demanded(self, req)
+        if req.fused is not None:
+            # fused-satellite demand: if the carrier was evicted/cancelled
+            # before scattering, serve this member's own extent inline
+            req.fused.on_demand(self.device, req)
         try:
             return req.wait_result()
         except RuntimeError:
@@ -877,16 +932,18 @@ BACKENDS = {
 }
 
 
-def make_backend(name: str, device: Device, workers: int = 16) -> Backend:
+def make_backend(name: str, device: Device, workers: int = 16,
+                 coalesce: bool = False) -> Backend:
     """Instantiate a backend by name.
 
     ``name="auto"`` picks the best match for the device topology: per-device
     queue pairs for a :class:`ShardedDevice`, a single io_uring-style queue
-    pair otherwise.
+    pair otherwise.  ``coalesce=True`` enables the plane's extent coalescer
+    (ignored by the sync backend — the oracle never rewrites requests).
     """
     if name == "auto":
         name = "multi_queue" if isinstance(device, ShardedDevice) else "io_uring"
     cls = BACKENDS[name]
     if cls is SyncBackend:
         return cls(device)
-    return cls(device, workers=workers)
+    return cls(device, workers=workers, coalesce=coalesce)

@@ -40,13 +40,21 @@ docs/GLOSSARY.md.
 
 from __future__ import annotations
 
+import mmap
 import threading
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 #: size classes: powers of two from 512 B to 4 MiB.  Requests above the top
 #: class run unleased (huge reads are rare and amortize their allocation).
 _MIN_CLASS = 9  # 2**9 = 512
 _MAX_CLASS = 22  # 2**22 = 4 MiB
+
+#: alignment classes accepted by :meth:`BufferPool.lease`.  0 means "any
+#: address" (plain ``bytearray`` slab); 512 and 4096 are the two logical
+#: block sizes O_DIRECT cares about.  Aligned slabs are anonymous ``mmap``
+#: regions, which the kernel hands back page-aligned — one slab kind
+#: satisfies both nonzero classes.
+ALIGNMENT_CLASSES = (0, 512, 4096)
 
 
 def size_class(size: int) -> Optional[int]:
@@ -70,16 +78,20 @@ class BufferLease:
     ``IORequest.take_result`` materializes bytes and releases at first
     demand, happens mid-session rather than at teardown."""
 
-    __slots__ = ("pool", "cls", "buf", "mv", "nbytes", "tenant", "_refs")
+    __slots__ = ("pool", "cls", "buf", "mv", "nbytes", "tenant", "aligned",
+                 "_refs")
 
-    def __init__(self, pool: "BufferPool", cls: int, buf: bytearray,
-                 tenant: Optional[str] = None):
+    def __init__(self, pool: "BufferPool", cls: int, buf,
+                 tenant: Optional[str] = None, aligned: bool = False):
         self.pool = pool
         self.cls = cls
         self.buf = buf
         self.mv = memoryview(buf)
         self.nbytes = 0
         self.tenant = tenant
+        #: True when ``buf`` is a page-aligned mmap slab (valid O_DIRECT
+        #: target); recycles into the aligned free list
+        self.aligned = aligned
         self._refs = 1
 
     def filled(self, n: int) -> None:
@@ -111,6 +123,63 @@ class BufferLease:
             if self._refs > 0:
                 return
             self.pool._give_back_locked(self)
+
+    def view(self, start: int, nbytes: int) -> "LeaseView":
+        """A zero-copy window into this buffer — the *scatter view* a fused
+        super-read hands each covered extent.  Takes one ref on this lease;
+        the slab recycles only after every view (and the carrier) releases."""
+        if start < 0 or start + nbytes > len(self.mv):
+            raise ValueError(f"view [{start}, {start + nbytes}) outside "
+                             f"lease of {len(self.mv)} bytes")
+        self.addref()
+        return LeaseView(self, start, nbytes)
+
+    def __len__(self) -> int:
+        return self.nbytes
+
+
+class LeaseView:
+    """Zero-copy sub-range of a :class:`BufferLease` (one scattered extent
+    of a fused super-read).  Quacks like a lease for the consumer paths that
+    matter — ``to_bytes`` / ``release`` / ``mv`` — so ``IORequest.take_result``
+    and session teardown need no special casing.  Releasing a view drops the
+    ref it holds on the parent lease; the parent's slab goes back to the
+    pool when the last view/carrier releases."""
+
+    __slots__ = ("parent", "start", "nbytes", "_refs")
+
+    def __init__(self, parent: BufferLease, start: int, nbytes: int):
+        self.parent = parent
+        self.start = start
+        self.nbytes = nbytes
+        self._refs = 1
+
+    @property
+    def mv(self) -> memoryview:
+        return self.parent.mv[self.start: self.start + self.nbytes]
+
+    def filled(self, n: int) -> None:
+        self.nbytes = n
+
+    def to_bytes(self) -> bytes:
+        return bytes(self.parent.mv[self.start: self.start + self.nbytes])
+
+    def addref(self) -> "LeaseView":
+        with self.parent.pool._lock:
+            if self._refs <= 0:
+                raise RuntimeError("addref on a released lease view")
+            self._refs += 1
+        self.parent.addref()
+        return self
+
+    def release(self) -> None:
+        # extra releases are ignored, like BufferLease.release: teardown
+        # and first-demand materialization may both try
+        with self.parent.pool._lock:
+            if self._refs <= 0:
+                return
+            self._refs -= 1
+        self.parent.release()
 
     def __len__(self) -> int:
         return self.nbytes
@@ -144,7 +213,9 @@ class BufferPool:
         self.tenant_budget_bytes = (capacity_bytes // 8
                                     if tenant_budget_bytes is None
                                     else tenant_budget_bytes)
-        self._free: Dict[int, List[bytearray]] = {}
+        #: free lists keyed (size class, aligned?) — aligned slabs are mmap
+        #: regions and must never satisfy (or be polluted by) plain leases
+        self._free: Dict[Tuple[int, bool], List] = {}
         self._lock = threading.Lock()
         #: total bytes currently registered (idle + leased)
         self.registered_bytes = 0
@@ -157,13 +228,26 @@ class BufferPool:
         self.declined = 0
         self.budget_declines = 0
         self.released = 0
+        #: leases handed out from page-aligned mmap slabs (O_DIRECT-ready)
+        self.aligned_leases = 0
         #: occupancy gauges — the mid-session recycling regression surface:
         #: a session of R harvested reads must peak at O(depth), not O(R)
         self.leased_now = 0
         self.peak_leased = 0
 
-    def lease(self, size: int,
-              tenant: Optional[str] = None) -> Optional[BufferLease]:
+    def lease(self, size: int, tenant: Optional[str] = None,
+              alignment: int = 0) -> Optional[BufferLease]:
+        """Lease a registered buffer of at least ``size`` bytes.
+
+        ``alignment`` (0, 512 or 4096) asks for a buffer whose base address
+        is a valid O_DIRECT target; aligned slabs come from anonymous
+        ``mmap`` (page-aligned, so one slab kind serves both classes) and
+        the tenant budget charges the same ``1 << cls`` as a plain lease.
+        """
+        if alignment not in ALIGNMENT_CLASSES:
+            raise ValueError(f"alignment must be one of {ALIGNMENT_CLASSES},"
+                             f" got {alignment}")
+        aligned = alignment > 0
         cls = size_class(size)
         if cls is None:
             with self._lock:
@@ -179,7 +263,7 @@ class BufferPool:
                     self.declined += 1
                     self.budget_declines += 1
                     return None
-            free = self._free.get(cls)
+            free = self._free.get((cls, aligned))
             if free:
                 buf = free.pop()
                 self.recycle_hits += 1
@@ -187,16 +271,18 @@ class BufferPool:
                 if self.registered_bytes + nbytes > self.capacity_bytes:
                     self.declined += 1
                     return None
-                buf = bytearray(nbytes)
+                buf = mmap.mmap(-1, nbytes) if aligned else bytearray(nbytes)
                 self.registered_bytes += nbytes
                 self.grows += 1
             if tenant is not None:
                 self._charged[tenant] = self._charged.get(tenant, 0) + nbytes
             self.leases += 1
+            if aligned:
+                self.aligned_leases += 1
             self.leased_now += 1
             if self.leased_now > self.peak_leased:
                 self.peak_leased = self.leased_now
-        return BufferLease(self, cls, buf, tenant)
+        return BufferLease(self, cls, buf, tenant, aligned=aligned)
 
     def _give_back_locked(self, lease: BufferLease) -> None:
         """Recycle a fully-released lease; caller holds ``self._lock``."""
@@ -208,7 +294,7 @@ class BufferPool:
                 self._charged[lease.tenant] = left
             else:  # fully refunded: drop the entry (bounded tenant map)
                 self._charged.pop(lease.tenant, None)
-        self._free.setdefault(lease.cls, []).append(lease.buf)
+        self._free.setdefault((lease.cls, lease.aligned), []).append(lease.buf)
 
     def charged_bytes(self, tenant: str) -> int:
         """Bytes currently charged to ``tenant`` (0 once fully refunded)."""
@@ -231,6 +317,7 @@ class BufferPool:
                 "declined": self.declined,
                 "budget_declines": self.budget_declines,
                 "released": self.released,
+                "aligned_leases": self.aligned_leases,
                 "leased_now": self.leased_now,
                 "peak_leased": self.peak_leased,
                 "tenants_charged": len(self._charged),

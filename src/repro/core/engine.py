@@ -722,13 +722,20 @@ class SpecSession:
         between issue and ``result()`` overlaps with the I/O, with zero new
         threads.
 
-        Only PURE calls defer; a non-pure call (close, fsync, staged write)
-        is an ordering point the frontier must serve in place, so it takes
-        the blocking path and returns an already-resolved future.
+        PURE calls always defer.  A PWRITE defers too when the session runs
+        a staging transaction — the write is undoable there (staged extent
+        or undo bytes), so its completion can be demanded late exactly like
+        a read's; ``result()`` returns the byte count.  Everything else
+        (close, fsync, unstaged writes) is an ordering point the frontier
+        must serve in place, so it takes the blocking path and returns an
+        already-resolved future.
         """
         if self._finished:
             return IOFuture.resolved(self._exec_untracked(sc, args))
-        if effect_of(sc, args) is not Effect.PURE:
+        eff = effect_of(sc, args)
+        if eff is not Effect.PURE and not (
+                eff is Effect.UNDOABLE and sc is Sys.PWRITE
+                and self._staging_enabled):
             return IOFuture.resolved(self.intercept(sc, args))
         self.stats.intercepted += 1
         p = self.plan
@@ -786,8 +793,13 @@ class SpecSession:
             if not st.issued:
                 # beyond the peek window (depth exhausted or stub not ready
                 # at peek time): demand-issue now — the request still rides
-                # the async ledger, and the future defers the wait
-                req = IORequest(sc=sc, args=args, tag=(fnid, fep))
+                # the async ledger, and the future defers the wait.  Built
+                # via _make_request so an undoable write picks up its staged
+                # runner (a bare IORequest would land the bytes in the
+                # committed namespace before the txn publishes).
+                req = self._make_request(fnid, args, False, fep, False)
+                if req is None:  # effect gate refused: serve in place
+                    return IOFuture.resolved(self.intercept(sc, args))
                 st.issued = True
                 st.req = req
                 self.stats.pre_issued += 1

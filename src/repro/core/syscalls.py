@@ -326,6 +326,11 @@ class IORequest:
     #: owning tenant name on a shared backend (stamped by the view alongside
     #: the priority class); the buffer pool charges leases against it
     tenant: Optional[str] = None
+    #: the FusedRead this request belongs to, when the plane's extent
+    #: coalescer fused it into a super-read (repro.core.coalesce).  Backends
+    #: consult it on demand-wait: a satellite whose carrier was cancelled or
+    #: failed is decomposed back to its own per-extent read.
+    fused: Any = field(default=None, repr=False)
     #: completion hook — fired exactly once, on whichever of finish/cancel
     #: terminates the request first (the slot scheduler hangs its O(1) slot
     #: accounting here).  Fired outside the stripe lock; must not block.

@@ -28,6 +28,13 @@ class DataConfig:
     batch_size: int  # per-process batch (global batch / data-parallel hosts)
     seed: int = 0
     dtype: str = "<i4"  # token storage dtype
+    #: streaming order: epochs iterate records in storage order (identity
+    #: permutation) instead of shuffling.  Consecutive records of a shard
+    #: are byte-adjacent in its file, so a batch's pread extents form the
+    #: same-fd adjacent runs the I/O plane's extent coalescer fuses into
+    #: MB-scale super-reads — the bandwidth-oriented ingestion mode
+    #: (evaluation sweeps, dataset conversion, cache warmup).
+    sequential: bool = False
 
     @property
     def record_tokens(self) -> int:
@@ -122,8 +129,11 @@ class TokenBatchLoader:
     def perm(self, epoch: int) -> np.ndarray:
         p = self._perm_cache.get(epoch)
         if p is None:
-            rng = np.random.default_rng((self.cfg.seed, epoch))
-            p = rng.permutation(self.ds.total)
+            if self.cfg.sequential:
+                p = np.arange(self.ds.total)
+            else:
+                rng = np.random.default_rng((self.cfg.seed, epoch))
+                p = rng.permutation(self.ds.total)
             self._perm_cache = {epoch: p}  # keep only the active epoch
         return p
 

@@ -1,0 +1,396 @@
+"""Extent-coalescing tests: the fuse pass, the carrier/satellite
+lifecycle, scatter views, and the decomposition fallbacks.
+
+Covers the invariants docs/ARCHITECTURE.md ("Direct I/O & extent
+coalescing") promises:
+
+* only statically-adjacent same-fd single-request PREAD runs fuse; gaps,
+  overlaps, fd changes, link chains and non-static args break a run;
+* a full super-read scatters zero-copy views and every member terminates
+  exactly once; the shared slab recycles only after every view releases;
+* a short read (EOF inside the fused range) or a device error decomposes
+  to per-extent reads that are byte-identical to sync execution — EIO
+  lands on exactly the extent that owns it, and the session ledger
+  invariant still holds;
+* a demanded satellite whose carrier died is decomposed on the spot.
+"""
+
+import errno
+
+import pytest
+
+from repro.core import Foreactor, MemDevice, Sys, io
+from repro.core.buffers import BufferPool
+from repro.core.coalesce import (ExtentCoalescer, MAX_FUSED_BYTES,
+                                 _pool_alignment)
+from repro.core.patterns import register_patterns
+from repro.core.syscalls import IORequest, ReqState
+
+from test_conformance import assert_ledger_invariant
+
+
+def _req(fd=7, size=8, off=0, **kw):
+    return IORequest(sc=Sys.PREAD, args=(fd, size, off), **kw)
+
+
+def _chains(reqs):
+    return [[r] for r in reqs]
+
+
+# -- fuse pass ----------------------------------------------------------------
+
+def test_fuse_adjacent_run_collapses_to_carrier():
+    c = ExtentCoalescer(pool=None)
+    reqs = [_req(off=i * 8) for i in range(6)]
+    out = c.fuse(_chains(reqs))
+    assert out == [[reqs[0]]]
+    assert all(r.fused is reqs[0].fused for r in reqs)
+    assert reqs[0].runner is not None  # carrier carries the super-read
+    assert all(r.runner is None for r in reqs[1:])
+    s = c.stats.snapshot()
+    assert s["super_reads"] == 1 and s["extents_fused"] == 6
+    assert s["bytes_fused"] == 48
+
+
+def test_fuse_breaks_on_gap_overlap_and_fd_change():
+    c = ExtentCoalescer(pool=None)
+    gap = [_req(off=0), _req(off=8), _req(off=24)]  # 8..16 missing
+    out = c.fuse(_chains(gap))
+    assert [r.args for chain in out for r in chain] == \
+        [gap[0].args, gap[2].args]  # first two fused, third standalone
+    assert gap[2].fused is None
+
+    c = ExtentCoalescer(pool=None)
+    overlap = [_req(off=0), _req(off=8), _req(off=12)]  # re-reads 12..16
+    out = c.fuse(_chains(overlap))
+    assert overlap[2].fused is None
+
+    c = ExtentCoalescer(pool=None)
+    fds = [_req(fd=7, off=0), _req(fd=7, off=8),
+           _req(fd=9, off=16), _req(fd=9, off=24)]
+    out = c.fuse(_chains(fds))
+    # two separate runs, one per fd — never fused across the fd change
+    assert len(out) == 2
+    assert fds[0].fused is not fds[2].fused
+    assert c.stats.snapshot()["super_reads"] == 2
+
+
+def test_fuse_epoch_stride_makes_one_run_per_epoch():
+    """The miner's loop shapes re-start each epoch at a strided base
+    offset; the fuse pass must emit one super-read per epoch, never fusing
+    across the stride discontinuity."""
+    c = ExtentCoalescer(pool=None)
+    epoch0 = [_req(off=i * 8) for i in range(4)]          # 0..32
+    epoch1 = [_req(off=4096 + i * 8) for i in range(4)]   # 4096..4128
+    out = c.fuse(_chains(epoch0 + epoch1))
+    assert len(out) == 2
+    assert epoch0[0].fused is not epoch1[0].fused
+    assert epoch0[3].fused is epoch0[0].fused
+    assert epoch1[0].fused.offset == 4096
+
+
+def test_fuse_refuses_short_runs_links_and_non_static_args():
+    c = ExtentCoalescer(pool=None)
+    single = _req()
+    out = c.fuse(_chains([single]))
+    assert out == [[single]] and single.fused is None  # < MIN_RUN
+
+    linked = [_req(off=0, link=True), _req(off=8)]
+    out = c.fuse(_chains(linked))
+    assert all(r.fused is None for r in linked)
+
+    chain = [_req(off=0), _req(off=8)]
+    out = c.fuse([chain])  # one 2-request link chain, not two singletons
+    assert out == [chain] and chain[0].fused is None
+
+    from repro.core.syscalls import FromRequest
+    dyn = [_req(off=0),
+           IORequest(sc=Sys.PREAD, args=(7, 8, FromRequest(_req())))]
+    c.fuse(_chains(dyn))
+    assert all(r.fused is None for r in dyn)
+
+
+def test_fuse_splits_at_max_bytes():
+    c = ExtentCoalescer(pool=None, max_bytes=32)
+    reqs = [_req(off=i * 8) for i in range(6)]  # 48 bytes total
+    out = c.fuse(_chains(reqs))
+    assert len(out) == 2  # 32-byte super-read + 16-byte super-read
+    assert reqs[0].fused.total == 32 and reqs[4].fused.total == 16
+    assert MAX_FUSED_BYTES == 1 << 22  # pinned: the pool's top size class
+
+
+def test_pool_alignment_classes():
+    class D:
+        alignment = 0
+    d = D()
+    assert _pool_alignment(d) == 0
+    d.alignment = 512
+    assert _pool_alignment(d) == 512
+    d.alignment = 4096
+    assert _pool_alignment(d) == 4096
+    d.alignment = 520  # odd block size still needs the larger class
+    assert _pool_alignment(d) == 4096
+
+
+# -- carrier execution: scatter and decomposition -----------------------------
+
+def _mem(payload=bytes(range(256)), path="/f"):
+    dev = MemDevice()
+    fd = dev.open(path, "w")
+    dev.pwrite(fd, payload, 0)
+    dev.close(fd)
+    return dev, dev.open(path, "r")
+
+
+def test_scatter_views_are_zero_copy_and_slab_recycles_once_released():
+    dev, fd = _mem()
+    pool = BufferPool()
+    c = ExtentCoalescer(pool)
+    reqs = [_req(fd=fd, size=16, off=i * 16) for i in range(4)]
+    c.fuse(_chains(reqs))
+    reqs[0].claim()  # a worker claims the carrier; satellites stay PREPARED
+    result = reqs[0].runner(dev)
+    reqs[0].finish(result)
+
+    for i, r in enumerate(reqs):
+        assert r.take_result() == bytes(range(i * 16, (i + 1) * 16))
+    # every member materialized its bytes and dropped its ref: the parent
+    # slab must be back on the freelist, in its aligned class
+    snap = pool.snapshot()
+    assert snap["leased_now"] == 0
+    assert snap["aligned_leases"] == 0  # MemDevice: buffered class
+    assert c.stats.snapshot()["scatters"] == 1
+
+
+def test_short_read_at_eof_decomposes_per_extent():
+    dev, fd = _mem(payload=bytes(range(40)))  # EOF at 40
+    c = ExtentCoalescer(BufferPool())
+    reqs = [_req(fd=fd, size=16, off=i * 16) for i in range(4)]  # to 64
+    c.fuse(_chains(reqs))
+    reqs[0].claim()
+    reqs[0].finish(reqs[0].runner(dev))
+    assert reqs[0].take_result() == bytes(range(16))
+    assert reqs[1].take_result() == bytes(range(16, 32))
+    assert reqs[2].take_result() == bytes(range(32, 40))  # short, as sync
+    assert reqs[3].take_result() == b""  # past EOF, as sync
+    s = c.stats.snapshot()
+    assert s["decompositions"] == 1 and s["scatters"] == 0
+
+
+class SectorFaultDevice(MemDevice):
+    """EIO on any read that *touches* the bad byte range — a bad block:
+    the fused read spanning it fails, and so does exactly one extent."""
+
+    def __init__(self, bad_lo, bad_hi):
+        super().__init__()
+        self.bad = (bad_lo, bad_hi)
+
+    def _check(self, offset, size):
+        lo, hi = self.bad
+        if offset < hi and offset + size > lo:
+            raise OSError(errno.EIO, f"bad sector {lo}..{hi}")
+
+    def pread(self, fd, size, offset):
+        self._check(offset, size)
+        return super().pread(fd, size, offset)
+
+    def pread_into(self, fd, buf, offset):
+        self._check(offset, len(buf))
+        return super().pread_into(fd, buf, offset)
+
+
+def test_eio_mid_fused_read_lands_on_exactly_the_owning_extent():
+    dev = SectorFaultDevice(36, 40)
+    fd = dev.open("/f", "w")
+    dev.pwrite(fd, bytes(range(64)), 0)
+    c = ExtentCoalescer(BufferPool())
+    reqs = [_req(fd=fd, size=16, off=i * 16) for i in range(4)]
+    c.fuse(_chains(reqs))
+    reqs[0].claim()
+    reqs[0].finish(reqs[0].runner(dev))  # fused read spans 36..40 -> EIO
+    assert reqs[0].take_result() == bytes(range(16))
+    assert reqs[1].take_result() == bytes(range(16, 32))
+    with pytest.raises(OSError) as exc:
+        reqs[2].wait_result()  # extent 32..48 owns the bad sector
+    assert exc.value.errno == errno.EIO
+    assert reqs[3].take_result() == bytes(range(48, 64))
+    # each member reached COMPLETED exactly once (no double-finish)
+    assert all(r.state is ReqState.COMPLETED for r in reqs)
+    assert c.stats.snapshot()["decompositions"] == 1
+
+
+def test_carrier_eio_cancels_nothing_twice_and_satellites_still_serve():
+    """Bad sector inside the *carrier's* extent: the fused read fails, the
+    decomposed carrier re-read fails too (its own error), but every
+    satellite still gets its own bytes."""
+    dev = SectorFaultDevice(4, 8)
+    fd = dev.open("/f", "w")
+    dev.pwrite(fd, bytes(range(48)), 0)
+    c = ExtentCoalescer(BufferPool())
+    reqs = [_req(fd=fd, size=16, off=i * 16) for i in range(3)]
+    c.fuse(_chains(reqs))
+    reqs[0].claim()
+    with pytest.raises(OSError):
+        reqs[0].runner(dev)  # worker would finish the carrier with this
+    reqs[0].finish(error=OSError(errno.EIO, "EIO"))
+    assert reqs[1].take_result() == bytes(range(16, 32))
+    assert reqs[2].take_result() == bytes(range(32, 48))
+
+
+def test_cancelled_satellite_is_skipped_by_scatter():
+    dev, fd = _mem()
+    c = ExtentCoalescer(BufferPool())
+    reqs = [_req(fd=fd, size=16, off=i * 16) for i in range(3)]
+    c.fuse(_chains(reqs))
+    reqs[0].claim()
+    assert reqs[1].cancel()  # early exit cancelled it before execution
+    reqs[0].finish(reqs[0].runner(dev))
+    assert reqs[1].state is ReqState.CANCELLED  # scatter must not revive it
+    assert reqs[0].take_result() == bytes(range(16))
+    assert reqs[2].take_result() == bytes(range(32, 48))
+
+
+def test_demanded_satellite_decomposes_after_carrier_cancel():
+    dev, fd = _mem()
+    c = ExtentCoalescer(BufferPool())
+    reqs = [_req(fd=fd, size=16, off=i * 16) for i in range(3)]
+    c.fuse(_chains(reqs))
+    assert reqs[0].cancel()  # carrier evicted before any worker ran it
+    # the satellite was never dispatched, so the demand path's on_demand
+    # hook claims it itself and serves the extent inline
+    reqs[1].fused.on_demand(dev, reqs[1])
+    assert reqs[1].take_result() == bytes(range(16, 32))
+    assert c.stats.snapshot()["demand_decompositions"] == 1
+    # an already-cancelled satellite is left alone
+    assert reqs[2].cancel()
+    reqs[2].fused.on_demand(dev, reqs[2])
+    assert reqs[2].state is ReqState.CANCELLED
+
+
+def test_unleased_fallback_scatters_bytes():
+    dev, fd = _mem()
+    c = ExtentCoalescer(pool=None)  # no pool: plain-bytes super-read
+    reqs = [_req(fd=fd, size=16, off=i * 16) for i in range(3)]
+    c.fuse(_chains(reqs))
+    reqs[0].claim()
+    reqs[0].finish(reqs[0].runner(dev))
+    assert [r.take_result() for r in reqs] == \
+        [bytes(range(i * 16, (i + 1) * 16)) for i in range(3)]
+    assert c.stats.snapshot()["unleased_fallbacks"] == 1
+
+
+# -- LeaseView refcounts ------------------------------------------------------
+
+def test_lease_view_refcounts_pin_parent_slab():
+    pool = BufferPool()
+    lease = pool.lease(64, alignment=512)
+    v1 = lease.view(0, 16)
+    v2 = lease.view(16, 16)
+    lease.release()  # parent's own ref gone; views still pin the slab
+    assert pool.snapshot()["leased_now"] == 1
+    assert v1.to_bytes() == bytes(16)
+    v1.release()
+    v1.release()  # idempotent: must not double-release the parent
+    assert pool.snapshot()["leased_now"] == 1
+    v2.addref()
+    v2.release()
+    assert pool.snapshot()["leased_now"] == 1
+    v2.release()  # last ref: slab recycles into the (cls, aligned) bucket
+    assert pool.snapshot()["leased_now"] == 0
+    again = pool.lease(64, alignment=512)
+    assert pool.snapshot()["recycle_hits"] >= 1
+    again.release()
+
+
+def test_lease_view_bounds_checked():
+    pool = BufferPool()
+    lease = pool.lease(64)
+    slab = len(lease.mv)  # bounds are slab-relative (the size class)
+    with pytest.raises(ValueError):
+        lease.view(slab - 8, 16)
+    with pytest.raises(ValueError):
+        lease.view(-1, 4)
+    lease.release()
+
+
+# -- end-to-end through the engine -------------------------------------------
+
+def _run_extent_program(dev, extents, coalesce, backend="io_uring",
+                        depth=64):
+    fa = Foreactor(device=dev, backend=backend, depth=depth, workers=4,
+                   coalesce=coalesce)
+    register_patterns(fa)
+
+    @fa.wrap("pread_extents", lambda extents: {"extents": extents})
+    def prog(extents):
+        out = []
+        for fd, size, off in extents:
+            try:
+                out.append(io.pread(dev, fd, size, off))
+            except OSError as e:
+                out.append(("EIO", e.errno))
+        return out
+
+    try:
+        return prog(extents), fa.total_stats
+    finally:
+        fa.shutdown()
+
+
+def _extent_dev(payload):
+    dev = MemDevice()
+    fd = dev.open("/e", "w")
+    dev.pwrite(fd, payload, 0)
+    dev.close(fd)
+    return dev
+
+
+@pytest.mark.parametrize("case", ["adjacent", "eof_short", "strided"])
+def test_engine_coalesced_matches_sync_oracle(case):
+    payload = bytes((i * 11) % 251 for i in range(512))
+    if case == "adjacent":
+        mk = lambda fd: [(fd, 32, i * 32) for i in range(16)]
+    elif case == "eof_short":
+        # run extends past EOF: fused read comes up short, decomposes
+        mk = lambda fd: [(fd, 64, i * 64) for i in range(10)]  # to 640
+    else:
+        mk = lambda fd: [(fd, 16, e * 256 + i * 16)
+                         for e in range(2) for i in range(8)]
+
+    dev = _extent_dev(payload)
+    fd = dev.open("/e", "r")
+    ref, ref_stats = _run_extent_program(dev, mk(fd), False, backend="sync",
+                                         depth=0)
+    dev.close(fd)
+
+    dev = _extent_dev(payload)
+    dev.alignment = 512  # direct lane: leases must come aligned
+    fd = dev.open("/e", "r")
+    got, stats = _run_extent_program(dev, mk(fd), True)
+    dev.close(fd)
+    assert got == ref
+    assert_ledger_invariant(stats)
+    assert_ledger_invariant(ref_stats)
+
+
+def test_engine_coalesced_eio_matches_sync_oracle():
+    payload = bytes(range(256))
+
+    def build():
+        dev = SectorFaultDevice(100, 104)
+        fd = dev.open("/e", "w")
+        dev.pwrite(fd, payload, 0)
+        dev.close(fd)
+        return dev, dev.open("/e", "r")
+
+    dev, fd = build()
+    extents = [(fd, 32, i * 32) for i in range(8)]
+    ref, _ = _run_extent_program(dev, extents, False, backend="sync",
+                                 depth=0)
+    dev, fd = build()
+    dev.alignment = 512
+    extents = [(fd, 32, i * 32) for i in range(8)]
+    got, stats = _run_extent_program(dev, extents, True)
+    assert got == ref
+    assert got[3] == ("EIO", errno.EIO)  # extent 96..128 owns the bad block
+    assert_ledger_invariant(stats)

@@ -487,3 +487,63 @@ def test_random_programs_match_sync(seed):
                                     kwargs, "adaptive")
         assert result == ref
         assert_ledger_invariant(stats)
+
+
+# -- direct + coalesced lanes -------------------------------------------------
+# The same read programs, but the device advertises a 512-byte direct-lane
+# alignment and the plane's extent coalescer is on: adjacent same-fd pread
+# runs fuse into super-reads backed by aligned leases, scattered back as
+# zero-copy views.  Results must stay byte-identical to sync (which never
+# coalesces — the oracle), including EOF-short fused reads, and the ledger
+# invariant must account every satellite exactly once.
+
+def make_direct_device(kind: str):
+    dev = make_device(kind)
+    for d in (dev.devices if kind == "sharded" else [dev]):
+        d.alignment = 512  # direct lane: leases must come aligned
+    return dev
+
+
+def adjacent_program(files, reads_per_file, size):
+    """Per-file adjacent pread runs — the coalescer's target shape."""
+    return [("pread", f, size, i * size)
+            for f in range(files) for i in range(reads_per_file)]
+
+
+#: (steps, exit_at): full adjacent runs, a mid-run early exit (cancelled
+#: satellites), and a run past EOF (fused short read must decompose)
+COALESCE_PROGRAMS = [
+    (adjacent_program(3, 8, 12), 24),   # 3 files x 96 bytes, exact EOF
+    (adjacent_program(3, 8, 12), 9),    # exit mid-run on file 2
+    (adjacent_program(1, 8, 16), 8),    # reads run past EOF at 96
+]
+
+
+@pytest.mark.parametrize("depth", DEPTHS + [32])
+@pytest.mark.parametrize("cfg", CONFIGS, ids=[c[0] for c in CONFIGS])
+@pytest.mark.parametrize("prog_idx", range(len(COALESCE_PROGRAMS)))
+def test_coalesced_read_conformance(cfg, depth, prog_idx):
+    _name, kind, kwargs = cfg
+    steps, exit_at = COALESCE_PROGRAMS[prog_idx]
+    reference, ref_stats = run_program(make_device(kind), steps, exit_at,
+                                       dict(backend="sync"), 0)
+    result, stats = run_program(make_direct_device(kind), steps, exit_at,
+                                dict(coalesce=True, **kwargs), depth)
+    assert result == reference
+    assert_ledger_invariant(stats)
+    assert_ledger_invariant(ref_stats)
+
+
+@pytest.mark.parametrize("depth", [1, 8, "adaptive"])
+@pytest.mark.parametrize("cfg", CONFIGS, ids=[c[0] for c in CONFIGS])
+def test_coalesced_write_program_conformance(cfg, depth):
+    """With the coalescer on, guaranteed writes serialize their payloads
+    into leased aligned buffers (the WRITE_FIXED analogue) — the committed
+    bytes must still be identical to sync."""
+    _name, kind, kwargs = cfg
+    reference, _ = run_write_program(make_device(kind),
+                                     dict(backend="sync"), 0)
+    content, stats = run_write_program(make_direct_device(kind),
+                                       dict(coalesce=True, **kwargs), depth)
+    assert content == reference
+    assert_ledger_invariant(stats)
